@@ -1,0 +1,39 @@
+"""Paper Fig. 2: single-node scaling (1/2/4 GPUs) of the four
+framework policies on AlexNet / GoogleNet / ResNet-50, for both the
+K80+PCIe and V100+NVLink servers — predicted by the DAG simulator.
+
+Derived column: samples/s and weak-scaling speedup vs 1 GPU.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, time_call
+from repro.core.hardware import K80_CLUSTER, V100_CLUSTER
+from repro.core.policies import FRAMEWORK_POLICIES
+from repro.core.predictor import predict_cnn
+
+WORKLOADS = ("alexnet", "googlenet", "resnet50")
+GPUS = (1, 2, 4)
+
+
+def run() -> dict:
+    out = {}
+    for cluster in (K80_CLUSTER, V100_CLUSTER):
+        # single node: restrict to intra-node communication
+        node = cluster.with_workers(n_nodes=1)
+        for wl in WORKLOADS:
+            for fw, pol in FRAMEWORK_POLICIES.items():
+                sps = {}
+                for n in GPUS:
+                    us = time_call(lambda: sps.__setitem__(
+                        n, predict_cnn(wl, node, n, pol)), repeats=1)
+                    p = sps[n]
+                    row(f"fig2/{cluster.name}/{wl}/{fw}/x{n}",
+                        us, f"samples_s={p.samples_per_sec:.1f};"
+                            f"speedup={p.speedup:.2f}")
+                out[(cluster.name, wl, fw)] = {
+                    n: sps[n].samples_per_sec for n in GPUS}
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 3: multi-machine scaling (4/8/16 GPUs over 1/2/4 nodes,
+4 GPUs each) on the 10GbE K80 cluster and the 100Gb-IB V100 cluster.
+
+Reproduces the paper's headline finding: near-linear scaling on the
+slow cluster, communication-bound collapse on the fast one.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, time_call
+from repro.core.hardware import K80_CLUSTER, V100_CLUSTER
+from repro.core.policies import BUCKETED_25MB, FRAMEWORK_POLICIES
+from repro.core.predictor import predict_cnn
+
+WORKLOADS = ("alexnet", "googlenet", "resnet50")
+NODES = (1, 2, 4)
+
+
+def run() -> dict:
+    out = {}
+    policies = dict(FRAMEWORK_POLICIES)
+    policies["bucketed-25mb(beyond-paper)"] = BUCKETED_25MB
+    for cluster in (K80_CLUSTER, V100_CLUSTER):
+        for wl in WORKLOADS:
+            for fw, pol in policies.items():
+                base = None
+                for nodes in NODES:
+                    n_gpus = nodes * 4
+                    c = cluster.with_workers(n_nodes=nodes)
+                    res = {}
+                    us = time_call(lambda: res.__setitem__(
+                        "p", predict_cnn(wl, c, n_gpus, pol)), repeats=1)
+                    p = res["p"]
+                    if base is None:
+                        base = p.samples_per_sec
+                    row(f"fig3/{cluster.name}/{wl}/{fw}/x{n_gpus}",
+                        us,
+                        f"samples_s={p.samples_per_sec:.1f};"
+                        f"speedup_vs_4gpu={p.samples_per_sec / base:.2f};"
+                        f"comm_util={p.comm_utilization:.2f}")
+                    out[(cluster.name, wl, fw, n_gpus)] = p
+    return out
+
+
+if __name__ == "__main__":
+    run()

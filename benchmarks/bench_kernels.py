@@ -1,0 +1,82 @@
+"""Kernel microbenchmarks on CPU: the memory-efficient production
+paths (chunked attention, chunked xent) vs naive references, plus the
+recurrent scan ops.  Wall-times are CPU-host numbers — the TPU story
+is the roofline — but the *ratios* demonstrate the memory/flop
+trade-offs hold end to end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.kernels import ref
+from repro.kernels.chunked_attention import chunked_attention
+from repro.models.loss import chunked_cross_entropy
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> dict:
+    out = {}
+    # attention: naive vs chunked at growing sequence length
+    B, H, K, hd = 1, 4, 2, 64
+    for S in (512, 1024, 2048):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, K, hd))
+        v = jax.random.normal(ks[2], (B, S, K, hd))
+        naive = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
+        chunk = jax.jit(lambda q, k, v: chunked_attention(q, k, v, True,
+                                                          None, 256, 256))
+        jax.block_until_ready(naive(q, k, v))
+        jax.block_until_ready(chunk(q, k, v))
+        us_n = time_call(lambda: jax.block_until_ready(naive(q, k, v)))
+        us_c = time_call(lambda: jax.block_until_ready(chunk(q, k, v)))
+        row(f"kernels/attention-naive/S{S}", us_n, "")
+        row(f"kernels/attention-chunked/S{S}", us_c,
+            f"scores_mem_naive_MB={B * H * S * S * 4 / 1e6:.0f};"
+            f"scores_mem_chunked_MB={B * H * 256 * 256 * 4 / 1e6:.1f}")
+        out[f"attn_{S}"] = (us_n, us_c)
+
+    # chunked xent vs dense at LLM vocab
+    Bx, Sx, d, V = 2, 64, 128, 65536
+    x = jax.random.normal(KEY, (Bx, Sx, d))
+    head = jax.random.normal(KEY, (d, V)) * 0.02
+    labels = jax.random.randint(KEY, (Bx, Sx), 0, V)
+
+    def dense(x, head):
+        logp = jax.nn.log_softmax((x @ head).astype(jnp.float32), -1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[..., None],
+                                             -1)[..., 0])
+
+    jd = jax.jit(jax.grad(dense))
+    jc = jax.jit(jax.grad(lambda x, h: chunked_cross_entropy(x, h, labels)))
+    jax.block_until_ready(jd(x, head))
+    jax.block_until_ready(jc(x, head))
+    us_d = time_call(lambda: jax.block_until_ready(jd(x, head)))
+    us_c = time_call(lambda: jax.block_until_ready(jc(x, head)))
+    row("kernels/xent-dense-grad/V65536", us_d,
+        f"logits_MB={Bx * Sx * V * 4 / 1e6:.0f}")
+    row("kernels/xent-chunked-grad/V65536", us_c,
+        f"live_MB={Bx * Sx * 8192 * 4 / 1e6:.0f}")
+    out["xent"] = (us_d, us_c)
+
+    # recurrent scans (jnp reference path used by models on CPU)
+    Bw, Sw, Hw, hdw = 1, 256, 4, 64
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (Bw, Sw, Hw, hdw)) * 0.5
+    kk = jax.random.normal(ks[1], (Bw, Sw, Hw, hdw)) * 0.5
+    vv = jax.random.normal(ks[2], (Bw, Sw, Hw, hdw))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (Bw, Sw, Hw, hdw)) - 3.0))
+    u = jax.random.normal(ks[4], (Hw, hdw)) * 0.3
+    jw = jax.jit(lambda *a: ref.wkv6(*a)[0])
+    jax.block_until_ready(jw(r, kk, vv, w, u))
+    row("kernels/wkv6-ref/S256",
+        time_call(lambda: jax.block_until_ready(jw(r, kk, vv, w, u))),
+        f"tokens_per_call={Bw * Sw}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

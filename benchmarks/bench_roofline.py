@@ -1,0 +1,88 @@
+"""Roofline table (deliverable g): three terms per (arch x shape x
+mesh) from the dry-run artifacts in results/dryrun/.
+
+  compute    = analytic_FLOPs / (chips x 197 TFLOP/s)
+  memory     = analytic_HBM_bytes / (chips x 819 GB/s)
+  collective = HLO_collective_bytes / (chips x 50 GB/s ICI)
+
+collective bytes come from the optimized HLO (while-loop trip counts
+parsed and applied); FLOPs/HBM use the analytic per-arch model since
+XLA's cost_analysis visits scan bodies once (recorded alongside).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+from repro.core.hardware import (V5E_HBM_BW, V5E_ICI_BW_PER_LINK,
+                                 V5E_PEAK_FLOPS_BF16)
+
+_ROOT = Path(__file__).resolve().parents[1] / "results"
+RESULTS = _ROOT / "dryrun"
+# labelled sweeps: paper-faithful baseline sharding vs the §Perf-
+# optimized per-shape modes (EXPERIMENTS.md)
+SWEEPS = (("baseline", _ROOT / "dryrun_baseline"),
+          ("optimized", _ROOT / "dryrun_opt"))
+
+
+def roofline_terms(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    ana = rec["analytic"]
+    coll = rec.get("collectives", {})
+    compute_s = ana["flops"] / (chips * V5E_PEAK_FLOPS_BF16)
+    memory_s = ana["hbm_bytes"] / (chips * V5E_HBM_BW)
+    # collective bytes in the HLO are already per-device module bytes
+    collective_s = coll.get("total_bytes", 0.0) / V5E_ICI_BW_PER_LINK
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=lambda k: terms[k])
+    hlo_flops = (rec.get("cost_analysis") or {}).get("flops") or 0.0
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": max(terms.values()),
+        "model_flops": ana["model_flops"],
+        "useful_flops_ratio": (ana["model_flops"] / ana["flops"]
+                               if ana["flops"] else 0.0),
+        "mfu_at_bound": (ana["model_flops"]
+                         / (chips * V5E_PEAK_FLOPS_BF16)
+                         / max(max(terms.values()), 1e-12)),
+        "hlo_flops_per_device_loopbody_once": hlo_flops,
+        "temp_bytes_per_device": (rec.get("memory") or {}).get("temp_bytes"),
+    }
+
+
+def load_records(results_dir: Path) -> list[dict]:
+    recs = []
+    for p in sorted(results_dir.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "ok":
+            recs.append(rec)
+    return recs
+
+
+def run() -> list[dict]:
+    out = []
+    sweeps = [s for s in SWEEPS if s[1].is_dir()] or [("dryrun", RESULTS)]
+    for label, results_dir in sweeps:
+        for rec in load_records(results_dir):
+            t = roofline_terms(rec)
+            name = (f"roofline-{label}/{rec['arch']}/{rec['shape']}"
+                    f"/{rec['mesh']}")
+            row(name, rec.get("compile_s", 0.0) * 1e6,
+                f"compute_ms={t['compute_s'] * 1e3:.3f};"
+                f"memory_ms={t['memory_s'] * 1e3:.3f};"
+                f"collective_ms={t['collective_s'] * 1e3:.3f};"
+                f"dominant={t['dominant']};"
+                f"mfu_bound={t['mfu_at_bound']:.3f};"
+                f"useful_ratio={t['useful_flops_ratio']:.2f}")
+            out.append({**rec, "sweep": label, "roofline": t})
+    if not out:
+        row("roofline/no-dryrun-artifacts", 0.0,
+            "run `python -m repro.launch.dryrun --all` first")
+    return out
+
+
+if __name__ == "__main__":
+    run()

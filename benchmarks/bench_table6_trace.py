@@ -1,0 +1,61 @@
+"""Paper Table VI / §VI: the layer-wise trace dataset.
+
+Round-trips the bundled AlexNet/K80 iteration through the trace format,
+derives the aggregate quantities the paper reports (total gradient
+bytes ~= 244 MB = 61M f32 params; forward/backward/comm totals), and
+generates a fresh trace from a real instrumented CPU model in the same
+format.
+"""
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import row, time_call
+from repro.core.hardware import K80_CLUSTER
+from repro.models.cnn import alexnet_timed_layers
+from repro.traces.bundled import ALEXNET_K80, TOTAL_GRAD_BYTES
+from repro.traces.format import read_trace, write_trace
+from repro.traces.generate import generate_trace
+
+
+def run() -> dict:
+    out = {}
+    costs = ALEXNET_K80.to_iteration_costs()
+    us = time_call(lambda: ALEXNET_K80.to_iteration_costs(), repeats=3)
+    row("table6/bundled/totals", us,
+        f"grad_MB={TOTAL_GRAD_BYTES / 1e6:.1f};t_io_s={costs.t_io:.2f};"
+        f"fwd_s={sum(costs.t_f):.2f};bwd_s={sum(costs.t_b):.2f};"
+        f"comm_s={sum(costs.t_c):.2f}")
+    out["grad_bytes"] = TOTAL_GRAD_BYTES
+
+    with tempfile.TemporaryDirectory() as d:
+        p = Path(d) / "alexnet_k80.trace"
+        us = time_call(lambda: write_trace(ALEXNET_K80, p), repeats=3)
+        t2 = read_trace(p)
+        ok = t2.iterations[0] == ALEXNET_K80.iterations[0]
+        row("table6/roundtrip", us, f"identical={ok}")
+        out["roundtrip_ok"] = ok
+
+    # fresh trace from an instrumented real model (reduced AlexNet)
+    layers, x0 = alexnet_timed_layers(jax.random.PRNGKey(0), input_hw=64)
+    import jax.numpy as jnp
+    x0 = jnp.broadcast_to(x0, (2,) + x0.shape[1:])
+    res = {}
+    us = time_call(lambda: res.__setitem__("t", generate_trace(
+        layers, x0, "alexnet-mini", n_iterations=1, repeats=1,
+        comm_time_fn=lambda b: K80_CLUSTER.allreduce_time(b, 16))), repeats=1)
+    tr = res["t"]
+    mean = tr.mean_iteration()
+    row("table6/generated-alexnet-mini", us,
+        f"layers={len(mean)};"
+        f"fwd_us={sum(r.forward_us for r in mean):.0f};"
+        f"grad_MB={sum(r.size_bytes for r in mean) / 1e6:.1f}")
+    out["generated_layers"] = len(mean)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure plus the
+roofline and kernel microbenchmarks.  Prints ``name,us_per_call,
+derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = ("fig2", "fig3", "fig4", "table6", "kernels", "roofline")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", help="comma-separated subset of "
+                                   + ",".join(SUITES))
+    args = ap.parse_args(argv)
+    wanted = set((args.only or ",".join(SUITES)).split(","))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in SUITES:
+        if name not in wanted:
+            continue
+        try:
+            if name == "fig2":
+                from benchmarks.bench_fig2_single_node import run
+            elif name == "fig3":
+                from benchmarks.bench_fig3_multi_node import run
+            elif name == "fig4":
+                from benchmarks.bench_fig4_prediction import run
+            elif name == "table6":
+                from benchmarks.bench_table6_trace import run
+            elif name == "kernels":
+                from benchmarks.bench_kernels import run
+            elif name == "roofline":
+                from benchmarks.bench_roofline import run
+            run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,FAILED", flush=True)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

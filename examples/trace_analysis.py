@@ -1,0 +1,59 @@
+"""Simulation study on the paper's published trace (§VI): load the
+bundled Table VI AlexNet/K80 iteration, replay it through the DAG
+model under every policy, and quantify how much communication each
+overlap strategy hides — the kind of study the paper released the
+trace dataset to enable.
+
+    PYTHONPATH=src python examples/trace_analysis.py
+"""
+from repro.core import analytical as A
+from repro.core.dag import build_ssgd_dag
+from repro.core.policies import ALL_POLICIES
+from repro.core.simulator import simulate
+from repro.traces.bundled import ALEXNET_K80, TOTAL_GRAD_BYTES
+
+
+def main():
+    costs = ALEXNET_K80.to_iteration_costs()
+    print(f"trace: {ALEXNET_K80.network} on {ALEXNET_K80.cluster} "
+          f"({costs.num_layers} layers, "
+          f"{TOTAL_GRAD_BYTES / 1e6:.0f} MB gradients)")
+    print(f"  t_io={costs.t_io:.2f}s  fwd={sum(costs.t_f):.2f}s  "
+          f"bwd={sum(costs.t_b):.2f}s  comm={sum(costs.t_c):.2f}s")
+    tc_no = A.non_overlapped_comm(costs.t_b, costs.t_c)
+    print(f"  Eq.5 non-overlappable comm t_c^no = {tc_no:.3f}s "
+          f"({tc_no / sum(costs.t_c) * 100:.0f}% of total comm)\n")
+
+    # effective bandwidth/latency implied by the trace itself (layer
+    # comm times in Caffe traces include queueing, so bucket fusion is
+    # re-derived from bytes at the trace's own effective bandwidth)
+    total_bytes = sum(b for b in costs.grad_bytes if b)
+    bw_eff = total_bytes / sum(costs.t_c)
+    alpha = min(t for t, b in zip(costs.t_c, costs.grad_bytes) if b)
+
+    def comm_scale(nbytes, _naive):
+        return nbytes / bw_eff + alpha
+
+    serial = A.eq2_naive_ssgd(costs)
+    print(f"{'policy':45s}{'iter (s)':>10s}{'vs naive':>10s}"
+          f"{'comm hidden':>12s}")
+    for name, pol in ALL_POLICIES.items():
+        g = build_ssgd_dag(costs, 2, pol, n_iterations=6,
+                           comm_scale=comm_scale)
+        t = simulate(g).steady_iteration_time()
+        hidden = serial - t
+        print(f"{pol.describe():45s}{t:10.3f}{serial / t:10.2f}x"
+              f"{hidden:11.3f}s")
+
+    print("\nper-layer comm profile (top 5 by size):")
+    recs = sorted(ALEXNET_K80.mean_iteration(), key=lambda r: -r.size_bytes)
+    for r in recs[:5]:
+        print(f"  {r.name:6s} {r.size_bytes / 1e6:7.1f} MB  "
+              f"comm {r.comm_us / 1e3:7.1f} ms")
+    print("\nfc6+fc7 carry ~90% of bytes — exactly the layer-wise "
+          "imbalance behind the paper's 9.6% bandwidth-utilization "
+          "finding; bucketing fuses the small tail.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Checkpointing: flat-key npz save/restore for parameter/optimizer
+pytrees, with step metadata."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str | Path, params: Any, opt_state: Any = None,
+                    step: int = 0, extra: dict | None = None) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    arrays = {f"params{SEP}{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        arrays.update({f"opt{SEP}{k}": v
+                       for k, v in _flatten(opt_state).items()})
+    np.savez(path, __meta__=json.dumps({"step": step, **(extra or {})}),
+             **arrays)
+
+
+def restore_checkpoint(path: str | Path, params_like: Any,
+                       opt_state_like: Any = None):
+    """Restore into the structure of ``params_like`` (shape/dtype-true
+    templates, e.g. freshly initialized params)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+
+        def fill(template: Any, prefix: str) -> Any:
+            leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+            out = []
+            for path_, leaf in leaves:
+                key = SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                               for k in path_)
+                arr = z[f"{prefix}{SEP}{key}"]
+                if arr.shape != leaf.shape:
+                    raise ValueError(f"shape mismatch for {key}: "
+                                     f"{arr.shape} vs {leaf.shape}")
+                out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+            return jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(template), out)
+
+        params = fill(params_like, "params")
+        opt_state = (fill(opt_state_like, "opt")
+                     if opt_state_like is not None else None)
+    return params, opt_state, meta

@@ -1,0 +1,133 @@
+"""Gradient synchronization policies inside *real* JAX training steps.
+
+This is where the paper's §IV-C framework taxonomy becomes executable
+HLO rather than a simulation:
+
+* ``at_end`` (CNTK): one fused ``pmean`` over the whole gradient pytree
+  after the full backward pass — a single blocking collective phase.
+* ``wfbp`` (Caffe-MPI / MXNet / TensorFlow): a ``custom_vjp`` identity
+  is applied to each scanned layer's parameters, whose backward rule
+  issues the data-parallel ``psum`` *inside the backward scan body* —
+  so the lowered HLO carries one all-reduce per layer inside the
+  backward ``while`` loop, exactly the wait-free back-propagation
+  pattern, and the XLA latency-hiding scheduler can overlap it with
+  the remaining backward compute.
+* ``bucketed`` (beyond-paper, §VII future work): gradients are fused
+  into size-targeted flat buckets before a per-bucket collective —
+  fewer, larger messages (the fix for the 9.6% InfiniBand utilization
+  the paper measured).
+
+All three produce bitwise-identical gradients (property-tested); they
+differ only in collective placement/fusion.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+SYNC_POLICIES = ("none", "at_end", "wfbp", "bucketed")
+
+
+# ----------------------------------------------------------------------
+# WFBP: psum-in-backward via custom_vjp
+# ----------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def psum_in_backward(x: jax.Array, axis_names: tuple[str, ...],
+                     scale: float) -> jax.Array:
+    """Identity on the forward pass; the cotangent is ``psum``-ed over
+    ``axis_names`` and divided by ``scale`` on the backward pass."""
+    return x
+
+
+def _fwd(x, axis_names, scale):
+    return x, None
+
+
+def _bwd(axis_names, scale, _res, g):
+    if axis_names:
+        g = jax.lax.psum(g, axis_names)
+    return (g / scale,)
+
+
+psum_in_backward.defvjp(_fwd, _bwd)
+
+
+def wfbp_param_hook(axis_names: Sequence[str], scale: float):
+    """Returns a hook for ``transformer.forward(unit_param_hook=...)``:
+    tags every parameter leaf of the scanned layer so its gradient is
+    all-reduced the moment that layer's backward completes.  ``scale``
+    is the data-parallel world size (psum -> mean)."""
+    axes = tuple(axis_names)
+    if not axes:
+        return None
+
+    def hook(unit_params):
+        return jax.tree_util.tree_map(
+            lambda p: psum_in_backward(p, axes, scale), unit_params)
+
+    return hook
+
+
+# ----------------------------------------------------------------------
+# at_end: one pmean over the full pytree
+# ----------------------------------------------------------------------
+def pmean_at_end(grads: Any, axis_names: Sequence[str]) -> Any:
+    axes = tuple(axis_names)
+    if not axes:
+        return grads
+    return jax.lax.pmean(grads, axes)
+
+
+# ----------------------------------------------------------------------
+# bucketed: flatten -> fixed-size buckets -> one collective per bucket
+# ----------------------------------------------------------------------
+def bucketed_pmean(grads: Any, axis_names: Sequence[str],
+                   bucket_bytes: float = 25e6) -> Any:
+    axes = tuple(axis_names)
+    if not axes:
+        return grads
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    buckets: list[list[int]] = [[]]
+    size = 0.0
+    for i, leaf in enumerate(leaves):
+        buckets[-1].append(i)
+        size += leaf.size * leaf.dtype.itemsize
+        if size >= bucket_bytes:
+            buckets.append([])
+            size = 0.0
+    if not buckets[-1]:
+        buckets.pop()
+    out: list[Any] = [None] * len(leaves)
+    for members in buckets:
+        flat = jnp.concatenate([leaves[i].reshape(-1).astype(jnp.float32)
+                                for i in members])
+        flat = jax.lax.pmean(flat, axes)
+        off = 0
+        for i in members:
+            n = leaves[i].size
+            out[i] = flat[off:off + n].reshape(leaves[i].shape).astype(leaves[i].dtype)
+            off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sync_gradients(grads: Any, policy: str, axis_names: Sequence[str],
+                   bucket_bytes: float = 25e6) -> Any:
+    """Post-backward gradient sync dispatch (``wfbp`` grads are already
+    reduced inside the backward pass — mean-normalized by the caller)."""
+    if policy in ("none", "wfbp"):
+        return grads
+    if policy == "at_end":
+        return pmean_at_end(grads, axis_names)
+    if policy == "bucketed":
+        return bucketed_pmean(grads, axis_names, bucket_bytes)
+    raise ValueError(f"unknown sync policy {policy!r}")
+
+
+def axis_size(axis_names: Sequence[str]) -> jax.Array | int:
+    n = 1
+    for a in axis_names:
+        n *= jax.lax.axis_size(a)
+    return n

@@ -1,0 +1,151 @@
+"""Analytic FLOPs / bytes model for the assigned transformer
+architectures — the MODEL_FLOPS side of the roofline (exact for
+matmuls; elementwise ignored).
+
+Conventions: FLOPs are multiply-accumulate*2.  Backward = 2x forward.
+Attention terms use 4*S*ctx*H*hd per layer forward (QK^T + PV);
+sliding-window layers replace ctx with min(S, window); MoE counts only
+routed-active + shared expert parameters (6*N_active*D).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.shapes import InputShape
+from repro.models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class StepCost:
+    flops: float              # global flops for one step
+    hbm_bytes: float          # global HBM traffic estimate
+    model_flops: float        # 6*N*D (train) or 2*N*D (inference)
+    param_bytes: float
+    n_params: float
+    n_active_params: float
+
+
+def _block_params(cfg: ModelConfig, kind: str) -> tuple[float, float]:
+    """(total, active) parameter count of one block of ``kind``."""
+    d, hd = cfg.d_model, cfg.head_size
+    H, K = cfg.num_heads, cfg.kv_heads
+    attn = d * H * hd + 2 * d * K * hd + H * hd * d
+    if cfg.num_experts:
+        e = cfg.num_experts * 3 * d * cfg.moe_d_ff
+        e_active = cfg.experts_per_token * 3 * d * cfg.moe_d_ff
+        shared = 3 * d * cfg.shared_expert_d_ff if cfg.shared_expert_d_ff else 0
+        router = d * cfg.num_experts
+        ffn, ffn_active = e + shared + router, e_active + shared + router
+    else:
+        n_mats = 3 if cfg.mlp_gated else 2
+        ffn = ffn_active = n_mats * d * cfg.d_ff
+    if kind in ("G", "L"):
+        return attn + ffn, attn + ffn_active
+    if kind == "C":
+        return 2 * attn + ffn, 2 * attn + ffn_active
+    if kind == "R":
+        W = cfg.rnn_size
+        rec = 2 * d * W + 2 * W * W + W * d + cfg.conv1d_width * W
+        return rec + ffn, rec + ffn_active
+    if kind == "W":
+        tm = 6 * d * d                  # r,k,v,w,g,o projections
+        cm = d * cfg.d_ff * 2 + d * d
+        return tm + cm, tm + cm
+    raise ValueError(kind)
+
+
+def _pattern_of(cfg: ModelConfig) -> str:
+    return (cfg.layer_pattern * cfg.num_units) + cfg.remainder_pattern
+
+
+def param_counts(cfg: ModelConfig) -> tuple[float, float]:
+    total = active = cfg.vocab_size * cfg.d_model   # embedding
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.vocab_size
+        active += cfg.d_model * cfg.vocab_size
+    for kind in _pattern_of(cfg):
+        t, a = _block_params(cfg, kind)
+        total, active = total + t, active + a
+    if cfg.arch_type == "audio":
+        d = cfg.d_model
+        enc_block = 4 * d * d + 2 * d * cfg.d_ff
+        total += cfg.encoder_layers * enc_block
+        active += cfg.encoder_layers * enc_block
+    return float(total), float(active)
+
+
+def _attn_ctx(cfg: ModelConfig, kind: str, S: int) -> float:
+    if kind == "L" and cfg.sliding_window:
+        return float(min(S, cfg.sliding_window))
+    if kind == "C":
+        return float(cfg.encoder_seq or cfg.num_image_tokens or S)
+    return float(S)
+
+
+def _attention_flops_fwd(cfg: ModelConfig, S: int, B: int) -> float:
+    """Score+value matmul flops for one full forward over (B, S)."""
+    H, hd = cfg.num_heads, cfg.head_size
+    total = 0.0
+    for kind in _pattern_of(cfg):
+        if kind == "G":
+            # causal: average context S/2
+            total += 2.0 * B * S * S * H * hd
+        elif kind == "L":
+            total += 4.0 * B * S * _attn_ctx(cfg, kind, S) * H * hd
+        elif kind == "C":
+            # self (causal) + cross over encoder tokens
+            total += 2.0 * B * S * S * H * hd
+            total += 4.0 * B * S * _attn_ctx(cfg, kind, S) * H * hd
+        elif kind == "W":
+            total += 4.0 * B * S * hd * cfg.d_model    # state updates per token
+        elif kind == "R":
+            total += 8.0 * B * S * cfg.rnn_size        # elementwise recurrence
+    return total
+
+
+def step_cost(cfg: ModelConfig, shape: InputShape) -> StepCost:
+    B, S = shape.global_batch, shape.seq_len
+    n_total, n_active = param_counts(cfg)
+    pbytes = 2.0 * n_total                              # bf16
+    if shape.kind == "train":
+        D = B * S
+        matmul = 6.0 * n_active * D
+        attn = 3.0 * _attention_flops_fwd(cfg, S, B)
+        flops = matmul + attn
+        model_flops = 6.0 * n_active * D
+        # params read fwd+bwd (bf16) + grads written + SGD-momentum
+        # update (f32 m read/write + param read/write)
+        hbm = 2 * pbytes + pbytes + 12.0 * n_total \
+            + 20.0 * D * cfg.d_model * len(_pattern_of(cfg))
+    elif shape.kind == "prefill":
+        D = B * S
+        flops = 2.0 * n_active * D + _attention_flops_fwd(cfg, S, B)
+        model_flops = 2.0 * n_active * D
+        hbm = pbytes + 4.0 * D * cfg.d_model * len(_pattern_of(cfg))
+    else:  # decode: one token per sequence, cache of length S
+        D = B
+        flops = 2.0 * n_active * D
+        cache_bytes = 0.0
+        for kind in _pattern_of(cfg):
+            if kind in ("G", "C"):
+                ctx = S
+            elif kind == "L":
+                ctx = min(S, cfg.sliding_window or S)
+            else:
+                ctx = 0
+            if ctx:
+                flops += 4.0 * B * ctx * cfg.num_heads * cfg.head_size
+                cache_bytes += 2.0 * B * ctx * cfg.kv_heads * cfg.head_size * 2
+            if kind == "W":
+                hd = 64
+                H = cfg.d_model // hd
+                flops += 4.0 * B * H * hd * hd
+                cache_bytes += 4.0 * B * H * hd * hd
+            if kind == "R":
+                flops += 8.0 * B * cfg.rnn_size
+                cache_bytes += 4.0 * B * cfg.rnn_size
+        model_flops = 2.0 * n_active * D
+        hbm = pbytes + cache_bytes                     # read params + cache
+    return StepCost(flops=flops, hbm_bytes=hbm, model_flops=model_flops,
+                    param_bytes=pbytes, n_params=n_total,
+                    n_active_params=n_active)

@@ -1,0 +1,198 @@
+"""Per-layer cost model: FLOPs / parameter bytes for every workload.
+
+Two families:
+
+* The paper's own CNN workloads (Table IV: AlexNet, GoogleNet,
+  ResNet-50) — layer tables generated from the published architectures,
+  used to populate DAG communication/computation nodes when no measured
+  trace is available.
+* The assigned transformer architectures — per-block FLOPs/params from
+  the configs, used by the predictor to extend the paper's model to the
+  TPU production mesh.
+
+FLOPs here are *per training sample* multiply-accumulate*2 for the
+forward pass; backward is modeled as ``2x`` forward (two GEMMs per
+GEMM: dgrad + wgrad), the standard approximation the paper's traces
+corroborate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.core.dag import IterationCosts
+from repro.core.hardware import ClusterSpec
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    flops_fwd: float          # per-sample forward flops
+    params: int               # learnable parameter count (0 = no gradient sync)
+
+    @property
+    def grad_bytes(self) -> float:
+        return 4.0 * self.params    # f32 gradients, as in the paper
+
+
+def conv(name: str, h: int, w: int, cout: int, k: int, cin: int,
+         groups: int = 1) -> LayerSpec:
+    cin_g = cin // groups
+    flops = 2.0 * h * w * cout * k * k * cin_g
+    params = cout * (k * k * cin_g) + cout
+    return LayerSpec(name, flops, params)
+
+
+def fc(name: str, nin: int, nout: int) -> LayerSpec:
+    return LayerSpec(name, 2.0 * nin * nout, nin * nout + nout)
+
+
+def act(name: str, elems: int) -> LayerSpec:
+    # activation / pooling / norm: ~1 flop per element, no params
+    return LayerSpec(name, float(elems), 0)
+
+
+# ----------------------------------------------------------------------
+# AlexNet (Krizhevsky 2012, LRN excluded per the paper's Table IV note).
+# ----------------------------------------------------------------------
+def alexnet_layers() -> list[LayerSpec]:
+    return [
+        conv("conv1", 55, 55, 96, 11, 3),
+        act("relu1+pool1", 55 * 55 * 96 + 27 * 27 * 96),
+        conv("conv2", 27, 27, 256, 5, 96, groups=2),
+        act("relu2+pool2", 27 * 27 * 256 + 13 * 13 * 256),
+        conv("conv3", 13, 13, 384, 3, 256),
+        act("relu3", 13 * 13 * 384),
+        conv("conv4", 13, 13, 384, 3, 384, groups=2),
+        act("relu4", 13 * 13 * 384),
+        conv("conv5", 13, 13, 256, 3, 384, groups=2),
+        act("relu5+pool5", 13 * 13 * 256 + 6 * 6 * 256),
+        fc("fc6", 9216, 4096),
+        act("relu6+drop6", 4096 * 2),
+        fc("fc7", 4096, 4096),
+        act("relu7+drop7", 4096 * 2),
+        fc("fc8", 4096, 1000),
+    ]
+
+
+# ----------------------------------------------------------------------
+# ResNet-50 (He et al. 2015).
+# ----------------------------------------------------------------------
+def resnet50_layers() -> list[LayerSpec]:
+    layers: list[LayerSpec] = [conv("conv1", 112, 112, 64, 7, 3)]
+    cfg = [  # (blocks, in_ch, mid_ch, out_ch, spatial)
+        (3, 64, 64, 256, 56),
+        (4, 256, 128, 512, 28),
+        (6, 512, 256, 1024, 14),
+        (3, 1024, 512, 2048, 7),
+    ]
+    for stage, (blocks, cin, mid, cout, hw) in enumerate(cfg, start=2):
+        for b in range(blocks):
+            cin_b = cin if b == 0 else cout
+            pre = f"res{stage}{chr(ord('a') + b)}"
+            layers.append(conv(f"{pre}_1x1a", hw, hw, mid, 1, cin_b))
+            layers.append(conv(f"{pre}_3x3", hw, hw, mid, 3, mid))
+            layers.append(conv(f"{pre}_1x1b", hw, hw, cout, 1, mid))
+            if b == 0:
+                layers.append(conv(f"{pre}_proj", hw, hw, cout, 1, cin_b))
+            layers.append(act(f"{pre}_bn_relu", 3 * hw * hw * cout))
+    layers.append(fc("fc1000", 2048, 1000))
+    return layers
+
+
+# ----------------------------------------------------------------------
+# GoogleNet / Inception-v1 (Szegedy et al. 2015).
+# Note: actual parameter count is ~7M; the paper's Table IV quotes
+# "~53 millions", which does not match the published architecture — we
+# use the real architecture (documented deviation, DESIGN.md §9).
+# ----------------------------------------------------------------------
+_INCEPTION = [  # name, hw, cin, 1x1, 3x3red, 3x3, 5x5red, 5x5, pool_proj
+    ("3a", 28, 192, 64, 96, 128, 16, 32, 32),
+    ("3b", 28, 256, 128, 128, 192, 32, 96, 64),
+    ("4a", 14, 480, 192, 96, 208, 16, 48, 64),
+    ("4b", 14, 512, 160, 112, 224, 24, 64, 64),
+    ("4c", 14, 512, 128, 128, 256, 24, 64, 64),
+    ("4d", 14, 512, 112, 144, 288, 32, 64, 64),
+    ("4e", 14, 528, 256, 160, 320, 32, 128, 128),
+    ("5a", 7, 832, 256, 160, 320, 32, 128, 128),
+    ("5b", 7, 832, 384, 192, 384, 48, 128, 128),
+]
+
+
+def googlenet_layers() -> list[LayerSpec]:
+    layers = [
+        conv("conv1", 112, 112, 64, 7, 3),
+        conv("conv2_red", 56, 56, 64, 1, 64),
+        conv("conv2", 56, 56, 192, 3, 64),
+    ]
+    for name, hw, cin, c1, c3r, c3, c5r, c5, cp in _INCEPTION:
+        flops = params = 0.0
+        for spec in (conv("x", hw, hw, c1, 1, cin),
+                     conv("x", hw, hw, c3r, 1, cin),
+                     conv("x", hw, hw, c3, 3, c3r),
+                     conv("x", hw, hw, c5r, 1, cin),
+                     conv("x", hw, hw, c5, 5, c5r),
+                     conv("x", hw, hw, cp, 1, cin)):
+            flops += spec.flops_fwd
+            params += spec.params
+        layers.append(LayerSpec(f"inception_{name}", flops, int(params)))
+    layers.append(fc("fc1000", 1024, 1000))
+    return layers
+
+
+CNN_WORKLOADS = {
+    # name -> (layer list builder, per-GPU batch from Table IV, bytes/sample on disk)
+    "alexnet": (alexnet_layers, 1024, 110e3),
+    "googlenet": (googlenet_layers, 64, 110e3),
+    "resnet50": (resnet50_layers, 32, 110e3),
+}
+
+
+def total_params(layers: Sequence[LayerSpec]) -> int:
+    return sum(l.params for l in layers)
+
+
+def total_flops(layers: Sequence[LayerSpec]) -> float:
+    return sum(l.flops_fwd for l in layers)
+
+
+# ----------------------------------------------------------------------
+# LayerSpec list -> IterationCosts on a concrete cluster.
+# ----------------------------------------------------------------------
+def make_iteration_costs(
+    layers: Sequence[LayerSpec],
+    cluster: ClusterSpec,
+    batch_per_gpu: int,
+    n_workers: int,
+    bytes_per_sample: float = 110e3,
+    bwd_fwd_ratio: float = 2.0,
+    decode_flops_per_byte: float = 0.0,
+) -> IterationCosts:
+    """Build the paper's Table-I cost vocabulary from a layer table.
+
+    ``decode_flops_per_byte`` models host-side JPEG decode (the paper
+    attributes CNTK/TF's poor AlexNet scaling to CPU-side decoding of
+    4096 images/iter); it inflates t_io.
+    """
+    t_f = [cluster.compute_time(l.flops_fwd * batch_per_gpu) for l in layers]
+    t_b = [bwd_fwd_ratio * tf for tf in t_f]
+    t_c = [cluster.allreduce_time(l.grad_bytes, n_workers) if l.params else 0.0
+           for l in layers]
+    grad_bytes = [l.grad_bytes for l in layers]
+    nbytes_in = batch_per_gpu * bytes_per_sample
+    t_io = cluster.io_time(nbytes_in) + decode_flops_per_byte * nbytes_in
+    t_h2d = cluster.h2d_time(nbytes_in)
+    # update: one read-modify-write over all params on the device
+    pbytes = 4.0 * total_params(layers)
+    t_u = 3.0 * pbytes / cluster.device.hbm_bandwidth
+    return IterationCosts(t_f=t_f, t_b=t_b, t_c=t_c, t_io=t_io, t_h2d=t_h2d,
+                          t_u=t_u, grad_bytes=grad_bytes)
+
+
+def comm_scale_fn(cluster: ClusterSpec, n_workers: int):
+    """Bucket-fusion collective model for the DAG builder."""
+
+    def scale(total_bytes: float, _naive_time: float) -> float:
+        return cluster.allreduce_time(total_bytes, n_workers)
+
+    return scale

@@ -1,0 +1,337 @@
+"""The paper's DAG model of S-SGD (Section IV).
+
+A training job is a DAG ``G = (V_c U V_n, E)`` where ``V_c`` are
+*computing* tasks (per-layer forward/backward, model update), ``V_n``
+are *communication* tasks (disk I/O, host-to-device copy, per-layer
+gradient aggregation), and a directed edge ``(x, y)`` means task ``y``
+may only start after ``x`` finishes.
+
+``build_ssgd_dag`` reproduces Fig. 1 of the paper for an arbitrary
+number of layers, workers and iterations, parameterized by an overlap
+:class:`~repro.core.policies.Policy` — which is exactly how the paper
+distinguishes Caffe-MPI / CNTK / MXNet / TensorFlow.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Sequence
+
+from repro.core.policies import Policy
+
+
+class TaskKind(enum.Enum):
+    COMPUTE = "compute"
+    COMM = "comm"
+
+
+# Channel name templates.  The simulator serializes tasks that share a
+# channel; distinct channels run in parallel (GPU stream vs. PCIe vs.
+# disk vs. the collective network, as in the paper's two task classes).
+def gpu_channel(worker: int) -> str:
+    return f"gpu:{worker}"
+
+
+def disk_channel(worker: int) -> str:
+    return f"disk:{worker}"
+
+
+def pcie_channel(worker: int) -> str:
+    return f"pcie:{worker}"
+
+
+NET_CHANNEL = "net"
+
+
+@dataclass
+class Task:
+    tid: int
+    name: str
+    kind: TaskKind
+    duration: float
+    channel: str
+    iteration: int = 0
+    layer: int | None = None          # 1-based, as in the paper
+    worker: int | None = None
+    priority: float = 0.0             # lower = scheduled first on channel ties
+    nbytes: float = 0.0               # payload for comm tasks
+
+
+@dataclass
+class DAG:
+    """Directed acyclic graph of :class:`Task` with precedence edges."""
+
+    tasks: dict[int, Task] = field(default_factory=dict)
+    preds: dict[int, set[int]] = field(default_factory=dict)
+    succs: dict[int, set[int]] = field(default_factory=dict)
+    _next_id: int = 0
+
+    # -- construction ---------------------------------------------------
+    def add_task(self, name: str, kind: TaskKind, duration: float, channel: str,
+                 **kw) -> int:
+        if duration < 0:
+            raise ValueError(f"negative duration for task {name}: {duration}")
+        tid = self._next_id
+        self._next_id += 1
+        self.tasks[tid] = Task(tid, name, kind, float(duration), channel, **kw)
+        self.preds[tid] = set()
+        self.succs[tid] = set()
+        return tid
+
+    def add_edge(self, src: int, dst: int) -> None:
+        if src == dst:
+            raise ValueError("self edge")
+        self.preds[dst].add(src)
+        self.succs[src].add(dst)
+
+    def add_edges(self, srcs: Iterable[int], dst: int) -> None:
+        for s in srcs:
+            self.add_edge(s, dst)
+
+    # -- queries ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+    def sources(self) -> list[int]:
+        return [t for t in self.tasks if not self.preds[t]]
+
+    def sinks(self) -> list[int]:
+        return [t for t in self.tasks if not self.succs[t]]
+
+    def topo_order(self) -> list[int]:
+        """Kahn topological order; raises if the graph has a cycle."""
+        indeg = {t: len(p) for t, p in self.preds.items()}
+        ready = sorted([t for t, d in indeg.items() if d == 0])
+        order: list[int] = []
+        import heapq
+
+        heapq.heapify(ready)
+        while ready:
+            t = heapq.heappop(ready)
+            order.append(t)
+            for s in self.succs[t]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    heapq.heappush(ready, s)
+        if len(order) != len(self.tasks):
+            raise ValueError("DAG contains a cycle")
+        return order
+
+    def critical_path(self) -> tuple[float, list[int]]:
+        """Makespan with infinite resources (longest path)."""
+        finish: dict[int, float] = {}
+        best_pred: dict[int, int | None] = {}
+        for t in self.topo_order():
+            start = 0.0
+            bp = None
+            for p in self.preds[t]:
+                if finish[p] > start:
+                    start, bp = finish[p], p
+            finish[t] = start + self.tasks[t].duration
+            best_pred[t] = bp
+        end = max(finish, key=lambda t: finish[t])
+        path = [end]
+        while best_pred[path[-1]] is not None:
+            path.append(best_pred[path[-1]])  # type: ignore[arg-type]
+        return finish[end], list(reversed(path))
+
+    def total_work(self) -> float:
+        return sum(t.duration for t in self.tasks.values())
+
+
+@dataclass(frozen=True)
+class IterationCosts:
+    """Per-iteration task durations feeding the DAG builder.
+
+    This is the paper's Table I vocabulary: ``t_io``, ``t_h2d``,
+    layer-wise ``t_f^(l)``, ``t_b^(l)``, ``t_c^(l)`` and ``t_u``.
+    Comm durations are for the *collective* across all participating
+    workers (layer-wise all-reduce), as measured in the paper's traces.
+    """
+
+    t_f: Sequence[float]              # forward, layer 1..L
+    t_b: Sequence[float]              # backward, layer 1..L (index 0 = layer 1)
+    t_c: Sequence[float]              # gradient all-reduce, layer 1..L
+    t_io: float = 0.0
+    t_h2d: float = 0.0
+    t_u: float = 0.0
+    grad_bytes: Sequence[float] | None = None   # per layer, for bucketing
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.t_f)
+
+    def __post_init__(self):
+        if not (len(self.t_f) == len(self.t_b) == len(self.t_c)):
+            raise ValueError("t_f, t_b, t_c must have equal length")
+        if self.grad_bytes is not None and len(self.grad_bytes) != len(self.t_f):
+            raise ValueError("grad_bytes length mismatch")
+
+
+def _bucketize(costs: IterationCosts, policy: Policy,
+               comm_scale: Callable[[float, float], float] | None) -> list[tuple[str, list[int], float]]:
+    """Group layers (in backward order L..1) into communication buckets.
+
+    Returns ``[(name, member_layers, duration)]`` in issue order.  With
+    ``policy.bucket_bytes`` unset every learnable layer is its own
+    bucket (the paper's layer-wise NCCL pattern).  With bucketing the
+    durations are re-derived via ``comm_scale(total_bytes, total_time)``
+    when byte sizes are known, else summed.
+    """
+    L = costs.num_layers
+    order = list(range(L - 1, -1, -1))            # backward order: layer L first
+    if not policy.bucket_bytes:
+        return [(f"comm_l{l + 1}", [l], costs.t_c[l]) for l in order if costs.t_c[l] > 0]
+
+    buckets: list[tuple[str, list[int], float]] = []
+    cur: list[int] = []
+    cur_bytes = 0.0
+    cur_time = 0.0
+
+    def flush():
+        nonlocal cur, cur_bytes, cur_time
+        if cur:
+            dur = comm_scale(cur_bytes, cur_time) if (comm_scale and cur_bytes) else cur_time
+            buckets.append((f"comm_bucket{len(buckets)}", list(cur), dur))
+        cur, cur_bytes, cur_time = [], 0.0, 0.0
+
+    for l in order:
+        if costs.t_c[l] <= 0:
+            continue
+        cur.append(l)
+        cur_time += costs.t_c[l]
+        if costs.grad_bytes is not None:
+            cur_bytes += costs.grad_bytes[l]
+        if costs.grad_bytes is not None and cur_bytes >= policy.bucket_bytes:
+            flush()
+    flush()
+    return buckets
+
+
+def build_ssgd_dag(
+    costs: IterationCosts,
+    n_workers: int,
+    policy: Policy,
+    n_iterations: int = 1,
+    comm_scale: Callable[[float, float], float] | None = None,
+    shared_compute: bool = False,
+) -> DAG:
+    """Build the S-SGD DAG of Fig. 1 for ``n_iterations`` iterations.
+
+    Single-GPU training (``n_workers == 1``) degenerates to Eq. (1):
+    the comm tasks get zero duration and the graph is a chain.
+
+    ``comm_scale(total_bytes, naive_total_time)`` maps a fused bucket to
+    its collective duration (used by the bucketing policy to model the
+    latency amortization the paper calls for in §VII).
+    """
+    if n_workers < 1:
+        raise ValueError("n_workers >= 1")
+    g = DAG()
+    L = costs.num_layers
+    multi = n_workers > 1
+    # ``shared_compute`` serializes all workers on one compute channel —
+    # models host-device oversubscription (N logical devices on one
+    # core), used by examples/dag_validation.py.
+    gpu_of = (lambda w: "gpu:shared") if shared_compute else gpu_channel
+
+    prev_update: int | None = None
+    prev_io: list[int] = []
+    prev_h2d: list[int] = []
+    prev_bwd_done: list[int] = []       # all backward tasks of previous iter
+
+    for it in range(n_iterations):
+        # --- I/O + H2D (communication tasks T0-T7 in Fig. 1) -----------
+        io_tasks, h2d_tasks = [], []
+        for w in range(n_workers):
+            io = g.add_task(f"io_w{w}", TaskKind.COMM, costs.t_io,
+                            disk_channel(w), iteration=it, worker=w)
+            # Overlapped I/O: next fetch only waits for the previous fetch
+            # (disk channel); otherwise it waits for the previous update.
+            if prev_update is not None and not policy.overlap_io:
+                g.add_edge(prev_update, io)
+            if prev_h2d:
+                # Single staging buffer: the next fetch reuses the buffer
+                # freed by the previous upload, so the prefetch stage has
+                # period t_io + t_h2d — exactly the paper's Eq. (3)/(5)
+                # term max(t_io + t_h2d, ...).
+                g.add_edge(prev_h2d[w], io)
+            h2d = g.add_task(f"h2d_w{w}", TaskKind.COMM, costs.t_h2d,
+                             pcie_channel(w), iteration=it, worker=w)
+            g.add_edge(io, h2d)
+            # Early H2D (Caffe-MPI's GPU-side buffer) starts right after its
+            # fetch; otherwise it must wait for the previous model update
+            # (no spare device buffer to write into).
+            if prev_update is not None and not policy.h2d_early:
+                g.add_edge(prev_update, h2d)
+            if prev_h2d:
+                g.add_edge(prev_h2d[w], h2d)
+            io_tasks.append(io)
+            h2d_tasks.append(h2d)
+
+        # --- forward, layer 1..L ---------------------------------------
+        fwd: list[list[int]] = [[] for _ in range(L)]
+        for w in range(n_workers):
+            prev = h2d_tasks[w]
+            if prev_update is not None:
+                # new iteration's compute waits for previous update
+                pass
+            for l in range(L):
+                t = g.add_task(f"fwd_l{l + 1}_w{w}", TaskKind.COMPUTE,
+                               costs.t_f[l], gpu_of(w), iteration=it,
+                               layer=l + 1, worker=w, priority=float(l))
+                g.add_edge(prev, t)
+                if l == 0 and prev_update is not None:
+                    g.add_edge(prev_update, t)
+                fwd[l].append(t)
+                prev = t
+
+        # --- backward, layer L..1 --------------------------------------
+        bwd: dict[int, list[int]] = {}
+        for w in range(n_workers):
+            prev = fwd[L - 1][w]
+            for l in range(L - 1, -1, -1):
+                t = g.add_task(f"bwd_l{l + 1}_w{w}", TaskKind.COMPUTE,
+                               costs.t_b[l], gpu_of(w), iteration=it,
+                               layer=l + 1, worker=w,
+                               priority=float(2 * L - l))
+                g.add_edge(prev, t)
+                bwd.setdefault(l, []).append(t)
+                prev = t
+        last_bwd = [bwd[0][w] for w in range(n_workers)]   # layer 1 = last
+
+        # --- gradient aggregation (comm tasks T32-T34) -----------------
+        comm_tasks: list[int] = []
+        if multi:
+            buckets = _bucketize(costs, policy, comm_scale)
+            prev_comm: int | None = None
+            for bname, members, dur in buckets:
+                c = g.add_task(bname, TaskKind.COMM, dur, NET_CHANNEL,
+                               iteration=it, layer=members[0] + 1,
+                               priority=float(2 * L - members[-1]),
+                               nbytes=sum(costs.grad_bytes[m] for m in members)
+                               if costs.grad_bytes is not None else 0.0)
+                if policy.overlap_comm:
+                    # WFBP: ready as soon as every worker finished the
+                    # backward of every member layer of the bucket.
+                    for m in members:
+                        g.add_edges(bwd[m], c)
+                else:
+                    # CNTK: aggregation only after the entire backward pass.
+                    g.add_edges(last_bwd, c)
+                if prev_comm is not None and policy.serialize_comm:
+                    g.add_edge(prev_comm, c)
+                prev_comm = c
+                comm_tasks.append(c)
+
+        # --- model update (T35) ----------------------------------------
+        upd = g.add_task("update", TaskKind.COMPUTE, costs.t_u,
+                         gpu_of(0), iteration=it,
+                         priority=float(3 * L + 1))
+        g.add_edges(last_bwd, upd)
+        g.add_edges(comm_tasks, upd)
+        prev_update = upd
+        prev_io, prev_h2d = io_tasks, h2d_tasks
+        prev_bwd_done = last_bwd
+
+    return g

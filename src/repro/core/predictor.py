@@ -1,0 +1,92 @@
+"""Predictor: turn costs (analytic model, measured trace, or compiled
+cost-analysis) into iteration-time / speedup predictions via the DAG.
+
+This is the bridge the paper demonstrates in §V-D (Fig. 4): feed the
+measured layer-wise times into the DAG, list-schedule it, and compare
+against measurement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import analytical
+from repro.core.costmodel import (CNN_WORKLOADS, comm_scale_fn,
+                                  make_iteration_costs)
+from repro.core.dag import IterationCosts, build_ssgd_dag
+from repro.core.hardware import ClusterSpec
+from repro.core.policies import Policy
+from repro.core.simulator import simulate
+
+
+@dataclass(frozen=True)
+class Prediction:
+    policy: str
+    n_workers: int
+    iteration_time: float          # steady-state, from the DAG simulator
+    analytical_time: float | None  # closed-form counterpart, when defined
+    samples_per_sec: float
+    speedup: float                 # vs 1 worker, weak scaling (Eq. 6 form)
+    comm_utilization: float        # busy fraction of the collective channel
+
+
+def predict(
+    costs: IterationCosts,
+    n_workers: int,
+    policy: Policy,
+    batch_per_gpu: int = 1,
+    costs_1gpu: IterationCosts | None = None,
+    cluster: ClusterSpec | None = None,
+    warm_iterations: int = 4,
+) -> Prediction:
+    """Steady-state iteration time for ``costs`` under ``policy``."""
+    comm_scale = comm_scale_fn(cluster, n_workers) if cluster else None
+    g = build_ssgd_dag(costs, n_workers, policy, n_iterations=warm_iterations,
+                       comm_scale=comm_scale)
+    prio = frozenset(["net"]) if policy.priority_comm else None
+    r = simulate(g, priority_channels=prio)
+    t_iter = r.steady_iteration_time()
+
+    base = costs_1gpu or costs
+    c1 = IterationCosts(t_f=base.t_f, t_b=base.t_b, t_c=[0.0] * base.num_layers,
+                        t_io=base.t_io, t_h2d=base.t_h2d, t_u=base.t_u)
+    g1 = build_ssgd_dag(c1, 1, policy, n_iterations=warm_iterations)
+    t1 = simulate(g1).steady_iteration_time()
+    speedup = n_workers * t1 / t_iter if t_iter > 0 else float(n_workers)
+
+    try:
+        ana = analytical.iteration_time(costs, policy.name)
+    except KeyError:
+        ana = None
+    return Prediction(
+        policy=policy.name,
+        n_workers=n_workers,
+        iteration_time=t_iter,
+        analytical_time=ana,
+        samples_per_sec=n_workers * batch_per_gpu / t_iter if t_iter else 0.0,
+        speedup=speedup,
+        comm_utilization=r.utilization("net"),
+    )
+
+
+def predict_cnn(
+    workload: str,
+    cluster: ClusterSpec,
+    n_workers: int,
+    policy: Policy,
+    **cost_kw,
+) -> Prediction:
+    """End-to-end: paper CNN workload name -> prediction on a cluster."""
+    builder, batch, bytes_per_sample = CNN_WORKLOADS[workload]
+    layers = builder()
+    costs = make_iteration_costs(layers, cluster, batch, n_workers,
+                                 bytes_per_sample=bytes_per_sample, **cost_kw)
+    costs_1 = make_iteration_costs(layers, cluster, batch, 1,
+                                   bytes_per_sample=bytes_per_sample, **cost_kw)
+    return predict(costs, n_workers, policy, batch_per_gpu=batch,
+                   costs_1gpu=costs_1, cluster=cluster)
+
+
+def scaling_curve(workload: str, cluster: ClusterSpec, policy: Policy,
+                  worker_counts=(1, 2, 4, 8, 16), **cost_kw) -> list[Prediction]:
+    return [predict_cnn(workload, cluster, n, policy, **cost_kw)
+            for n in worker_counts]

@@ -1,0 +1,215 @@
+"""Memory-efficient chunked attention (FlashAttention-2 schedule in
+pure jnp) with a custom VJP.
+
+The naive reference materializes (B, H, S, S) scores — at 32k tokens
+that is tens of GB per device and dominates the dry-run's temp memory.
+This implementation scans kv blocks with online-softmax state in the
+forward pass and *recomputes* block scores in the backward pass
+(saving only ``out`` and the logsumexp), so both passes hold
+O(block_q x block_k) scratch per (batch, head).  XLA maps the block
+matmuls straight onto the MXU; the Pallas kernel in
+``flash_attention.py`` remains the hand-tiled serving fast path and
+shares its oracle with this module.
+
+Supports GQA, causal masks and sliding windows.  Shapes follow the
+model layout: q (B, S, H, hd), k/v (B, S, K, hd).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+DEFAULT_BLOCK = 512
+
+
+def _mask(qpos, kpos, causal, window):
+    qp = qpos[..., :, None]
+    kp = kpos[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), jnp.bool_)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    return m
+
+
+def _fwd_inner(q, k, v, q0, k0, causal, window, scale):
+    """One (q-block, all kv-blocks) pass.  q: (B,K,G,bq,hd);
+    k, v: (nk, B,K,bk,hd).  Returns (out, lse)."""
+    B, K, G, bq, hd = q.shape
+    nk, _, _, bk, _ = k.shape
+    qpos = q0 + jnp.arange(bq)
+
+    def body(carry, kv):
+        m_run, l_run, acc = carry
+        kb, vb, ik = kv
+        kpos = k0 + ik * bk + jnp.arange(bk)
+        s = jnp.einsum("bkgqh,bksh->bkgqs", q, kb.astype(jnp.float32)) * scale
+        msk = _mask(qpos[None, None, None], kpos[None, None, None],
+                    causal, window)
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bksh->bkgqh", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((B, K, G, bq), NEG_INF, jnp.float32),
+            jnp.zeros((B, K, G, bq), jnp.float32),
+            jnp.zeros((B, K, G, bq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (k, v, jnp.arange(nk)))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _split_blocks(x, block):
+    """(B, S, K, hd) -> (n, B, K, block, hd)"""
+    B, S, K, hd = x.shape
+    n = S // block
+    return jnp.moveaxis(x.reshape(B, n, block, K, hd), (1, 3), (0, 2))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def chunked_attention(q, k, v, causal=True, window=None,
+                      block_q: int = DEFAULT_BLOCK,
+                      block_k: int = DEFAULT_BLOCK):
+    out, _ = _chunked_fwd(q, k, v, causal, window, block_q, block_k)
+    return out
+
+
+def _chunked_fwd(q, k, v, causal, window, block_q, block_k):
+    from repro.kernels.ref import repeat_kv
+    B, S, H, hd = q.shape
+    # GQA via kv repetition: keeps the (possibly sharded) q-head dim
+    # intact instead of reshaping it to (K, G), which would force a
+    # cross-device redistribution whenever K doesn't divide the mesh
+    # axis (EXPERIMENTS.md §Perf iteration 1).
+    k = repeat_kv(k, H // k.shape[2])
+    v = repeat_kv(v, H // v.shape[2])
+    K = H
+    G = 1
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    if S % bq or S % bk:
+        raise ValueError(f"S={S} must be a multiple of blocks {bq}/{bk}")
+    nq = S // bq
+    scale = 1.0 / math.sqrt(hd)
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, K, G, hd), (1, 3, 4), (0, 2, 3)) \
+        .astype(jnp.float32)                       # (nq, B, K, G, bq, hd)
+    kb = _split_blocks(k, bk)
+    vb = _split_blocks(v, bk)
+
+    def per_q(args):
+        qi, iq = args
+        return _fwd_inner(qi, kb, vb, iq * bq, 0, causal, window, scale)
+
+    out_b, lse_b = jax.lax.map(per_q, (qb, jnp.arange(nq)))
+    # (nq, B, K, G, bq, hd) -> (B, S, H, hd)
+    out = jnp.moveaxis(out_b, (0, 2, 3), (1, 3, 4)).reshape(B, S, H, hd)
+    lse = jnp.moveaxis(lse_b, (0, 2, 3), (1, 3, 4)).reshape(B, S, H)
+    return out.astype(q.dtype), lse
+
+
+def _vjp_fwd(q, k, v, causal, window, block_q, block_k):
+    out, lse = _chunked_fwd(q, k, v, causal, window, block_q, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, window, block_q, block_k, res, dout):
+    from repro.kernels.ref import repeat_kv
+    q, k, v, out, lse = res
+    B, S, H, hd = q.shape
+    K_orig = k.shape[2]
+    G_orig = H // K_orig
+    k = repeat_kv(k, G_orig)
+    v = repeat_kv(v, G_orig)
+    K = H
+    G = 1
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    def shape_q(x, last):
+        return jnp.moveaxis(x.reshape(B, nq, bq, K, G, *last),
+                            (1, 3, 4), (0, 2, 3)).astype(jnp.float32)
+
+    qb = shape_q(q, (hd,))                          # (nq,B,K,G,bq,hd)
+    dob = shape_q(dout, (hd,))
+    outb = shape_q(out, (hd,))
+    lseb = shape_q(lse, ())                         # (nq,B,K,G,bq)
+    kb = _split_blocks(k, bk).astype(jnp.float32)   # (nk,B,K,bk,hd)
+    vb = _split_blocks(v, bk).astype(jnp.float32)
+    delta = jnp.sum(dob * outb, axis=-1)            # (nq,B,K,G,bq)
+
+    def scores(qi, kj, iq, ik):
+        s = jnp.einsum("bkgqh,bksh->bkgqs", qi, kj) * scale
+        qpos = iq * bq + jnp.arange(bq)
+        kpos = ik * bk + jnp.arange(bk)
+        msk = _mask(qpos[None, None, None], kpos[None, None, None],
+                    causal, window)
+        return jnp.where(msk, s, NEG_INF), msk
+
+    # dq: per q block, scan kv blocks
+    def dq_one(args):
+        qi, doi, lsei, di, iq = args
+
+        def body(dq, kv):
+            kj, vj, ik = kv
+            s, msk = scores(qi, kj, iq, ik)
+            p = jnp.where(msk, jnp.exp(s - lsei[..., None]), 0.0)
+            dp = jnp.einsum("bkgqh,bksh->bkgqs", doi, vj)
+            ds = p * (dp - di[..., None]) * scale
+            return dq + jnp.einsum("bkgqs,bksh->bkgqh", ds, kj), None
+
+        dq0 = jnp.zeros_like(qi)
+        dq, _ = jax.lax.scan(body, dq0, (kb, vb, jnp.arange(nk)))
+        return dq
+
+    dqb = jax.lax.map(dq_one, (qb, dob, lseb, delta, jnp.arange(nq)))
+
+    # dk, dv: per kv block, scan q blocks
+    def dkv_one(args):
+        kj, vj, ik = args
+
+        def body(carry, qs):
+            dk, dv = carry
+            qi, doi, lsei, di, iq = qs
+            s, msk = scores(qi, kj, iq, ik)
+            p = jnp.where(msk, jnp.exp(s - lsei[..., None]), 0.0)
+            dv = dv + jnp.einsum("bkgqs,bkgqh->bksh", p, doi)
+            dp = jnp.einsum("bkgqh,bksh->bkgqs", doi, vj)
+            ds = p * (dp - di[..., None]) * scale
+            dk = dk + jnp.einsum("bkgqs,bkgqh->bksh", ds, qi)
+            return (dk, dv), None
+
+        init = (jnp.zeros_like(kj), jnp.zeros_like(vj))
+        (dk, dv), _ = jax.lax.scan(
+            body, init, (qb, dob, lseb, delta, jnp.arange(nq)))
+        return dk, dv
+
+    dkb, dvb = jax.lax.map(dkv_one, (kb, vb, jnp.arange(nk)))
+
+    dq = jnp.moveaxis(dqb, (0, 2, 3), (1, 3, 4)).reshape(B, S, H, hd)
+
+    def unsplit(x):
+        full = jnp.moveaxis(x, (0, 2), (1, 3)).reshape(B, S, H, hd)
+        if G_orig == 1:
+            return full
+        # reduce repeated-kv gradients back onto the true kv heads
+        return full.reshape(B, S, K_orig, G_orig, hd).sum(axis=3)
+
+    return (dq.astype(q.dtype), unsplit(dkb).astype(k.dtype),
+            unsplit(dvb).astype(v.dtype))
+
+
+chunked_attention.defvjp(_vjp_fwd, _vjp_bwd)

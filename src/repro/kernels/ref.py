@@ -1,0 +1,137 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernel tests assert against
+(``interpret=True`` sweeps) and the default implementation on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Attention (training / prefill): GQA, causal and/or sliding window.
+# q: (B, Sq, H, hd)  k, v: (B, Skv, K, hd) with H % K == 0.
+# ----------------------------------------------------------------------
+def repeat_kv(k, n: int):
+    """(B, S, K, hd) -> (B, S, K*n, hd).  GQA via kv repetition: the
+    sharded q-head dimension stays intact (no (K, G) reshape, which
+    would redistribute a head-sharded tensor across devices)."""
+    if n == 1:
+        return k
+    B, S, K, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, K, n, hd)) \
+        .reshape(B, S, K * n, hd)
+
+
+def attention(q, k, v, *, q_positions=None, kv_positions=None,
+              causal=True, window=None):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    k = repeat_kv(k, H // K)
+    v = repeat_kv(v, H // K)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(k.shape[1]), (B, k.shape[1]))
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    qp = q_positions[:, None, :, None]
+    kp = kv_positions[:, None, None, :]
+    mask = jnp.ones_like(scores, dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Decode attention: one query token vs a cache, with validity mask.
+# ----------------------------------------------------------------------
+def decode_attention(q, k, v, valid):
+    """q: (B,1,H,hd); k,v: (B,S,K,hd); valid: (S,) bool."""
+    o, m, l = decode_attention_partials(q, k, v, valid)
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def decode_attention_partials(q, k, v, valid):
+    """Unnormalized flash partials (o, m, l) for cross-shard combining.
+
+    Grouped formulation (no kv broadcast): in decode q is tiny and
+    kept replicated, so reshaping its head dim is free, while
+    broadcasting the seq-sharded cache to H heads would force XLA to
+    all-gather it (EXPERIMENTS.md §Perf iteration 6)."""
+    B, _, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qh = q.reshape(B, K, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)                      # (B,K,G)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)                           # (B,K,G)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return (o.reshape(B, 1, H, hd), m.reshape(B, 1, H),
+            l.reshape(B, 1, H))
+
+
+# ----------------------------------------------------------------------
+# RWKV6 "wkv" linear-attention scan with data-dependent decay (Finch).
+#   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+#   o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+# r,k,w: (B, S, Hd, hd); v: (B, S, H, hd); u: (H, hd); per-head state
+# S: (B, H, hd, hd).
+# ----------------------------------------------------------------------
+def wkv6(r, k, v, w, u, state=None):
+    B, S, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S_prev, inp):
+        rt, kt, vt, wt = inp                       # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,hd,hd)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S_prev + u[None, :, :, None] * kv)
+        S_new = wt[..., :, None] * S_prev + kv
+        return S_new, o
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), state
+
+
+# ----------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin):
+#   a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))
+#   h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+# x, r_gate, i_gate: (B, S, W); lam: (W,); h: (B, W).
+# ----------------------------------------------------------------------
+RGLRU_C = 8.0
+
+
+def rglru(x, r_gate, i_gate, lam, h0=None):
+    B, S, W = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), jnp.float32)
+    log_a_base = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32))
+
+    def step(h, inp):
+        xt, rt, it = inp
+        log_a = log_a_base * jax.nn.sigmoid(rt)
+        a = jnp.exp(log_a)
+        gated = jax.nn.sigmoid(it) * xt
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h_new = a * h + mult * gated
+        return h_new, h_new
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (x, r_gate, i_gate))
+    h, out = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(out, 0, 1).astype(x.dtype), h

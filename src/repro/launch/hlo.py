@@ -1,0 +1,171 @@
+"""HLO text analysis: collective-bytes extraction with while-loop
+trip-count scaling.
+
+``compiled.cost_analysis()`` visits a ``while`` body once, so any
+collective (or flop) inside the layer scan is under-counted by the
+trip count.  We therefore parse the optimized HLO:
+
+* find every computation that is referenced as a ``while`` body,
+* sum the result bytes of every collective op per computation,
+* scale loop-body computations by the known scan trip count
+  (``num_units`` for the layer scan of this framework's models).
+
+This gives the ``collective_bytes`` term of the roofline.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->", re.M)
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum bytes of every dtype[dims] occurrence in ``text``."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    count_by_op: dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def to_dict(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "total_count": self.total_count,
+                "bytes_by_op": dict(self.bytes_by_op),
+                "count_by_op": dict(self.count_by_op)}
+
+
+def split_computations(hlo: str) -> dict[str, str]:
+    """Split HLO module text into named computation bodies."""
+    comps: dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        if line and not line[0].isspace() and ("->" in line or
+                                               line.startswith("ENTRY")):
+            if cur_name:
+                comps[cur_name] = "\n".join(cur_lines)
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", line.strip())
+            cur_name = "ENTRY" if line.startswith("ENTRY") else \
+                (m.group(1) if m else None)
+            cur_lines = [line]
+        elif cur_name:
+            cur_lines.append(line)
+    if cur_name:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def while_bodies(hlo: str) -> set[str]:
+    return set(_BODY_RE.findall(hlo))
+
+
+_WHILE_RE = re.compile(r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*"
+                       r"body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _trip_count(cond_body: str, default: int) -> int:
+    """Scan-generated while conditions compare the induction variable
+    against a constant trip count; take the largest s32 constant."""
+    consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    return max(consts) if consts else default
+
+
+def computation_multipliers(hlo: str, default_trip: int = 1) -> dict[str, int]:
+    """Execution-count multiplier per computation: while bodies run
+    trip-count times (nested loops multiply); fusions/calls inherit
+    their caller's multiplier."""
+    comps = split_computations(hlo)
+    mult: dict[str, int] = {name: 1 for name in comps}
+
+    # iterate to fixpoint (call graphs are shallow)
+    for _ in range(6):
+        changed = False
+        for name, body in comps.items():
+            m = mult.get(name, 1)
+            # whiles inside this computation
+            for cond, wbody in _WHILE_RE.findall(body):
+                trip = _trip_count(comps.get(cond, ""), default_trip)
+                new = m * max(trip, 1)
+                if wbody in mult and new > mult[wbody]:
+                    mult[wbody] = new
+                    changed = True
+                if cond in mult and m > mult[cond]:
+                    mult[cond] = m
+                    changed = True
+            # plain calls / fusions inherit the caller's multiplier
+            # (while bodies already carry m*trip >= m, so max() keeps it)
+            for callee in _CALLS_RE.findall(body):
+                if callee in mult and m > mult[callee]:
+                    mult[callee] = m
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _comp_collectives(body: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in body.splitlines():
+        for op in COLLECTIVE_OPS:
+            # match "op(" and "op-start(" but not "-done(" (the -done
+            # half of an async pair carries the same bytes; count once)
+            if f" {op}(" in line or f" {op}-start(" in line:
+                # result type sits between '=' and the op name:
+                #   %name = bf16[16,1152]{1,0} all-gather(...)
+                rhs = line.split("=", 1)[1] if "=" in line else line
+                result_ty = rhs.split(op)[0]
+                stats.bytes_by_op[op] += _shape_bytes(result_ty)
+                stats.count_by_op[op] += 1
+                break
+    return stats
+
+
+def collective_stats(hlo: str, loop_trip_count: int = 1) -> CollectiveStats:
+    """Aggregate collective bytes over the module, scaling each
+    computation by its execution count (parsed while trip counts;
+    ``loop_trip_count`` is the fallback for conditions whose constant
+    cannot be recovered)."""
+    comps = split_computations(hlo)
+    mults = computation_multipliers(hlo, default_trip=loop_trip_count)
+
+    total = CollectiveStats()
+    for name, body in comps.items():
+        st = _comp_collectives(body)
+        mult = mults.get(name, 1)
+        for op, b in st.bytes_by_op.items():
+            total.bytes_by_op[op] += b * mult
+            total.count_by_op[op] += st.count_by_op[op] * mult
+    return total

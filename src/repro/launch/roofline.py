@@ -1,0 +1,118 @@
+"""Roofline report generator: results/dryrun/*.json -> markdown tables
+for EXPERIMENTS.md (§Dry-run + §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.core.hardware import (V5E_HBM_BW, V5E_ICI_BW_PER_LINK,
+                                 V5E_PEAK_FLOPS_BF16)
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+OUT = Path(__file__).resolve().parents[3] / "results" / "roofline.md"
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def terms(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    ana = rec["analytic"]
+    coll = (rec.get("collectives") or {}).get("total_bytes", 0.0)
+    t = {
+        "compute": ana["flops"] / (chips * V5E_PEAK_FLOPS_BF16),
+        "memory": ana["hbm_bytes"] / (chips * V5E_HBM_BW),
+        "collective": coll / V5E_ICI_BW_PER_LINK,
+    }
+    dom = max(t, key=lambda k: t[k])
+    bound = t[dom]
+    mfu = (ana["model_flops"] / (chips * V5E_PEAK_FLOPS_BF16)
+           / max(bound, 1e-12))
+    return {**t, "dominant": dom, "bound": bound, "mfu": mfu,
+            "useful": (ana["model_flops"] / ana["flops"]
+                       if ana["flops"] else 0.0)}
+
+
+def load(results_dir: Path = RESULTS) -> list[dict]:
+    recs = []
+    for p in sorted(results_dir.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            r["_terms"] = terms(r)
+            recs.append(r)
+    return recs
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:9.2f}"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | compile s | temp GB/dev | arg GB/dev "
+             "| HLO collective GB | #coll ops |",
+             "|---|---|---|---:|---:|---:|---:|---:|"]
+    for r in recs:
+        mem = r.get("memory") or {}
+        c = r.get("collectives") or {}
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('compile_s', 0):.0f} "
+            f"| {(mem.get('temp_bytes') or 0) / 1e9:.2f} "
+            f"| {(mem.get('argument_bytes') or 0) / 1e9:.2f} "
+            f"| {(c.get('total_bytes') or 0) / 1e9:.2f} "
+            f"| {c.get('total_count', 0)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    lines = ["| arch | shape | compute ms | memory ms | collective ms "
+             "| dominant | MFU@bound | useful FLOPs |",
+             "|---|---|---:|---:|---:|---|---:|---:|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        t = r["_terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {fmt_ms(t['compute'])} | {fmt_ms(t['memory'])} "
+            f"| {fmt_ms(t['collective'])} | **{t['dominant']}** "
+            f"| {t['mfu']:.3f} | {t['useful']:.2f} |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(recs: list[dict]) -> list[dict]:
+    """worst roofline fraction / most collective-bound / most
+    paper-representative (see EXPERIMENTS.md)."""
+    pod = [r for r in recs if r["mesh"] == "16x16"]
+    worst_mfu = min((r for r in pod if r["shape"] == "train_4k"),
+                    key=lambda r: r["_terms"]["mfu"], default=None)
+    most_coll = max(pod, key=lambda r: r["_terms"]["collective"],
+                    default=None)
+    return [worst_mfu, most_coll]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results-dir", default=str(RESULTS))
+    ap.add_argument("--write", action="store_true")
+    ap.add_argument("--out", default=str(OUT))
+    args = ap.parse_args(argv)
+    recs = load(Path(args.results_dir))
+    doc = ["# Dry-run artifacts", "", dryrun_table(recs), "",
+           "# Roofline (single pod, 16x16 = 256 chips)", "",
+           roofline_table(recs, "16x16"), "",
+           "# Roofline (multi-pod, 2x16x16 = 512 chips)", "",
+           roofline_table(recs, "2x16x16"), ""]
+    text = "\n".join(doc)
+    print(text)
+    if args.write:
+        out = Path(args.out)
+        out.write_text(text)
+        print(f"\nwrote {out}")
+
+
+if __name__ == "__main__":
+    main()

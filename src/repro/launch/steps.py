@@ -1,0 +1,163 @@
+"""Step builders: train_step / prefill_step / serve_step per
+architecture family, plus ShapeDtypeStruct input specs for each
+assigned input shape — the pieces the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.optim.sgd import Optimizer, global_norm
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.arch_type == "audio":
+        return ED.init_encdec(cfg, key)
+    return T.init_lm(cfg, key)
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ----------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ----------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+        if cfg.arch_type == "audio":
+            specs["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        if cfg.arch_type == "vlm":
+            specs["images"] = sds((B, cfg.num_image_tokens, cfg.d_model),
+                                  cfg.dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.arch_type == "audio":
+            specs["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+        if cfg.arch_type == "vlm":
+            specs["images"] = sds((B, cfg.num_image_tokens, cfg.d_model),
+                                  cfg.dtype)
+        return specs
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            functools.partial(T.init_cache, cfg, B, S))
+        specs = {"token": sds((B,), jnp.int32),
+                 "pos": sds((), jnp.int32),
+                 "cache": cache}
+        if cfg.arch_type == "audio":
+            specs["encoder_states"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                          cfg.dtype)
+        if cfg.arch_type == "vlm":
+            specs["images"] = sds((B, cfg.num_image_tokens, cfg.d_model),
+                                  cfg.dtype)
+        return specs
+    raise ValueError(shape.kind)
+
+
+def _encoder_input(cfg: ModelConfig, batch: dict):
+    if cfg.arch_type == "vlm":
+        return batch["images"]
+    return None
+
+
+# ----------------------------------------------------------------------
+# Steps
+# ----------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    remat: bool = True, accum_steps: int = 1):
+    """SPMD train step: loss -> grads -> optimizer update.  Collective
+    placement is XLA's (the production runtime); the paper's explicit
+    policies live in ``repro.comm.ddp``.
+
+    ``accum_steps > 1`` splits the per-step batch into microbatches
+    scanned with f32 gradient accumulation — live activation memory
+    divides by ``accum_steps`` while the gradient-sync volume is
+    unchanged (EXPERIMENTS.md §Perf iteration 3).
+    """
+
+    def loss_of(p, batch):
+        if cfg.arch_type == "audio":
+            return ED.loss_fn(cfg, p, batch["frames"], batch["tokens"],
+                              batch["labels"], remat=remat)
+        return T.loss_fn(cfg, p, batch["tokens"], batch["labels"],
+                         encoder_out=_encoder_input(cfg, batch),
+                         remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (total, metrics), grads = jax.value_and_grad(
+                lambda p: loss_of(p, batch), has_aux=True)(params)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+
+            def mb_body(carry, mbatch):
+                gsum, tot_sum, loss_sum, aux_sum = carry
+                (tot, m), g = jax.value_and_grad(
+                    lambda p: loss_of(p, mbatch), has_aux=True)(params)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, tot_sum + tot, loss_sum + m["loss"],
+                        aux_sum + m["moe_aux"]), None
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero = jnp.zeros((), jnp.float32)
+            (gsum, tot, loss, aux), _ = jax.lax.scan(
+                mb_body, (gzero, zero, zero, zero), micro)
+            inv = 1.0 / accum_steps
+            grads = jax.tree_util.tree_map(lambda g: g * inv, gsum)
+            total, metrics = tot * inv, {"loss": loss * inv,
+                                         "moe_aux": aux * inv}
+
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        out = {"total_loss": total, "loss": metrics["loss"],
+               "moe_aux": metrics["moe_aux"], "grad_norm": global_norm(grads)}
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        if cfg.arch_type == "audio":
+            logits, _ = ED.forward(cfg, params, batch["frames"],
+                                   batch["tokens"])
+        else:
+            logits, _ = T.forward(cfg, params, batch["tokens"],
+                                  encoder_out=_encoder_input(cfg, batch))
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, seq_axis: str | None = None):
+    """One-token decode against a seq_len cache."""
+
+    def serve_step(params, batch):
+        cache, token, pos = batch["cache"], batch["token"], batch["pos"]
+        if cfg.arch_type == "audio":
+            logits, new_cache = ED.decode_step(cfg, params, cache,
+                                               batch["encoder_states"],
+                                               token, pos)
+        else:
+            logits, new_cache = T.decode_step(
+                cfg, params, cache, token, pos,
+                encoder_out=_encoder_input(cfg, batch), seq_axis=seq_axis)
+        return logits, new_cache
+
+    return serve_step

@@ -1,0 +1,173 @@
+"""GQA attention: projections, RoPE, masks, KV caches, and a
+shard_map'd distributed flash-decode for sequence-sharded caches.
+
+The inner attention math lives in :mod:`repro.kernels.ops` so the
+Pallas flash kernel and the pure-jnp reference are interchangeable.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops as kops
+from repro.models.common import (ModelConfig, Params, apply_rope, dense_init,
+                                 split_keys)
+from repro.models.sharding import constrain
+
+
+# ----------------------------------------------------------------------
+# Params
+# ----------------------------------------------------------------------
+def init_attention(cfg: ModelConfig, key, cross: bool = False,
+                   kv_d_model: int | None = None) -> Params:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.head_size
+    kv_d = kv_d_model or d
+    ks = split_keys(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], (d, H, hd), cfg.dtype, in_axis_size=d),
+        "wk": dense_init(ks[1], (kv_d, K, hd), cfg.dtype, in_axis_size=kv_d),
+        "wv": dense_init(ks[2], (kv_d, K, hd), cfg.dtype, in_axis_size=kv_d),
+        "wo": dense_init(ks[3], (H, hd, d), cfg.dtype, in_axis_size=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), cfg.dtype)
+        p["bk"] = jnp.zeros((K, hd), cfg.dtype)
+        p["bv"] = jnp.zeros((K, hd), cfg.dtype)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array,
+                 kv_src: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+# ----------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ----------------------------------------------------------------------
+def attention_fwd(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                       # (B, S, d)
+    positions: jax.Array,               # (B, S)
+    *,
+    causal: bool = True,
+    window: int | None = None,          # sliding window for 'L' blocks
+    kv_src: jax.Array | None = None,    # cross-attention source (B, S_kv, d_kv)
+    kv_positions: jax.Array | None = None,
+    use_rope: bool = True,
+    impl: str = "auto",
+) -> jax.Array:
+    cross = kv_src is not None
+    src = kv_src if cross else x
+    q, k, v = _project_qkv(cfg, p, x, src)
+    if use_rope and not cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions if kv_positions is None else kv_positions,
+                       cfg.rope_theta)
+    kpos = kv_positions if kv_positions is not None else positions
+    out = kops.attention(q, k, v,
+                         q_positions=positions, kv_positions=kpos,
+                         causal=causal and not cross, window=window,
+                         impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ----------------------------------------------------------------------
+# KV-cache decode (serve_step): one token against a seq_len cache
+# ----------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int,
+                  window: int | None = None) -> Params:
+    S = min(seq_len, window) if window else seq_len
+    K, hd = cfg.kv_heads, cfg.head_size
+    return {"k": jnp.zeros((batch, S, K, hd), cfg.dtype),
+            "v": jnp.zeros((batch, S, K, hd), cfg.dtype)}
+
+
+def decode_attention(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                  # (B, 1, d)
+    cache: Params,                 # {"k","v"}: (B, S_cache, K, hd)
+    pos: jax.Array,                # scalar int32: index of the new token
+    *,
+    window: int | None = None,
+    use_rope: bool = True,
+    seq_axis: str | None = None,
+) -> tuple[jax.Array, Params]:
+    """One decode step.  The cache may be a ring buffer (``window``) or
+    the full sequence; when ``seq_axis`` is given the cache's sequence
+    dimension is sharded over that mesh axis and attention combines
+    per-shard flash partials with collectives (distributed
+    flash-decode — used by the 500k-token shape)."""
+    q, k_new, v_new = _project_qkv(cfg, p, x, x)
+    if use_rope:
+        posb = jnp.broadcast_to(pos[None, None], (x.shape[0], 1))
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k_new = apply_rope(k_new, posb, cfg.rope_theta)
+
+    cache_len = cache["k"].shape[1]
+    # Windowed 'L' blocks keep a ring buffer of the last ``window``
+    # tokens; full-attention blocks index the absolute position.
+    slot = pos % cache_len if window else pos
+
+    # Decode activations are tiny (one token); force them replicated
+    # over the model axis so the *sequence-sharded* cache layout wins —
+    # otherwise XLA head-shards q and all-gathers the full f32 cache
+    # per layer (measured 103 GB/step on internlm2; EXPERIMENTS.md
+    # §Perf iteration 6).
+    q = constrain(q, "batch", None, None, None)
+    k_new = constrain(k_new, "batch", None, None, None)
+    v_new = constrain(v_new, "batch", None, None, None)
+
+    if seq_axis is None:
+        # One-hot write instead of dynamic_update_slice: a DUS at a
+        # *dynamic* index along the sequence dim forces XLA to
+        # all-gather a sequence-sharded cache (measured 103 GB/step);
+        # the where() is elementwise and stays local on every shard.
+        kv_idx = jnp.arange(cache_len)
+        onehot = (kv_idx == slot)[None, :, None, None]
+        k = jnp.where(onehot, k_new.astype(cache["k"].dtype), cache["k"])
+        v = jnp.where(onehot, v_new.astype(cache["v"].dtype), cache["v"])
+        if window:
+            valid = (kv_idx <= slot) | (pos >= cache_len)
+        else:
+            valid = kv_idx <= pos
+        out = kops.decode_attention(q, k, v, valid)
+        new_cache = {"k": k, "v": v}
+    else:
+        out, new_cache = _decode_attention_seq_sharded(
+            q, k_new, v_new, cache, pos, seq_axis)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def _decode_attention_seq_sharded(q, k_new, v_new, cache, pos, seq_axis):
+    """Body is called inside shard_map: cache holds a contiguous slice of
+    the sequence; combine flash partials with pmax/psum over seq_axis."""
+    S_loc = cache["k"].shape[1]
+    shard = jax.lax.axis_index(seq_axis)
+    offset = shard * S_loc
+    # write the new kv into the owning shard's slot
+    slot = pos - offset
+    in_shard = (slot >= 0) & (slot < S_loc)
+    slot_c = jnp.clip(slot, 0, S_loc - 1)
+    k_upd = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot_c, axis=1)
+    v_upd = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot_c, axis=1)
+    k = jnp.where(in_shard, k_upd, cache["k"])
+    v = jnp.where(in_shard, v_upd, cache["v"])
+    valid = (jnp.arange(S_loc) + offset) <= pos
+    # local flash partials
+    o, m, l = kops.decode_attention_partials(q, k, v, valid)
+    m_glob = jax.lax.pmax(m, seq_axis)
+    scale = jnp.exp(m - m_glob)
+    o = jax.lax.psum(o * scale[..., None], seq_axis)
+    l = jax.lax.psum(l * scale, seq_axis)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype), {"k": k, "v": v}

@@ -1,0 +1,145 @@
+"""The paper's CNN workloads (Table IV) as real JAX models.
+
+AlexNet and ResNet are built as *lists of named layers* so the trace
+generator (:mod:`repro.traces.generate`) can time each layer's forward
+and backward separately — reproducing exactly the layer-wise
+methodology behind the paper's Table VI traces, but on this machine.
+
+These run at reduced resolution/batch on CPU for trace generation; the
+analytic FLOPs tables in :mod:`repro.core.costmodel` carry the
+full-size ImageNet numbers.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_keys
+from repro.traces.generate import TimedLayer
+
+
+def _conv_apply(stride: int, padding: str = "SAME"):
+    def apply(p, x):
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(stride, stride), padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(y + p["b"])
+    return apply
+
+
+def _conv_init(key, kh, cin, cout, dtype=jnp.float32):
+    return {"w": dense_init(key, (kh, kh, cin, cout), dtype,
+                            in_axis_size=kh * kh * cin),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def _maxpool(window: int, stride: int):
+    def apply(_p, x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+            (1, stride, stride, 1), "VALID")
+    return apply
+
+
+def _fc_apply(relu: bool = True):
+    def apply(p, x):
+        x = x.reshape(x.shape[0], -1)
+        y = x @ p["w"] + p["b"]
+        return jax.nn.relu(y) if relu else y
+    return apply
+
+
+def _fc_init(key, nin, nout, dtype=jnp.float32):
+    return {"w": dense_init(key, (nin, nout), dtype), "b": jnp.zeros((nout,), dtype)}
+
+
+# ----------------------------------------------------------------------
+# AlexNet (LRN excluded, per the paper).  ``scale`` shrinks the spatial
+# resolution for CPU trace generation (scale=1 -> 224x224 ImageNet).
+# ----------------------------------------------------------------------
+def alexnet_timed_layers(key, input_hw: int = 224, scale: int = 1,
+                         num_classes: int = 1000) -> tuple[list[TimedLayer], jax.Array]:
+    hw = input_hw // scale
+    ks = split_keys(key, 8)
+    layers = [
+        TimedLayer("conv1", _conv_apply(4, "VALID"), _conv_init(ks[0], 11, 3, 96)),
+        TimedLayer("pool1", _maxpool(3, 2), {}),
+        TimedLayer("conv2", _conv_apply(1), _conv_init(ks[1], 5, 96, 256)),
+        TimedLayer("pool2", _maxpool(3, 2), {}),
+        TimedLayer("conv3", _conv_apply(1), _conv_init(ks[2], 3, 256, 384)),
+        TimedLayer("conv4", _conv_apply(1), _conv_init(ks[3], 3, 384, 384)),
+        TimedLayer("conv5", _conv_apply(1), _conv_init(ks[4], 3, 384, 256)),
+        TimedLayer("pool5", _maxpool(3, 2), {}),
+    ]
+    # infer the flattened size by tracing shapes
+    x = jnp.zeros((1, hw, hw, 3), jnp.float32)
+    for l in layers:
+        x = jax.eval_shape(l.apply, l.params, x)
+        x = jnp.zeros(x.shape, x.dtype)
+    flat = int(jnp.prod(jnp.array(x.shape[1:])))
+    layers += [
+        TimedLayer("fc6", _fc_apply(), _fc_init(ks[5], flat, 4096)),
+        TimedLayer("fc7", _fc_apply(), _fc_init(ks[6], 4096, 4096)),
+        TimedLayer("fc8", _fc_apply(relu=False), _fc_init(ks[7], 4096, num_classes)),
+    ]
+    return layers, jnp.zeros((1, hw, hw, 3), jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# ResNet (bottleneck): each residual block is one timed "layer", the
+# granularity of the paper's ResNet-50 traces.  depth_per_stage=(3,4,6,3)
+# is ResNet-50; smaller settings give CPU-sized variants.
+# ----------------------------------------------------------------------
+def _bottleneck_init(key, cin, mid, cout, stride):
+    ks = split_keys(key, 4)
+    p = {"c1": _conv_init(ks[0], 1, cin, mid),
+         "c2": _conv_init(ks[1], 3, mid, mid),
+         "c3": _conv_init(ks[2], 1, mid, cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(ks[3], 1, cin, cout)
+    return p
+
+
+def _bottleneck_apply(stride: int):
+    def apply(p, x):
+        y = _conv_apply(1)(p["c1"], x)
+        y = _conv_apply(stride)(p["c2"], y)
+        y = jax.lax.conv_general_dilated(
+            y, p["c3"]["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["c3"]["b"]
+        if "proj" in p:
+            x = jax.lax.conv_general_dilated(
+                x, p["proj"]["w"], (stride, stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["proj"]["b"]
+        return jax.nn.relu(x + y)
+    return apply
+
+
+def resnet_timed_layers(key, input_hw: int = 224,
+                        depth_per_stage: Sequence[int] = (3, 4, 6, 3),
+                        width: int = 64, num_classes: int = 1000,
+                        ) -> tuple[list[TimedLayer], jax.Array]:
+    ks = split_keys(key, sum(depth_per_stage) + 2)
+    ki = iter(ks)
+    layers = [TimedLayer("conv1", _conv_apply(2), _conv_init(next(ki), 7, 3, width)),
+              TimedLayer("pool1", _maxpool(3, 2), {})]
+    cin = width
+    for stage, blocks in enumerate(depth_per_stage):
+        mid = width * (2 ** stage)
+        cout = mid * 4
+        for b in range(blocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            layers.append(TimedLayer(
+                f"res{stage + 2}{chr(ord('a') + b)}",
+                _bottleneck_apply(stride),
+                _bottleneck_init(next(ki), cin, mid, cout, stride)))
+            cin = cout
+
+    def pool_fc_apply(p, x):
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ p["w"] + p["b"]
+
+    layers.append(TimedLayer("fc", pool_fc_apply, _fc_init(next(ki), cin, num_classes)))
+    return layers, jnp.zeros((1, input_hw, input_hw, 3), jnp.float32)

@@ -1,0 +1,71 @@
+"""Encoder-decoder (whisper-style): bidirectional encoder over stub
+frame embeddings + cross-attending decoder.
+
+The audio frontend (mel-spectrogram + conv downsampling) is a STUB per
+the assignment: ``input_specs`` provides precomputed frame embeddings
+(B, encoder_seq, d_model); this module implements the transformer
+backbone that consumes them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import blocks as B
+from repro.models import transformer as T
+from repro.models.common import (ModelConfig, Params, apply_norm, dense_init,
+                                 init_norm, split_keys)
+
+
+def init_encoder(cfg: ModelConfig, key) -> Params:
+    ks = split_keys(key, cfg.encoder_layers + 1)
+    layers = []
+    for i in range(cfg.encoder_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({"norm1": init_norm(cfg),
+                       "attn": attn.init_attention(cfg, k1),
+                       "norm2": init_norm(cfg),
+                       "mlp": B.init_mlp(cfg, k2)})
+    return {"layers": layers, "final_norm": init_norm(cfg)}
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder states."""
+    x = frames
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    for lp in params["layers"]:
+        h = apply_norm(cfg, lp["norm1"], x)
+        x = x + attn.attention_fwd(cfg, lp["attn"], h, positions, causal=False)
+        h = apply_norm(cfg, lp["norm2"], x)
+        x = x + B.mlp_apply(cfg, lp["mlp"], h)
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def init_encdec(cfg: ModelConfig, key) -> Params:
+    k_enc, k_dec = jax.random.split(key)
+    return {"encoder": init_encoder(cfg, k_enc),
+            "decoder": T.init_lm(cfg, k_dec)}
+
+
+def forward(cfg: ModelConfig, params: Params, frames: jax.Array,
+            tokens: jax.Array, *, remat: bool = False):
+    """Full enc-dec forward: (frames, decoder tokens) -> logits."""
+    enc = encode(cfg, params["encoder"], frames)
+    return T.forward(cfg, params["decoder"], tokens, encoder_out=enc,
+                     remat=remat)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, frames: jax.Array,
+            tokens: jax.Array, labels: jax.Array, *, remat: bool = False):
+    enc = encode(cfg, params["encoder"], frames)
+    return T.loss_fn(cfg, params["decoder"], tokens, labels,
+                     encoder_out=enc, remat=remat)
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                encoder_states: jax.Array, token: jax.Array, pos: jax.Array):
+    """Serve step: encoder states are computed once at request admission
+    and threaded through decode."""
+    return T.decode_step(cfg, params["decoder"], cache, token, pos,
+                         encoder_out=encoder_states)

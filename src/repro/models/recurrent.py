@@ -1,0 +1,156 @@
+"""Recurrent blocks: RWKV6 (Finch) time/channel mix and the
+RecurrentGemma RG-LRU block.  Sequence scans run through
+:mod:`repro.kernels.ops` (Pallas on TPU, jnp reference elsewhere).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.common import ModelConfig, Params, dense_init, split_keys
+
+
+# ----------------------------------------------------------------------
+# RWKV6 — time mix (wkv with data-dependent decay) + channel mix.
+# Heads of size 64, as in the released models.
+# ----------------------------------------------------------------------
+RWKV_HEAD_DIM = 64
+
+
+def rwkv_heads(cfg: ModelConfig) -> int:
+    assert cfg.d_model % RWKV_HEAD_DIM == 0
+    return cfg.d_model // RWKV_HEAD_DIM
+
+
+def init_rwkv_time_mix(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    H = rwkv_heads(cfg)
+    ks = split_keys(key, 8)
+    return {
+        # token-shift interpolation weights (one per projection)
+        "mu": jnp.full((5, d), 0.5, cfg.dtype),        # r,k,v,w,g
+        "wr": dense_init(ks[0], (d, d), cfg.dtype),
+        "wk": dense_init(ks[1], (d, d), cfg.dtype),
+        "wv": dense_init(ks[2], (d, d), cfg.dtype),
+        "ww": dense_init(ks[3], (d, d), cfg.dtype),    # data-dependent decay
+        "wg": dense_init(ks[4], (d, d), cfg.dtype),
+        "w_bias": jnp.full((d,), -6.0, jnp.float32),   # decay bias (slow)
+        "u": dense_init(ks[5], (H, RWKV_HEAD_DIM), jnp.float32),  # bonus
+        "wo": dense_init(ks[6], (d, d), cfg.dtype),
+        "ln_scale": jnp.ones((d,), jnp.float32),       # group-norm on heads
+    }
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: Params, x: jax.Array,
+                  state: Params | None = None,
+                  prev_x: jax.Array | None = None,
+                  ) -> tuple[jax.Array, Params]:
+    """x: (B,S,d).  ``state`` = {"S": (B,H,hd,hd), "x_prev": (B,d)} for
+    chunked/decode operation; None = fresh sequence."""
+    B, S, d = x.shape
+    H = rwkv_heads(cfg)
+    hd = RWKV_HEAD_DIM
+    xp = state["x_prev"][:, None, :] if state is not None else \
+        jnp.zeros((B, 1, d), x.dtype)
+    x_shift = jnp.concatenate([xp, x[:, :-1]], axis=1)    # token shift
+
+    def lerp(i):
+        return x + (x_shift - x) * p["mu"][i]
+
+    r = jnp.einsum("bsd,de->bse", lerp(0), p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", lerp(1), p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", lerp(2), p["wv"]).reshape(B, S, H, hd)
+    w_raw = jnp.einsum("bsd,de->bse", lerp(3), p["ww"]).astype(jnp.float32)
+    g = jnp.einsum("bsd,de->bse", lerp(4), p["wg"])
+    # decay in (0,1), data-dependent (the Finch contribution)
+    w = jnp.exp(-jnp.exp(w_raw + p["w_bias"])).reshape(B, S, H, hd)
+
+    S0 = state["S"] if state is not None else None
+    out, S_new = kops.wkv6(r, k, v, w.astype(r.dtype), p["u"], state=S0)
+    out = out.reshape(B, S, d)
+    # simple per-head group norm
+    of = out.astype(jnp.float32).reshape(B, S, H, hd)
+    of = of * jax.lax.rsqrt(jnp.mean(of * of, axis=-1, keepdims=True) + 1e-6)
+    out = (of.reshape(B, S, d) * p["ln_scale"]).astype(x.dtype)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", out, p["wo"])
+    new_state = {"S": S_new, "x_prev": x[:, -1, :]}
+    return out, new_state
+
+
+def init_rwkv_channel_mix(cfg: ModelConfig, key) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = split_keys(key, 3)
+    return {
+        "mu": jnp.full((2, d), 0.5, cfg.dtype),
+        "wk": dense_init(ks[0], (d, ff), cfg.dtype),
+        "wv": dense_init(ks[1], (ff, d), cfg.dtype, in_axis_size=ff),
+        "wr": dense_init(ks[2], (d, d), cfg.dtype),
+    }
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: Params, x: jax.Array,
+                     x_prev: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    B, S, d = x.shape
+    xp = x_prev[:, None, :] if x_prev is not None else jnp.zeros((B, 1, d), x.dtype)
+    x_shift = jnp.concatenate([xp, x[:, :-1]], axis=1)
+    xk = x + (x_shift - x) * p["mu"][0]
+    xr = x + (x_shift - x) * p["mu"][1]
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]).astype(jnp.float32))
+    out = r.astype(x.dtype) * jnp.einsum("bsf,fd->bsd", kk, p["wv"])
+    return out, x[:, -1, :]
+
+
+# ----------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma): proj-in (x2), conv1d, RG-LRU, gated out.
+# ----------------------------------------------------------------------
+def init_rglru_block(cfg: ModelConfig, key) -> Params:
+    d, W = cfg.d_model, cfg.rnn_size
+    ks = split_keys(key, 6)
+    return {
+        "w_in_x": dense_init(ks[0], (d, W), cfg.dtype),
+        "w_in_gate": dense_init(ks[1], (d, W), cfg.dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv1d_width, W), cfg.dtype,
+                             in_axis_size=cfg.conv1d_width),
+        "conv_b": jnp.zeros((W,), cfg.dtype),
+        "w_rgate": dense_init(ks[3], (W, W), cfg.dtype, in_axis_size=W),
+        "w_igate": dense_init(ks[4], (W, W), cfg.dtype, in_axis_size=W),
+        "lam": jnp.linspace(0.1, 2.0, W, dtype=jnp.float32),   # Lambda
+        "w_out": dense_init(ks[5], (W, d), cfg.dtype, in_axis_size=W),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   x_prev: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv; x: (B,S,W); w: (kw,W); carries the last
+    kw-1 inputs as state for decode."""
+    kw = w.shape[0]
+    B, S, W = x.shape
+    pad = x_prev if x_prev is not None else jnp.zeros((B, kw - 1, W), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(kw):
+        out = out + xp[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_prev = xp[:, -(kw - 1):, :] if kw > 1 else jnp.zeros((B, 0, W), x.dtype)
+    return (out + b.astype(jnp.float32)).astype(x.dtype), new_prev
+
+
+def rglru_block(cfg: ModelConfig, p: Params, x: jax.Array,
+                state: Params | None = None) -> tuple[jax.Array, Params]:
+    """The Griffin recurrent block. state = {"h": (B,W), "conv": (B,kw-1,W)}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_in_gate"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in_x"])
+    u, conv_state = _causal_conv1d(u, p["conv_w"], p["conv_b"],
+                                   state["conv"] if state else None)
+    r_gate = jnp.einsum("bsw,wv->bsv", u, p["w_rgate"]).astype(jnp.float32)
+    i_gate = jnp.einsum("bsw,wv->bsv", u, p["w_igate"]).astype(jnp.float32)
+    h0 = state["h"] if state else None
+    y, h = kops.rglru(u, r_gate.astype(u.dtype), i_gate.astype(u.dtype),
+                      p["lam"], h0=h0)
+    out = jnp.einsum("bsw,wd->bsd", y * gate, p["w_out"])
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,259 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  Logical roles:
+
+* ``batch``  -> every data-parallel axis (``pod`` + ``data``)
+* ``fsdp``   -> ``data`` (parameter sharding; disabled in ``pure_dp``
+  mode, where the paper's explicit gradient-sync policies apply)
+* ``tensor`` -> ``model`` (heads / mlp / vocab)
+* ``expert`` -> ``model`` (expert parallelism for MoE)
+
+Parameter specs are derived from leaf names + ranks, so every model
+family shares one rule table.  ``constrain`` is a no-op outside a mesh
+context (CPU unit tests).
+"""
+from __future__ import annotations
+
+import contextvars
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingConfig:
+    mesh_axes: tuple[str, ...]               # axes of the active mesh
+    mode: str = "fsdp"                       # "fsdp" | "pure_dp"
+
+    def _axis(self, logical: str):
+        if logical == "batch":
+            if self.mode == "zero3":
+                # batch over the whole mesh: 256-way pure DP
+                return tuple(self.mesh_axes)
+            return tuple(a for a in self.mesh_axes if a in ("pod", "data")) or None
+        if logical == "fsdp":
+            if self.mode == "pure_dp":
+                return None
+            if self.mode in ("fsdp2d", "zero3"):
+                # no tensor parallelism: both mesh axes shard parameters
+                return tuple(a for a in self.mesh_axes
+                             if a in ("data", "model")) or None
+            return "data" if "data" in self.mesh_axes else None
+        if logical in ("tensor", "expert"):
+            if self.mode in ("fsdp2d", "zero3"):
+                return None
+            return "model" if "model" in self.mesh_axes else None
+        if logical == "seq":  # sequence sharding (long-context decode)
+            return "data" if "data" in self.mesh_axes else None
+        if logical is None:
+            return None
+        raise KeyError(logical)
+
+    def spec(self, *logical) -> P:
+        return P(*(self._axis(l) for l in logical))
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        """Axes over which gradients must be explicitly averaged (pure
+        data-parallel replication axes)."""
+        if self.mode == "pure_dp":
+            return tuple(a for a in self.mesh_axes if a in ("pod", "data"))
+        # fsdp: the data axis reduce-scatters automatically through the
+        # parameter sharding; only the pod axis is pure replication.
+        return tuple(a for a in self.mesh_axes if a == "pod")
+
+
+_ACTIVE: contextvars.ContextVar[ShardingConfig | None] = \
+    contextvars.ContextVar("sharding_config", default=None)
+
+
+def set_sharding(cfg: ShardingConfig | None):
+    return _ACTIVE.set(cfg)
+
+
+def active_sharding() -> ShardingConfig | None:
+    return _ACTIVE.get()
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint under the active rules; identity when
+    no rules are active (single-device tests)."""
+    sc = _ACTIVE.get()
+    if sc is None:
+        return x
+    spec = resolve_spec(x.shape, [[l] if l else [] for l in logical], sc)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ----------------------------------------------------------------------
+# Divisibility-aware spec resolution.
+#
+# Assigned architectures have kv_heads in {1, 6, 8, ...} that do not
+# divide the 16-way model axis; candidate lists let a leaf fall back
+# (e.g. shard head_dim when kv_heads cannot take the tensor axis), and
+# any dim whose size is not divisible stays replicated instead of
+# failing to lower.
+# ----------------------------------------------------------------------
+_MESH_SIZES: contextvars.ContextVar[dict[str, int] | None] = \
+    contextvars.ContextVar("mesh_sizes", default=None)
+
+
+def set_mesh_sizes(sizes: dict[str, int] | None):
+    return _MESH_SIZES.set(sizes)
+
+
+def _mesh_sizes() -> dict[str, int]:
+    sizes = _MESH_SIZES.get()
+    if sizes is not None:
+        return sizes
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and mesh.shape:
+            return dict(mesh.shape)
+    except Exception:
+        pass
+    return {}
+
+
+def resolve_spec(shape, dim_candidates, sc: ShardingConfig) -> P:
+    """Greedy spec assignment: per dim, the first candidate logical
+    axis whose mesh axes (a) exist, (b) divide the dim size, and
+    (c) are not already used by another dim of this leaf."""
+    sizes = _mesh_sizes()
+    used: set[str] = set()
+    out = []
+    for dim, candidates in zip(shape, dim_candidates):
+        chosen = None
+        for logical in candidates:
+            axes = sc._axis(logical)
+            if axes is None:
+                continue
+            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            # progressively drop trailing axes until divisible & unused
+            while axes_t:
+                prod = 1
+                ok = True
+                for a in axes_t:
+                    if a in used or a not in sizes:
+                        ok = False
+                        break
+                    prod *= sizes[a]
+                if ok and dim % prod == 0:
+                    break
+                axes_t = axes_t[:-1]
+            if axes_t:
+                chosen = axes_t if len(axes_t) > 1 else axes_t[0]
+                used.update(axes_t)
+                break
+        out.append(chosen)
+    return P(*out)
+
+
+# ----------------------------------------------------------------------
+# Parameter PartitionSpecs by leaf name + rank.  Each dim lists
+# *candidates* in preference order (e.g. GQA kv projections prefer the
+# tensor axis on kv_heads but fall back to head_dim).
+# ----------------------------------------------------------------------
+def _leaf_candidates(name: str, ndim: int) -> tuple:
+    N = ()                                            # replicated dim
+    # Attention projections: shard q-heads when they divide the axis,
+    # otherwise REPLICATE the head dims (never shard head_dim: any
+    # contraction over a sharded hd turns every attention block matmul
+    # into a cross-device reduction — measured 100x collective blowup,
+    # see EXPERIMENTS.md §Perf iteration 1).
+    if ndim == 3 and name == "wq":                   # (d, H, hd)
+        return (["fsdp"], ["tensor"], N)
+    if ndim == 3 and name in ("wk", "wv"):           # (d, K, hd)
+        return (["fsdp"], ["tensor"], N)
+    if ndim == 3 and name in ("wi", "wg"):           # MoE experts (E, d, ff)
+        # expert-parallel when E divides the axis; otherwise experts
+        # are tensor-parallel over their hidden dim
+        return (["expert"], ["fsdp"], ["tensor"])
+    if ndim == 3 and name == "wo":                   # attn (H,hd,d) / MoE (E,ff,d)
+        # never shard dim1 (attention head_dim: a sharded contraction;
+        # for MoE the unsharded row side still lowers to the same
+        # single output all-reduce as an explicit Megatron pair)
+        return (["tensor"], N, ["fsdp"])
+    if ndim == 2 and name == "embedding":            # (V, d)
+        return (["tensor"], ["fsdp"])
+    if ndim == 2 and name == "router":               # (d, E)
+        return (["fsdp"], N)
+    if ndim == 2 and name in ("wi", "wg", "wk", "wr", "ww", "wq",
+                              "w_in_x", "w_in_gate", "w_rgate", "w_igate",
+                              "lm_head"):            # (d_in, d_out) column-parallel
+        return (["fsdp"], ["tensor"])
+    if ndim == 2 and name in ("wv", "wo", "w_out"):  # (d_out, d) row-parallel
+        return (["tensor"], ["fsdp"])
+    if ndim == 2 and name == "conv_w":               # (kw, W)
+        return (N, ["tensor"])
+    if ndim == 2 and name == "u":                    # rwkv bonus (H, hd)
+        return (["tensor"], N)
+    if ndim == 1 and name in ("lam", "conv_b"):      # width-aligned vectors
+        return (["tensor"],)
+    return tuple(() for _ in range(ndim))            # norms, biases, mu
+
+
+def param_specs(params, sc: ShardingConfig, stacked_prefixes=("units",)):
+    """PartitionSpec pytree for a parameter pytree.  Leaves under any
+    path component in ``stacked_prefixes`` carry a leading scan (unit)
+    dimension which stays unsharded."""
+
+    def spec_for(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        stacked = any(n in stacked_prefixes for n in names[:-1])
+        ndim = leaf.ndim - (1 if stacked else 0)
+        cands = _leaf_candidates(name, ndim)
+        if stacked:
+            cands = ((),) + cands
+        return resolve_spec(leaf.shape, cands, sc)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def named_shardings(params, sc: ShardingConfig, mesh: Mesh,
+                    stacked_prefixes=("units",)):
+    specs = param_specs(params, sc, stacked_prefixes)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ----------------------------------------------------------------------
+# KV-cache / recurrent-state PartitionSpecs (serve_step).
+# ----------------------------------------------------------------------
+def _cache_candidates(name: str, ndim: int) -> tuple:
+    N = ()
+    if name in ("k", "v") and ndim == 4:     # (B, S, K, hd)
+        # batch over the data axes; the cache *sequence* dim takes the
+        # model axis (or the data axis when batch=1, the 500k shape):
+        # decode attention over a seq-sharded cache costs only a
+        # (B, H)-scale partial-softmax psum per layer, vs hd-sharded
+        # caches turning the score contraction into a collective
+        # (EXPERIMENTS.md §Perf iteration 6).
+        return (["batch"], ["seq", "tensor"], ["tensor"], ["tensor"])
+    if name == "S" and ndim == 4:            # rwkv state (B, H, hd, hd)
+        return (["batch"], ["tensor"], N, N)
+    if name == "h" and ndim == 2:            # rg-lru state (B, W)
+        return (["batch"], ["tensor"])
+    if name == "conv" and ndim == 3:         # (B, kw-1, W)
+        return (["batch"], N, ["tensor"])
+    if name.startswith("x_prev") and ndim == 2:
+        return (["batch"], N)
+    return tuple(N for _ in range(ndim))
+
+
+def cache_specs(cache, sc: ShardingConfig, stacked_prefixes=("units",)):
+    def spec_for(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        stacked = any(n in stacked_prefixes for n in names[:-1])
+        ndim = leaf.ndim - (1 if stacked else 0)
+        cands = _cache_candidates(name, ndim)
+        if stacked:
+            cands = ((),) + cands
+        return resolve_spec(leaf.shape, cands, sc)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

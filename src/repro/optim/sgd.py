@@ -1,0 +1,89 @@
+"""Optimizers: SGD(+momentum) — the paper's algorithm — and AdamW.
+
+Minimal optax-style interface: ``opt.init(params) -> state`` and
+``opt.update(grads, state, params) -> (new_params, new_state)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Params, Any, Params], tuple[Params, Any]]
+
+
+def sgd(lr: float, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            if momentum:
+                m = momentum * m + g
+                g = m
+            p_new = p.astype(jnp.float32) - lr * g
+            return p_new.astype(p.dtype), m
+
+        if momentum:
+            out = jax.tree_util.tree_map(upd, params, grads, state["mom"])
+            new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                                is_leaf=lambda t: isinstance(t, tuple))
+            new_mom = jax.tree_util.tree_map(lambda t: t[1], out,
+                                             is_leaf=lambda t: isinstance(t, tuple))
+            return new_params, {"mom": new_mom}
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: upd(p, g, None)[0], params, grads)
+        return new_params, state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            p_new = p.astype(jnp.float32) - lr * (upd_ + weight_decay
+                                                  * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), m, v
+
+        trip = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+        is3 = lambda t: isinstance(t, tuple)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], trip, is_leaf=is3)
+        m = jax.tree_util.tree_map(lambda t: t[1], trip, is_leaf=is3)
+        v = jax.tree_util.tree_map(lambda t: t[2], trip, is_leaf=is3)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))

@@ -1,0 +1,142 @@
+"""The paper's layer-wise trace dataset format (§VI).
+
+Each trace file holds iterations of layer-wise records with six
+columns::
+
+    Id  Name  Forward  Backward  Comm.  Size
+
+times in **microseconds**, gradient ``Size`` in **bytes** (0 for
+non-learnable layers).  ``read_trace``/``write_trace`` round-trip this
+format; ``to_iteration_costs`` converts a trace into the DAG builder's
+:class:`~repro.core.dag.IterationCosts` (seconds), which is exactly how
+the paper uses its traces for simulation studies.
+"""
+from __future__ import annotations
+
+import io
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Sequence
+
+from repro.core.dag import IterationCosts
+
+US = 1e-6
+
+
+@dataclass(frozen=True)
+class LayerRecord:
+    layer_id: int
+    name: str
+    forward_us: float
+    backward_us: float
+    comm_us: float
+    size_bytes: float
+
+
+@dataclass(frozen=True)
+class Trace:
+    """One or more iterations of layer-wise records."""
+
+    network: str
+    cluster: str
+    iterations: tuple[tuple[LayerRecord, ...], ...]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.iterations[0])
+
+    def mean_iteration(self) -> tuple[LayerRecord, ...]:
+        """Average each layer over iterations (the paper's suggestion
+        for more accurate measurements)."""
+        n = len(self.iterations)
+        first = self.iterations[0]
+        out = []
+        for i, rec in enumerate(first):
+            f = sum(it[i].forward_us for it in self.iterations) / n
+            b = sum(it[i].backward_us for it in self.iterations) / n
+            c = sum(it[i].comm_us for it in self.iterations) / n
+            out.append(LayerRecord(rec.layer_id, rec.name, f, b, c,
+                                   rec.size_bytes))
+        return tuple(out)
+
+    def to_iteration_costs(self, t_io: float | None = None,
+                           t_h2d: float = 0.0, t_u: float = 0.0,
+                           data_layer_as_io: bool = True) -> IterationCosts:
+        """Convert to seconds-based :class:`IterationCosts`.
+
+        Caffe traces put the input pipeline in a ``data`` layer whose
+        forward time is the blocking fetch+decode (e.g. 1.2 s for
+        AlexNet's 1024-batch in Table VI); with ``data_layer_as_io``
+        that layer becomes ``t_io`` rather than a compute layer.
+        """
+        recs = list(self.mean_iteration())
+        io_time = 0.0
+        if data_layer_as_io and recs and recs[0].name == "data":
+            io_time = recs[0].forward_us * US
+            recs = recs[1:]
+        if t_io is not None:
+            io_time = t_io
+        return IterationCosts(
+            t_f=[r.forward_us * US for r in recs],
+            t_b=[r.backward_us * US for r in recs],
+            t_c=[r.comm_us * US for r in recs],
+            t_io=io_time,
+            t_h2d=t_h2d,
+            t_u=t_u,
+            grad_bytes=[r.size_bytes for r in recs],
+        )
+
+
+def write_trace(trace: Trace, path: str | Path) -> None:
+    with open(path, "w") as f:
+        f.write(f"# network: {trace.network}\n# cluster: {trace.cluster}\n")
+        f.write("# Id\tName\tForward\tBackward\tComm.\tSize\n")
+        for k, it in enumerate(trace.iterations):
+            f.write(f"# iteration {k}\n")
+            for r in it:
+                f.write(f"{r.layer_id}\t{r.name}\t{r.forward_us:.10g}\t"
+                        f"{r.backward_us:.10g}\t{r.comm_us:.10g}\t"
+                        f"{r.size_bytes:.10g}\n")
+
+
+def read_trace(path: str | Path, network: str = "", cluster: str = "") -> Trace:
+    iterations: list[list[LayerRecord]] = []
+    cur: list[LayerRecord] = []
+    meta = {"network": network, "cluster": cluster}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            if line.startswith("#"):
+                body = line.lstrip("# ").strip()
+                if body.startswith("network:"):
+                    meta["network"] = body.split(":", 1)[1].strip()
+                elif body.startswith("cluster:"):
+                    meta["cluster"] = body.split(":", 1)[1].strip()
+                elif body.startswith("iteration") and cur:
+                    iterations.append(cur)
+                    cur = []
+                continue
+            parts = line.split("\t") if "\t" in line else line.split()
+            lid, name, fw, bw, cm, sz = parts[:6]
+            rec = LayerRecord(int(lid), name, float(fw), float(bw),
+                              float(cm), float(sz))
+            if cur and rec.layer_id <= cur[-1].layer_id:
+                iterations.append(cur)
+                cur = []
+            cur.append(rec)
+    if cur:
+        iterations.append(cur)
+    if not iterations:
+        raise ValueError(f"empty trace file: {path}")
+    return Trace(meta["network"], meta["cluster"],
+                 tuple(tuple(it) for it in iterations))
+
+
+def make_trace(network: str, cluster: str,
+               rows: Iterable[Sequence], n_copies: int = 1) -> Trace:
+    """Build a Trace from ``(id, name, fwd_us, bwd_us, comm_us, size)`` rows."""
+    recs = tuple(LayerRecord(int(r[0]), str(r[1]), float(r[2]), float(r[3]),
+                             float(r[4]), float(r[5])) for r in rows)
+    return Trace(network, cluster, tuple(recs for _ in range(n_copies)))

@@ -1,0 +1,99 @@
+"""Trace generator: instrument a real (JAX, CPU) model into the paper's
+layer-wise trace format.
+
+The paper measured Caffe-MPI's per-layer forward/backward/comm times;
+here we time each layer's jitted forward and VJP on the actual device
+and record gradient sizes from the parameter pytree, emitting a
+:class:`~repro.traces.format.Trace` that the DAG predictor consumes —
+so the full paper pipeline (measure -> trace -> DAG -> predict) runs
+end to end inside this repo.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.traces.format import LayerRecord, Trace
+
+
+@dataclass(frozen=True)
+class TimedLayer:
+    """A named layer: ``apply(params, x) -> y`` plus its parameters."""
+
+    name: str
+    apply: Callable[[Any, Any], Any]
+    params: Any
+
+
+def _param_bytes(params: Any) -> float:
+    leaves = jax.tree_util.tree_leaves(params)
+    return float(sum(l.size * l.dtype.itemsize for l in leaves))
+
+
+def _block(x):
+    return jax.block_until_ready(x)
+
+
+def _time_call(fn, *args, repeats: int) -> float:
+    """Median wall time of ``fn(*args)`` in microseconds (post-warmup)."""
+    _block(fn(*args))
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _block(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def generate_trace(
+    layers: Sequence[TimedLayer],
+    x0: Any,
+    network: str,
+    cluster: str = "cpu-host",
+    n_iterations: int = 3,
+    repeats: int = 5,
+    comm_time_fn: Callable[[float], float] | None = None,
+) -> Trace:
+    """Measure per-layer fwd/bwd wall time and emit a paper-format trace.
+
+    ``comm_time_fn(grad_bytes) -> seconds`` fills the Comm. column (e.g.
+    a :meth:`ClusterSpec.allreduce_time` closure); default 0 (single
+    device, as Eq. (1)).
+    """
+    iters: list[tuple[LayerRecord, ...]] = []
+    fwd_jits = [jax.jit(l.apply) for l in layers]
+
+    # VJP per layer: d(sum(y))/d(params [, x]) — integer inputs (token
+    # ids into an embedding) only differentiate w.r.t. params.
+    def make_bwd(apply, x_is_int):
+        argnums = (0,) if x_is_int else (0, 1)
+
+        def loss(params, x):
+            return jnp.sum(apply(params, x))
+
+        return jax.jit(jax.grad(loss, argnums=argnums))
+
+    bwd_jits: dict[int, object] = {}
+
+    for _ in range(n_iterations):
+        recs: list[LayerRecord] = []
+        x = x0
+        for lid, (layer, fj) in enumerate(zip(layers, fwd_jits)):
+            if lid not in bwd_jits:
+                is_int = jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer)
+                bwd_jits[lid] = make_bwd(layer.apply, bool(is_int))
+            bj = bwd_jits[lid]
+            f_us = _time_call(fj, layer.params, x, repeats=repeats)
+            b_us = (_time_call(bj, layer.params, x, repeats=repeats)
+                    if jax.tree_util.tree_leaves(layer.params) else 0.0)
+            size = _param_bytes(layer.params)
+            c_us = (comm_time_fn(size) * 1e6 if (comm_time_fn and size) else 0.0)
+            recs.append(LayerRecord(lid, layer.name, f_us, b_us, c_us, size))
+            x = _block(fj(layer.params, x))
+        iters.append(tuple(recs))
+    return Trace(network, cluster, tuple(iters))

@@ -1,0 +1,182 @@
+"""Core DAG model: construction, simulation, and the paper's Eqs 1-6."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analytical as A
+from repro.core.dag import DAG, IterationCosts, TaskKind, build_ssgd_dag
+from repro.core.policies import (ALL_POLICIES, BUCKETED_25MB, CAFFE_MPI, CNTK,
+                                 MXNET, NAIVE, Policy, get_policy)
+from repro.core.simulator import simulate
+
+COSTS = IterationCosts(
+    t_f=[3.0, 4.0, 5.0], t_b=[6.0, 5.0, 4.0], t_c=[2.0, 3.0, 7.0],
+    t_io=2.0, t_h2d=1.0, t_u=0.5, grad_bytes=[10e6, 20e6, 70e6])
+
+EQ3_POLICY = Policy("eq3", overlap_io=True, h2d_early=True)
+
+
+def steady(costs, n_workers, policy, iters=6):
+    g = build_ssgd_dag(costs, n_workers, policy, n_iterations=iters)
+    return simulate(g).steady_iteration_time()
+
+
+class TestDAG:
+    def test_cycle_detection(self):
+        g = DAG()
+        a = g.add_task("a", TaskKind.COMPUTE, 1.0, "gpu:0")
+        b = g.add_task("b", TaskKind.COMPUTE, 1.0, "gpu:0")
+        g.add_edge(a, b)
+        g.add_edge(b, a)
+        with pytest.raises(ValueError, match="cycle"):
+            g.topo_order()
+
+    def test_negative_duration_rejected(self):
+        g = DAG()
+        with pytest.raises(ValueError):
+            g.add_task("bad", TaskKind.COMPUTE, -1.0, "gpu:0")
+
+    def test_fig1_structure(self):
+        """3 layers, 4 workers, one iteration: Fig. 1 has 36 tasks
+        (4 io + 4 h2d + 12 fwd + 12 bwd + 3 comm + 1 update)."""
+        g = build_ssgd_dag(COSTS, 4, CAFFE_MPI, n_iterations=1)
+        assert len(g) == 36
+        kinds = [t.kind for t in g.tasks.values()]
+        assert kinds.count(TaskKind.COMM) == 4 + 4 + 3
+        assert kinds.count(TaskKind.COMPUTE) == 12 + 12 + 1
+
+    def test_single_gpu_no_comm(self):
+        c = IterationCosts(t_f=COSTS.t_f, t_b=COSTS.t_b, t_c=[0.0] * 3,
+                           t_io=2.0, t_h2d=1.0, t_u=0.5)
+        g = build_ssgd_dag(c, 1, NAIVE, n_iterations=1)
+        assert not [t for t in g.tasks.values()
+                    if t.kind == TaskKind.COMM and t.channel == "net"]
+
+    def test_critical_path_lower_bounds_makespan(self):
+        g = build_ssgd_dag(COSTS, 4, CAFFE_MPI, n_iterations=3)
+        cp, path = g.critical_path()
+        r = simulate(g)
+        assert r.makespan >= cp - 1e-9
+        assert len(path) >= 2
+
+
+class TestAnalyticalEquivalence:
+    """The simulator reproduces Eqs 1/2/3/5 exactly on matching DAGs."""
+
+    def test_eq1_single_gpu(self):
+        c = IterationCosts(t_f=COSTS.t_f, t_b=COSTS.t_b, t_c=[0.0] * 3,
+                           t_io=2.0, t_h2d=1.0, t_u=0.5)
+        assert steady(c, 1, NAIVE) == pytest.approx(A.eq1_sgd_iteration(c))
+
+    def test_eq2_naive(self):
+        assert steady(COSTS, 4, NAIVE) == pytest.approx(A.eq2_naive_ssgd(COSTS))
+
+    def test_eq3_io_overlap(self):
+        assert steady(COSTS, 4, EQ3_POLICY) == pytest.approx(A.eq3_io_overlap(COSTS))
+
+    def test_eq5_wfbp(self):
+        assert steady(COSTS, 4, CAFFE_MPI) == pytest.approx(A.eq5_wfbp(COSTS))
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_property_eqs_match_simulator(self, data):
+        L = data.draw(st.integers(1, 8))
+        pos = st.floats(0.01, 20.0)
+        t_f = data.draw(st.lists(pos, min_size=L, max_size=L))
+        t_b = data.draw(st.lists(pos, min_size=L, max_size=L))
+        t_c = data.draw(st.lists(pos, min_size=L, max_size=L))
+        t_io = data.draw(pos)
+        t_h2d = data.draw(pos)
+        c = IterationCosts(t_f=t_f, t_b=t_b, t_c=t_c, t_io=t_io,
+                           t_h2d=t_h2d, t_u=data.draw(pos))
+        n = data.draw(st.integers(2, 5))
+        assert steady(c, n, NAIVE, 5) == pytest.approx(A.eq2_naive_ssgd(c))
+        assert steady(c, n, EQ3_POLICY, 8) == pytest.approx(A.eq3_io_overlap(c))
+        assert steady(c, n, CAFFE_MPI, 8) == pytest.approx(A.eq5_wfbp(c))
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def test_tc_no_bounds(self, data):
+        L = data.draw(st.integers(1, 10))
+        pos = st.floats(0.0, 10.0)
+        t_b = data.draw(st.lists(pos, min_size=L, max_size=L))
+        t_c = data.draw(st.lists(pos, min_size=L, max_size=L))
+        tc_no = A.non_overlapped_comm(t_b, t_c)
+        assert -1e-9 <= tc_no <= sum(t_c) + 1e-9
+        # the last layer's comm can never be hidden
+        if all(c == 0 for c in t_c[1:]) and t_c[0] > 0:
+            assert tc_no == pytest.approx(t_c[0])
+
+
+class TestPolicyOrdering:
+    def test_paper_framework_ranking(self):
+        """Caffe-MPI <= MXNet/TF <= CNTK <= naive (paper Fig. 2/3)."""
+        t = {name: steady(COSTS, 4, p, 8)
+             for name, p in ALL_POLICIES.items()}
+        assert t["caffe-mpi"] <= t["mxnet"] + 1e-9
+        assert t["mxnet"] <= t["cntk"] + 1e-9
+        assert t["cntk"] <= t["naive"] + 1e-9
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_overlap_never_hurts(self, data):
+        L = data.draw(st.integers(1, 6))
+        pos = st.floats(0.01, 10.0)
+        c = IterationCosts(
+            t_f=data.draw(st.lists(pos, min_size=L, max_size=L)),
+            t_b=data.draw(st.lists(pos, min_size=L, max_size=L)),
+            t_c=data.draw(st.lists(pos, min_size=L, max_size=L)),
+            t_io=data.draw(pos), t_h2d=data.draw(pos), t_u=data.draw(pos))
+        n = data.draw(st.integers(2, 4))
+        assert steady(c, n, CAFFE_MPI, 8) <= steady(c, n, CNTK, 8) + 1e-9
+        assert steady(c, n, CNTK, 8) <= steady(c, n, NAIVE, 8) + 1e-9
+
+    def test_bucketing_reduces_comm_when_latency_bound(self):
+        """Many tiny tensors: per-layer collectives pay L alphas, one
+        bucket pays one (the paper's 9.6%-utilization problem)."""
+        from repro.core.hardware import V100_CLUSTER
+        from repro.core.costmodel import comm_scale_fn
+        L = 50
+        # backward far too short to hide the 50 per-layer alphas
+        c = IterationCosts(t_f=[1e-4] * L, t_b=[1e-4] * L,
+                           t_c=[V100_CLUSTER.allreduce_time(40_000, 16)] * L,
+                           t_io=0.0, t_h2d=0.0, t_u=0.0,
+                           grad_bytes=[40_000] * L)
+        scale = comm_scale_fn(V100_CLUSTER, 16)
+        g_layer = build_ssgd_dag(c, 4, CAFFE_MPI, 6, comm_scale=scale)
+        g_bucket = build_ssgd_dag(c, 4, BUCKETED_25MB, 6, comm_scale=scale)
+        t_layer = simulate(g_layer).steady_iteration_time()
+        t_bucket = simulate(g_bucket).steady_iteration_time()
+        assert t_bucket < t_layer
+
+    def test_get_policy_unknown(self):
+        with pytest.raises(KeyError):
+            get_policy("nccl")
+
+
+class TestSimulator:
+    def test_channel_serialization(self):
+        g = DAG()
+        a = g.add_task("a", TaskKind.COMPUTE, 2.0, "gpu:0")
+        b = g.add_task("b", TaskKind.COMPUTE, 2.0, "gpu:0")
+        r = simulate(g)
+        assert r.makespan == pytest.approx(4.0)
+        assert r.utilization("gpu:0") == pytest.approx(1.0)
+
+    def test_parallel_channels(self):
+        g = DAG()
+        g.add_task("a", TaskKind.COMPUTE, 2.0, "gpu:0")
+        g.add_task("b", TaskKind.COMPUTE, 2.0, "gpu:1")
+        assert simulate(g).makespan == pytest.approx(2.0)
+
+    def test_priority_channel_reorders(self):
+        g = DAG()
+        gate = g.add_task("gate", TaskKind.COMPUTE, 1.0, "gpu:0")
+        lo = g.add_task("lo", TaskKind.COMM, 5.0, "net", priority=2.0)
+        hi = g.add_task("hi", TaskKind.COMM, 1.0, "net", priority=1.0)
+        g.add_edge(gate, lo)
+        g.add_edge(gate, hi)
+        fifo = simulate(g)
+        prio = simulate(g, priority_channels=frozenset(["net"]))
+        # under priority scheduling 'hi' runs first
+        assert prio.schedule[hi].start <= prio.schedule[lo].start
+        assert prio.schedule[hi].finish <= fifo.schedule[hi].finish

@@ -1,0 +1,65 @@
+"""HLO collective-byte parser: crafted-module unit tests."""
+import pytest
+
+from repro.launch import hlo
+
+MODULE = """\
+HloModule test
+
+%wbody.1 (p: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %ar = f32[64,128]{1,0} all-reduce(%x), replica_groups={}, to_apply=%sum
+  ROOT %t = (s32[], f32[64,128]) tuple(%i, %ar)
+}
+
+%wcond.1 (p: (s32[], f32[64,128])) -> pred[] {
+  %p = (s32[], f32[64,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[64,128]) -> f32[64,128] {
+  %x = f32[64,128]{1,0} parameter(0)
+  %ag = bf16[32,256]{1,0} all-gather(%y), dimensions={0}
+  %w = (s32[], f32[64,128]) while(%init), condition=%wcond.1, body=%wbody.1
+  ROOT %r = f32[64,128]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestShapeBytes:
+    def test_f32(self):
+        assert hlo._shape_bytes("f32[64,128]{1,0}") == 64 * 128 * 4
+
+    def test_bf16_and_multiple(self):
+        assert hlo._shape_bytes("(bf16[8,2]{1,0}, f32[4])") == 8 * 2 * 2 + 16
+
+    def test_scalar(self):
+        assert hlo._shape_bytes("s32[]") == 4
+
+
+class TestCollectiveStats:
+    def test_loop_scaling_from_parsed_trip_count(self):
+        stats = hlo.collective_stats(MODULE)
+        # all-gather in ENTRY once; all-reduce in the x12 while body
+        assert stats.count_by_op["all-gather"] == 1
+        assert stats.count_by_op["all-reduce"] == 12
+        assert stats.bytes_by_op["all-reduce"] == 12 * 64 * 128 * 4
+        assert stats.bytes_by_op["all-gather"] == 32 * 256 * 2
+
+    def test_multipliers(self):
+        mults = hlo.computation_multipliers(MODULE)
+        assert mults["ENTRY"] == 1
+        assert mults["wbody.1"] == 12
+
+    def test_total(self):
+        stats = hlo.collective_stats(MODULE)
+        assert stats.total_bytes == 12 * 64 * 128 * 4 + 32 * 256 * 2
+        assert stats.total_count == 13

@@ -1,0 +1,84 @@
+"""Predictor + cost model: reproduce the paper's §V findings."""
+import pytest
+
+from repro.core.costmodel import (CNN_WORKLOADS, alexnet_layers,
+                                  googlenet_layers, make_iteration_costs,
+                                  resnet50_layers, total_flops, total_params)
+from repro.core.hardware import (K80_CLUSTER, TPU_V5E_POD, V100_CLUSTER)
+from repro.core.policies import BUCKETED_25MB, CAFFE_MPI, CNTK, MXNET
+from repro.core.predictor import predict_cnn, scaling_curve
+
+
+class TestCostTables:
+    def test_alexnet_params_match_paper(self):
+        # Table IV: ~60 millions
+        assert total_params(alexnet_layers()) == pytest.approx(61e6, rel=0.03)
+
+    def test_resnet50_params(self):
+        # ~25.5M (paper quotes ~24M)
+        assert total_params(resnet50_layers()) == pytest.approx(25.5e6, rel=0.05)
+
+    def test_googlenet_params(self):
+        # actual inception-v1 (~7M; see DESIGN.md note on Table IV)
+        assert total_params(googlenet_layers()) == pytest.approx(7.0e6, rel=0.1)
+
+    def test_resnet_flops(self):
+        # ~7.7 GFLOPs (multiply-acc*2) per 224x224 sample (fwd, incl.
+        # elementwise)
+        assert total_flops(resnet50_layers()) == pytest.approx(7.7e9, rel=0.1)
+
+
+class TestPaperFindings:
+    def test_k80_resnet_backward_calibration(self):
+        """Paper §V-C2: ResNet-50 backward ~0.243 s on K80, ~0.0625 s
+        on V100 (batch 32)."""
+        layers = resnet50_layers()
+        for cluster, want in ((K80_CLUSTER, 0.243), (V100_CLUSTER, 0.0625)):
+            c = make_iteration_costs(layers, cluster, 32, 16)
+            assert sum(c.t_b) == pytest.approx(want, rel=0.25)
+
+    def test_v100_resnet_comm_calibration(self):
+        """Gradient aggregation ~79.7 ms for ResNet-50 on 16 V100s
+        over 100Gb IB."""
+        c = make_iteration_costs(resnet50_layers(), V100_CLUSTER, 32, 16)
+        assert sum(c.t_c) == pytest.approx(0.0797, rel=0.25)
+
+    def test_k80_cluster_hides_communication(self):
+        """On the slow cluster comm hides behind backward (near-linear
+        scaling, paper Fig. 3a)."""
+        p = predict_cnn("resnet50", K80_CLUSTER, 16, CAFFE_MPI)
+        assert p.speedup > 11.0     # >70% efficiency at 16 GPUs
+
+    def test_v100_cluster_is_comm_bound(self):
+        """On the fast cluster ResNet becomes communication-bound and
+        scaling efficiency drops well below the K80 cluster's (paper
+        Fig. 3b shows ~10/16 for the best framework)."""
+        p16 = predict_cnn("resnet50", V100_CLUSTER, 16, CAFFE_MPI)
+        k16 = predict_cnn("resnet50", K80_CLUSTER, 16, CAFFE_MPI)
+        assert p16.speedup < 12.0
+        assert p16.speedup < k16.speedup
+        assert p16.comm_utilization > 0.5
+
+    def test_framework_ordering_on_both_clusters(self):
+        for cluster in (K80_CLUSTER, V100_CLUSTER):
+            t = {pol.name: predict_cnn("resnet50", cluster, 16, pol)
+                 .iteration_time for pol in (CAFFE_MPI, MXNET, CNTK)}
+            assert t["caffe-mpi"] <= t["mxnet"] + 1e-9
+            assert t["mxnet"] <= t["cntk"] + 1e-9
+
+    def test_weak_scaling_monotone_in_workers(self):
+        curve = scaling_curve("googlenet", K80_CLUSTER, CAFFE_MPI,
+                              worker_counts=(1, 2, 4, 8, 16))
+        sps = [p.samples_per_sec for p in curve]
+        assert all(b > a for a, b in zip(sps, sps[1:]))
+
+    def test_bucketing_beats_layerwise_when_comm_bound(self):
+        """Beyond-paper: fusing gradients recovers the latency the
+        paper blames for 9.6% bandwidth utilization."""
+        base = predict_cnn("resnet50", V100_CLUSTER, 16, CAFFE_MPI)
+        fused = predict_cnn("resnet50", V100_CLUSTER, 16, BUCKETED_25MB)
+        assert fused.iteration_time <= base.iteration_time * 1.02
+
+    def test_tpu_pod_predictions_finite(self):
+        p = predict_cnn("resnet50", TPU_V5E_POD, 256, CAFFE_MPI)
+        assert p.iteration_time > 0 and p.speedup > 1

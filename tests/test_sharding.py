@@ -1,0 +1,118 @@
+"""Sharding rules: divisibility-aware spec resolution (pure logic, no
+devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import sharding as shd
+from repro.models import transformer as T
+
+SIZES_1POD = {"data": 16, "model": 16}
+SIZES_2POD = {"pod": 2, "data": 16, "model": 16}
+
+
+@pytest.fixture(autouse=True)
+def _mesh_sizes():
+    tok = shd.set_mesh_sizes(SIZES_1POD)
+    yield
+    shd.set_mesh_sizes(None)
+
+
+def sc(mode="fsdp", axes=("data", "model")):
+    return shd.ShardingConfig(mesh_axes=axes, mode=mode)
+
+
+class TestResolveSpec:
+    def test_divisible(self):
+        spec = shd.resolve_spec((64, 32), [["fsdp"], ["tensor"]], sc())
+        assert spec == P("data", "model")
+
+    def test_indivisible_falls_back(self):
+        spec = shd.resolve_spec((65, 32), [["fsdp"], ["tensor"]], sc())
+        assert spec == P(None, "model")
+
+    def test_candidate_fallback_kv_heads(self):
+        # GQA kv projection (d, K=8, hd=128): tensor can't take K=8,
+        # falls through to head_dim
+        spec = shd.resolve_spec((6144, 8, 128),
+                                [["fsdp"], ["tensor"], ["tensor"]], sc())
+        assert spec == P("data", None, "model")
+
+    def test_axis_used_once(self):
+        spec = shd.resolve_spec((64, 64), [["tensor"], ["tensor"]], sc())
+        assert spec == P("model", None)
+
+    def test_batch_tuple_progressive_drop(self):
+        shd.set_mesh_sizes(SIZES_2POD)
+        c = sc(axes=("pod", "data", "model"))
+        assert shd.resolve_spec((64,), [["batch"]], c) == P(("pod", "data"))
+        # batch=2 only fits the pod axis
+        assert shd.resolve_spec((2,), [["batch"]], c) == P(("pod",))
+        # batch=1 cannot shard at all
+        assert shd.resolve_spec((1,), [["batch"]], c) == P(None)
+
+    def test_pure_dp_mode_disables_fsdp(self):
+        spec = shd.resolve_spec((64, 32), [["fsdp"], ["tensor"]],
+                                sc(mode="pure_dp"))
+        assert spec == P(None, "model")
+
+
+class TestParamSpecs:
+    def test_dense_arch_specs(self):
+        cfg = get_config("internlm2-20b")
+        pshape = jax.eval_shape(lambda k: T.init_lm(cfg, k),
+                                jax.random.PRNGKey(0))
+        specs = shd.param_specs(pshape, sc())
+        # embedding (92544, 6144) -> vocab on model, d on data
+        assert specs["embedding"] == P("model", "data")
+        unit = specs["units"]["b0"]
+        # stacked wq (U, d, H, hd): leading unit dim unsharded
+        assert unit["attn"]["wq"] == P(None, "data", "model", None)
+        # kv heads = 8 < 16 and head_dim is NEVER sharded (a sharded
+        # contraction; see EXPERIMENTS.md §Perf iteration 1) -> kv
+        # projections replicate their head dims
+        assert unit["attn"]["wk"] == P(None, "data", None, None)
+        assert unit["mlp"]["wi"] == P(None, "data", "model")
+        assert unit["mlp"]["wo"] == P(None, "model", "data")
+        assert specs["final_norm"]["scale"] == P(None)
+
+    def test_moe_expert_parallel(self):
+        cfg = get_config("qwen2-moe-a2.7b")
+        pshape = jax.eval_shape(lambda k: T.init_lm(cfg, k),
+                                jax.random.PRNGKey(0))
+        specs = shd.param_specs(pshape, sc())
+        moe = specs["units"]["b0"]["moe"]
+        # experts (E=60, d, ff): E % 16 != 0, so experts fall back to
+        # tensor-parallel over their hidden dim (stacked leading None);
+        # wo's middle (row) dim stays unsharded — the output all-reduce
+        # is equivalent (EXPERIMENTS.md §Perf iteration 2)
+        assert moe["wi"] == P(None, None, "data", "model")
+        assert moe["wo"] == P(None, None, None, "data")
+        assert moe["router"] == P(None, "data", None)
+
+    def test_cache_specs_decode(self):
+        cfg = get_config("internlm2-20b")
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, 128, 1024))
+        specs = shd.cache_specs(cache, sc())
+        kspec = specs["units"]["b0"]["k"]
+        # (U, B=128, S, K=8, hd=128): batch on data, cache *sequence*
+        # on model (EXPERIMENTS.md §Perf iteration 6)
+        assert kspec == P(None, ("data",), "model", None, None)
+
+    def test_cache_specs_long_context_seq_shard(self):
+        cfg = get_config("gemma3-1b")
+        cache = jax.eval_shape(lambda: T.init_cache(cfg, 1, 4096))
+        specs = shd.cache_specs(cache, sc())
+        # global layer cache: batch=1 unshardable -> seq takes data
+        gspec = specs["units"]["b5"]["k"]   # pattern LLLLLG -> b5 is 'G'
+        assert gspec[1] is None
+        assert gspec[2] == "data"
+
+
+class TestConstrainNoMesh:
+    def test_noop_without_context(self):
+        shd.set_sharding(None)
+        x = jnp.ones((4, 4))
+        assert shd.constrain(x, "batch", None) is x

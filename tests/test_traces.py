@@ -1,0 +1,98 @@
+"""Trace dataset: paper format round-trip, bundled Table VI, DAG
+predictions from traces, trace generation from instrumented models."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hardware import K80_CLUSTER
+from repro.core.policies import CAFFE_MPI, CNTK
+from repro.core.predictor import predict
+from repro.traces.bundled import ALEXNET_K80, TOTAL_GRAD_BYTES
+from repro.traces.format import make_trace, read_trace, write_trace
+from repro.traces.generate import TimedLayer, generate_trace
+
+
+class TestBundledTableVI:
+    def test_dimensions(self):
+        assert ALEXNET_K80.network == "alexnet"
+        assert ALEXNET_K80.num_layers == 22     # incl. data + loss layers
+
+    def test_total_gradient_bytes_match_alexnet(self):
+        # ~61M f32 parameters = ~244 MB, the paper's "~60 millions"
+        assert TOTAL_GRAD_BYTES == pytest.approx(243_860_896)
+
+    def test_fc6_row_verbatim(self):
+        rec = ALEXNET_K80.iterations[0][14]
+        assert rec.name == "fc6"
+        assert rec.size_bytes == 151_011_328
+        assert rec.comm_us == pytest.approx(311_170)
+
+    def test_to_iteration_costs_maps_data_layer_to_io(self):
+        costs = ALEXNET_K80.to_iteration_costs()
+        assert costs.t_io == pytest.approx(1.2)          # 1.2e6 us
+        assert costs.num_layers == 21
+        assert sum(costs.t_c) == pytest.approx(2.649091456, rel=1e-6)
+
+    def test_dag_prediction_from_trace(self):
+        """WFBP (Caffe-MPI) must beat comm-at-end (CNTK) on the real
+        AlexNet trace, and hide some of the 2.65 s of comm."""
+        costs = ALEXNET_K80.to_iteration_costs()
+        p_wfbp = predict(costs, 2, CAFFE_MPI, batch_per_gpu=1024,
+                         cluster=K80_CLUSTER)
+        p_cntk = predict(costs, 2, CNTK, batch_per_gpu=1024)
+        assert p_wfbp.iteration_time < p_cntk.iteration_time
+        # full comm is 2.65 s; overlap must hide most of it behind the
+        # 3.36 s backward pass
+        assert (p_cntk.iteration_time - p_wfbp.iteration_time) > 1.0
+
+
+class TestFormat:
+    def test_roundtrip(self, tmp_path):
+        p = tmp_path / "t.trace"
+        write_trace(ALEXNET_K80, p)
+        t2 = read_trace(p)
+        assert t2.network == "alexnet"
+        assert t2.num_layers == 22
+        for a, b in zip(ALEXNET_K80.iterations[0], t2.iterations[0]):
+            assert a == b
+
+    def test_multi_iteration_mean(self):
+        rows1 = [(0, "l0", 10, 20, 5, 100)]
+        rows2 = [(0, "l0", 30, 40, 15, 100)]
+        t = make_trace("x", "c", rows1)
+        t2 = type(t)(t.network, t.cluster,
+                     (t.iterations[0], make_trace("x", "c", rows2).iterations[0]))
+        mean = t2.mean_iteration()
+        assert mean[0].forward_us == pytest.approx(20)
+        assert mean[0].comm_us == pytest.approx(10)
+
+    def test_read_empty_raises(self, tmp_path):
+        p = tmp_path / "e.trace"
+        p.write_text("# network: x\n")
+        with pytest.raises(ValueError):
+            read_trace(p)
+
+
+class TestGenerator:
+    def test_generate_matches_structure(self):
+        key = jax.random.PRNGKey(0)
+        W1 = jax.random.normal(key, (16, 32))
+        layers = [TimedLayer("fc1", lambda p, x: jnp.tanh(x @ p), W1),
+                  TimedLayer("act", lambda p, x: jax.nn.relu(x), {})]
+        tr = generate_trace(layers, jnp.ones((4, 16)), "tiny",
+                            n_iterations=2, repeats=2)
+        mean = tr.mean_iteration()
+        assert [r.name for r in mean] == ["fc1", "act"]
+        assert mean[0].size_bytes == 16 * 32 * 4
+        assert mean[1].size_bytes == 0          # non-learnable
+        assert all(r.forward_us > 0 for r in mean)
+
+    def test_comm_time_fn(self):
+        key = jax.random.PRNGKey(0)
+        layers = [TimedLayer("fc", lambda p, x: x @ p,
+                             jax.random.normal(key, (8, 8)))]
+        tr = generate_trace(layers, jnp.ones((2, 8)), "tiny",
+                            n_iterations=1, repeats=1,
+                            comm_time_fn=lambda b: b * 1e-6)
+        rec = tr.mean_iteration()[0]
+        assert rec.comm_us == pytest.approx(rec.size_bytes)
