@@ -2,13 +2,16 @@
 
 The paper predicts Caffe-MPI iteration times from measured layer-wise
 traces and reports 9.4% / 4.7% / 4.6% average error on AlexNet /
-GoogleNet / ResNet-50.  We validate the same pipeline two ways:
+GoogleNet / ResNet-50.  We validate the same pipeline three ways:
 
 1. bundled-trace path: Table VI (AlexNet, K80) -> DAG -> predicted
    iteration time vs the trace's own serial sum (Eq. 1 ground truth);
-2. closed-form path: the DAG simulator vs Eqs. (2)/(3)/(5) across all
-   workloads and clusters — the simulator *is* the model, so error
-   here measures scheduling slack only.
+2. sweep-engine agreement: the analytical fast path of
+   :mod:`repro.core.sweep` vs the event-driven simulator across all
+   workloads, clusters and exactly-solvable policies — the closed
+   forms *are* the model, so error here measures scheduling slack;
+3. sweep throughput: wall time to evaluate the 540-scenario default
+   grid (the ISSUE-1 acceptance gate is >= 500 scenarios in < 30 s).
 
 The real-measurement counterpart (wall-clock CPU multi-device runs vs
 DAG prediction) lives in ``examples/dag_validation.py``.
@@ -17,14 +20,11 @@ from __future__ import annotations
 
 from benchmarks.common import row, time_call
 from repro.core import analytical as A
-from repro.core.dag import build_ssgd_dag
-from repro.core.hardware import K80_CLUSTER, V100_CLUSTER
-from repro.core.policies import CAFFE_MPI, CNTK, NAIVE, Policy
-from repro.core.predictor import predict, predict_cnn
-from repro.core.simulator import simulate
+from repro.core.policies import CAFFE_MPI
+from repro.core.predictor import predict
+from repro.core.scenarios import ScenarioGrid, default_grid
+from repro.core.sweep import evaluate_scenario, sweep
 from repro.traces.bundled import ALEXNET_K80
-
-EQ3 = Policy("eq3", overlap_io=True, h2d_early=True)
 
 
 def run() -> dict:
@@ -43,24 +43,28 @@ def run() -> dict:
         f"hidden_s={hidden:.3f}")
     out["tableVI_iter"] = p.iteration_time
 
-    # 2) simulator-vs-closed-form across workloads (prediction error)
-    for cluster in (K80_CLUSTER, V100_CLUSTER):
-        for wl in ("alexnet", "googlenet", "resnet50"):
-            for pol, eq in ((NAIVE, A.eq2_naive_ssgd),
-                            (EQ3, A.eq3_io_overlap),
-                            (CAFFE_MPI, A.eq5_wfbp)):
-                pred = predict_cnn(wl, cluster, 16, pol)
-                from repro.core.costmodel import (CNN_WORKLOADS,
-                                                  make_iteration_costs)
-                builder, batch, bps = CNN_WORKLOADS[wl]
-                c = make_iteration_costs(builder(), cluster, batch, 16,
-                                         bytes_per_sample=bps)
-                ana = eq(c)
-                err = abs(pred.iteration_time - ana) / ana * 100
-                row(f"fig4/{cluster.name}/{wl}/{pol.name}-error", 0.0,
-                    f"sim_s={pred.iteration_time:.4f};eq_s={ana:.4f};"
-                    f"err_pct={err:.2f}")
-                out[(cluster.name, wl, pol.name)] = err
+    # 2) analytical fast path vs event-driven simulator, via the sweep
+    # engine (prediction error of the closed forms)
+    grid = ScenarioGrid(worker_counts=(16,),
+                        policies=("naive", "cntk", "mxnet", "caffe-mpi"))
+    for s in grid.expand():
+        fast = evaluate_scenario(s, method="analytical")
+        slow = evaluate_scenario(s, method="simulator")
+        ana, sim = fast["iteration_time_s"], slow["iteration_time_s"]
+        err = abs(sim - ana) / ana * 100
+        row(f"fig4/{s.cluster}/{s.workload}/{s.policy}-error", 0.0,
+            f"sim_s={sim:.4f};eq_s={ana:.4f};err_pct={err:.2f}")
+        out[(s.cluster, s.workload, s.policy)] = err
+
+    # 3) sweep-engine throughput on the 540-scenario default grid
+    result = {}
+    us = time_call(lambda: result.__setitem__("r", sweep(default_grid())),
+                   repeats=3)
+    r = result["r"]
+    row("fig4/sweep-default-grid", us,
+        f"scenarios={len(r)};scenarios_per_s={len(r) / (us * 1e-6):.0f};"
+        f"analytical={r.n_analytical};simulated={r.n_simulated}")
+    out["sweep_us"] = us
     return out
 
 

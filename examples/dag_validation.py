@@ -97,12 +97,14 @@ def child():
     # comm cost per layer: measure one psum of that many bytes
     from jax.sharding import PartitionSpec as P
 
+    from repro.comm.ddp import shard_map_compat
+
     def time_psum(nbytes):
         n = max(int(nbytes) // 4, 1)
         arr = jnp.ones((N_DEV, n), jnp.float32)
-        f = jax.jit(jax.shard_map(lambda x: jax.lax.pmean(x, "data"),
-                                  mesh=mesh, in_specs=P("data"),
-                                  out_specs=P("data")))
+        f = jax.jit(shard_map_compat(lambda x: jax.lax.pmean(x, "data"),
+                                     mesh, in_specs=P("data"),
+                                     out_specs=P("data")))
         jax.block_until_ready(f(arr))
         t0 = time.perf_counter()
         for _ in range(5):

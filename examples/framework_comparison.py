@@ -1,49 +1,58 @@
 """Reproduce the paper's Figs. 2-3: weak-scaling of Caffe-MPI / CNTK /
-MXNet / TensorFlow policies on both clusters, all three CNNs — via the
-DAG simulator — and the beyond-paper bucketed policy.
+MXNet / TensorFlow policies on both clusters, all three CNNs — plus the
+beyond-paper bucketed policy — in a single call to the scenario-sweep
+engine (:mod:`repro.core.sweep`).
 
     PYTHONPATH=src python examples/framework_comparison.py
 """
-from repro.core.hardware import K80_CLUSTER, V100_CLUSTER
-from repro.core.policies import BUCKETED_25MB, FRAMEWORK_POLICIES
-from repro.core.predictor import predict_cnn
+from repro.core.scenarios import ScenarioGrid
+from repro.core.sweep import sweep
 
-POLICIES = dict(FRAMEWORK_POLICIES, **{"bucketed*": BUCKETED_25MB})
+POLICIES = ("caffe-mpi", "cntk", "mxnet", "tensorflow", "bucketed-25mb")
+WORKLOADS = ("alexnet", "googlenet", "resnet50")
+CLUSTERS = ("k80-pcie-10gbe", "v100-nvlink-ib")
 
 
-def table(cluster, workload, gpu_counts):
-    print(f"\n--- {workload} on {cluster.name} "
+def table(result, cluster, workload, gpu_counts):
+    print(f"\n--- {workload} on {cluster} "
           f"(samples/s; speedup vs 1 GPU) ---")
     header = f"{'framework':14s}" + "".join(f"{f'x{n}':>16s}"
                                             for n in gpu_counts)
     print(header)
-    for fw, pol in POLICIES.items():
+    for pol in POLICIES:
         cells = []
         for n in gpu_counts:
-            nodes = max(1, n // 4)
-            c = cluster.with_workers(n_nodes=nodes) if n > 4 else \
-                cluster.with_workers(n_nodes=1)
-            p = predict_cnn(workload, c, n, pol)
-            cells.append(f"{p.samples_per_sec:8.0f} ({p.speedup:4.1f})")
-        print(f"{fw:14s}" + "".join(f"{c:>16s}" for c in cells))
+            [r] = result.filter(workload=workload, cluster=cluster,
+                                policy=pol, n_workers=n)
+            cells.append(f"{r['samples_per_sec']:8.0f} ({r['speedup']:4.1f})")
+        print(f"{pol:14s}" + "".join(f"{c:>16s}" for c in cells))
 
 
 def main():
-    print("Fig. 2 reproduction: single node, 1-4 GPUs")
-    for cluster in (K80_CLUSTER, V100_CLUSTER):
-        for wl in ("alexnet", "googlenet", "resnet50"):
-            table(cluster, wl, (1, 2, 4))
+    # One sweep covers both figures: every (workload, cluster, policy,
+    # size) cell below is one row of the tidy table.
+    grid = ScenarioGrid(workloads=WORKLOADS, clusters=CLUSTERS,
+                        worker_counts=(1, 2, 4, 8, 16), policies=POLICIES)
+    result = sweep(grid)
+    print(f"swept {len(result)} scenarios in {result.elapsed_s:.2f}s "
+          f"({result.n_analytical} analytical, {result.n_simulated} "
+          f"event-driven)")
+
+    print("\nFig. 2 reproduction: single node, 1-4 GPUs")
+    for cluster in CLUSTERS:
+        for wl in WORKLOADS:
+            table(result, cluster, wl, (1, 2, 4))
 
     print("\nFig. 3 reproduction: 1-4 nodes x 4 GPUs")
-    for cluster in (K80_CLUSTER, V100_CLUSTER):
-        for wl in ("alexnet", "googlenet", "resnet50"):
-            table(cluster, wl, (4, 8, 16))
+    for cluster in CLUSTERS:
+        for wl in WORKLOADS:
+            table(result, cluster, wl, (4, 8, 16))
 
     print("\nPaper findings to look for:")
     print(" * K80 cluster scales near-linearly (comm hides behind bwd)")
     print(" * V100 cluster collapses on ResNet (comm-bound; t_c > t_b)")
     print(" * CNTK (no WFBP) always trails the overlapped frameworks")
-    print(" * bucketed* (beyond paper) recovers latency-bound losses")
+    print(" * bucketed-25mb (beyond paper) recovers latency-bound losses")
 
 
 if __name__ == "__main__":

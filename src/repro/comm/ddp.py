@@ -26,6 +26,17 @@ from repro.models.common import ModelConfig
 from repro.optim.sgd import Optimizer, global_norm
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (top-level API + check_vma on
+    newer jax; jax.experimental.shard_map + check_rep on 0.4.x)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def make_ddp_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh: Mesh,
                         sync_policy: str = "wfbp", dp_axis: str = "data",
                         bucket_bytes: float = 25e6, remat: bool = False):
@@ -56,10 +67,9 @@ def make_ddp_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh: Mesh,
         return new_params, new_opt, out_metrics
 
     batch_specs = {"tokens": P(dp_axis), "labels": P(dp_axis)}
-    step = jax.shard_map(local_step, mesh=mesh,
-                         in_specs=(P(), P(), batch_specs),
-                         out_specs=(P(), P(), P()),
-                         check_vma=False)
+    step = shard_map_compat(local_step, mesh,
+                            in_specs=(P(), P(), batch_specs),
+                            out_specs=(P(), P(), P()))
     return jax.jit(step, donate_argnums=(0, 1))
 
 

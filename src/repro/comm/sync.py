@@ -38,7 +38,14 @@ SYNC_POLICIES = ("none", "at_end", "wfbp", "bucketed")
 def psum_in_backward(x: jax.Array, axis_names: tuple[str, ...],
                      scale: float) -> jax.Array:
     """Identity on the forward pass; the cotangent is ``psum``-ed over
-    ``axis_names`` and divided by ``scale`` on the backward pass."""
+    ``axis_names`` and divided by ``scale`` on the backward pass.
+
+    This is the executable form of the paper's WFBP (§IV-C): tagging a
+    layer's parameters with this op places that layer's gradient
+    all-reduce *inside* the backward pass, i.e. the DAG edge
+    ``bwd_l -> comm_l`` of Fig. 1.  ``scale`` is the data-parallel
+    world size (dimensionless), turning the psum into a mean.
+    """
     return x
 
 
@@ -75,6 +82,10 @@ def wfbp_param_hook(axis_names: Sequence[str], scale: float):
 # at_end: one pmean over the full pytree
 # ----------------------------------------------------------------------
 def pmean_at_end(grads: Any, axis_names: Sequence[str]) -> Any:
+    """Mean-reduce the whole gradient pytree in one blocking collective
+    phase after backward completes — the CNTK schedule of §IV-C, whose
+    iteration time the DAG model's Eq. (3) (late-H2D variant)
+    predicts.  No-op when ``axis_names`` is empty (single device)."""
     axes = tuple(axis_names)
     if not axes:
         return grads
@@ -86,6 +97,12 @@ def pmean_at_end(grads: Any, axis_names: Sequence[str]) -> Any:
 # ----------------------------------------------------------------------
 def bucketed_pmean(grads: Any, axis_names: Sequence[str],
                    bucket_bytes: float = 25e6) -> Any:
+    """Fuse gradient leaves into flat f32 buckets of >= ``bucket_bytes``
+    **bytes** each, mean-reduce one collective per bucket, and scatter
+    back — DDP/Horovod-style fusion, the §VII fix for the 9.6%
+    InfiniBand utilization the paper measured with layer-wise messages
+    (simulated counterpart: ``Policy.bucket_bytes`` +
+    ``repro.core.dag._bucketize``)."""
     axes = tuple(axis_names)
     if not axes:
         return grads
@@ -115,8 +132,11 @@ def bucketed_pmean(grads: Any, axis_names: Sequence[str],
 
 def sync_gradients(grads: Any, policy: str, axis_names: Sequence[str],
                    bucket_bytes: float = 25e6) -> Any:
-    """Post-backward gradient sync dispatch (``wfbp`` grads are already
-    reduced inside the backward pass — mean-normalized by the caller)."""
+    """Post-backward gradient sync dispatch; ``policy`` is one of
+    :data:`SYNC_POLICIES` and ``bucket_bytes`` is the fusion threshold
+    in **bytes** (only used by ``bucketed``).  ``wfbp`` grads are
+    already reduced inside the backward pass — mean-normalized by the
+    caller — so they pass through untouched here."""
     if policy in ("none", "wfbp"):
         return grads
     if policy == "at_end":
@@ -127,6 +147,8 @@ def sync_gradients(grads: Any, policy: str, axis_names: Sequence[str],
 
 
 def axis_size(axis_names: Sequence[str]) -> jax.Array | int:
+    """Product of the named mesh axis sizes (the data-parallel world
+    size ``N_g`` of the paper's equations); 1 when no axes given."""
     n = 1
     for a in axis_names:
         n *= jax.lax.axis_size(a)

@@ -1,3 +1,24 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The paper's DAG model of S-SGD and everything that evaluates it.
+
+Module map (see ``docs/architecture.md`` for the paper mapping):
+
+* :mod:`repro.core.dag` — Fig. 1's task graph + ``IterationCosts``
+  (Table I vocabulary).
+* :mod:`repro.core.simulator` — event-driven list scheduler; turns a
+  DAG into an iteration-time prediction under channel contention.
+* :mod:`repro.core.analytical` — Eqs. (1)-(6) closed forms, plus the
+  late-H2D variants and the ``closed_form`` policy dispatch.
+* :mod:`repro.core.policies` — §IV-C framework taxonomy (overlap
+  booleans) + beyond-paper bucketed/priority policies.
+* :mod:`repro.core.hardware` — Table II clusters, alpha-beta links,
+  ring/tree/hierarchical all-reduce cost models, interconnect presets.
+* :mod:`repro.core.costmodel` — Table IV layer tables (AlexNet,
+  GoogleNet, ResNet-50) -> ``IterationCosts`` on a cluster.
+* :mod:`repro.core.predictor` — single-scenario prediction bridge
+  (§V-D / Fig. 4).
+* :mod:`repro.core.scenarios` / :mod:`repro.core.sweep` — declarative
+  scenario grids and the batched sweep engine (vectorized closed-form
+  fast path + simulator fallback).
+* :mod:`repro.core.archcost` — compiled-HLO cost analysis for the
+  production transformer workloads.
+"""

@@ -63,6 +63,32 @@ def eq5_wfbp(costs: IterationCosts) -> float:
                sum(costs.t_f) + sum(costs.t_b) + tc_no + costs.t_u)
 
 
+def eq3_late_h2d(costs: IterationCosts) -> float:
+    """CNTK pipeline: I/O overlapped but the H2D copy waits for the
+    previous model update (no spare device buffer), so ``t_h2d`` joins
+    the GPU-side chain:
+
+        t_iter = max(t_io + t_h2d, t_h2d + t_f + t_b + t_c + t_u)
+
+    This is the late-H2D variant of Eq. (3); the DAG simulator
+    reproduces it exactly (property-tested).
+    """
+    return max(costs.t_io + costs.t_h2d,
+               costs.t_h2d + sum(costs.t_f) + sum(costs.t_b)
+               + sum(costs.t_c) + costs.t_u)
+
+
+def eq5_late_h2d(costs: IterationCosts) -> float:
+    """MXNet/TensorFlow pipeline: WFBP comm overlap, but late H2D —
+    the late-H2D variant of Eq. (5):
+
+        t_iter = max(t_io + t_h2d, t_h2d + t_f + t_b + t_c^no + t_u)
+    """
+    tc_no = non_overlapped_comm(costs.t_b, costs.t_c)
+    return max(costs.t_io + costs.t_h2d,
+               costs.t_h2d + sum(costs.t_f) + sum(costs.t_b) + tc_no + costs.t_u)
+
+
 def eq6_speedup(costs_1gpu: IterationCosts, costs_n: IterationCosts,
                 n_gpus: int) -> float:
     """Weak-scaling speedup of N_g GPUs over one GPU (Eq. 6).
@@ -79,13 +105,56 @@ def eq6_speedup(costs_1gpu: IterationCosts, costs_n: IterationCosts,
     return n_gpus * t1 / tn if tn > 0 else float(n_gpus)
 
 
+def has_closed_form(policy) -> bool:
+    """True when ``policy``'s steady state has an exact closed form.
+
+    Bucket fusion and priority comm are inexact: bucket boundaries and
+    net-channel reordering depend on the schedule itself, which only
+    the event-driven simulator reproduces.  The single shared predicate
+    for :func:`closed_form` and the sweep engine's fast-path routing.
+    """
+    if policy.bucket_bytes or policy.priority_comm:
+        return False
+    if not policy.overlap_io and (policy.overlap_comm or policy.h2d_early):
+        return False           # combination not studied; simulate it
+    return True
+
+
+def closed_form(costs: IterationCosts, policy) -> float | None:
+    """Exact closed-form steady-state iteration time for ``policy``
+    (a :class:`repro.core.policies.Policy`), or ``None`` when no exact
+    closed form exists and the event-driven simulator must be used.
+
+    Exactness (verified by the property tests in
+    ``tests/test_dag_model.py`` and ``tests/test_sweep.py``):
+
+    * no I/O overlap, no comm overlap  -> Eq. (2)
+    * I/O overlap, early H2D           -> Eq. (3) / Eq. (5) with WFBP
+    * I/O overlap, late H2D            -> the late-H2D variants above
+    * bucket fusion or priority comm   -> inexact (``None``), see
+      :func:`has_closed_form`.
+    """
+    if costs.num_layers == 0 or not has_closed_form(policy):
+        return None
+    if not policy.overlap_io:
+        return eq2_naive_ssgd(costs)
+    if policy.overlap_comm:
+        return eq5_wfbp(costs) if policy.h2d_early else eq5_late_h2d(costs)
+    return eq3_io_overlap(costs) if policy.h2d_early else eq3_late_h2d(costs)
+
+
 def iteration_time(costs: IterationCosts, policy_name: str) -> float:
-    """Dispatch the closed form matching a named policy."""
+    """Dispatch the closed form matching a named policy.
+
+    Raises ``ValueError`` for policies without an exact closed form
+    (bucketed / priority) — use the DAG simulator for those.
+    """
     from repro.core.policies import get_policy
 
     p = get_policy(policy_name)
-    if not p.overlap_io:
-        return eq2_naive_ssgd(costs)
-    if p.overlap_comm:
-        return eq5_wfbp(costs)
-    return eq3_io_overlap(costs)
+    t = closed_form(costs, p)
+    if t is None:
+        raise ValueError(
+            f"policy {policy_name!r} has no exact closed form; "
+            "use repro.core.simulator")
+    return t

@@ -26,17 +26,24 @@ from repro.core.hardware import ClusterSpec
 
 @dataclass(frozen=True)
 class LayerSpec:
+    """One DAG layer's static costs: ``flops_fwd`` in **flop/sample**
+    (forward pass), ``params`` as a raw count (0 = no gradient sync
+    node for this layer in Fig. 1)."""
+
     name: str
     flops_fwd: float          # per-sample forward flops
     params: int               # learnable parameter count (0 = no gradient sync)
 
     @property
     def grad_bytes(self) -> float:
-        return 4.0 * self.params    # f32 gradients, as in the paper
+        """Gradient all-reduce payload in **bytes** (f32, as in the paper)."""
+        return 4.0 * self.params
 
 
 def conv(name: str, h: int, w: int, cout: int, k: int, cin: int,
          groups: int = 1) -> LayerSpec:
+    """Conv layer: ``h x w`` output, ``k x k`` kernel — flops are
+    multiply-accumulate*2 per sample, params include the bias."""
     cin_g = cin // groups
     flops = 2.0 * h * w * cout * k * k * cin_g
     params = cout * (k * k * cin_g) + cout
@@ -44,11 +51,13 @@ def conv(name: str, h: int, w: int, cout: int, k: int, cin: int,
 
 
 def fc(name: str, nin: int, nout: int) -> LayerSpec:
+    """Fully-connected layer: ``2 * nin * nout`` flop/sample."""
     return LayerSpec(name, 2.0 * nin * nout, nin * nout + nout)
 
 
 def act(name: str, elems: int) -> LayerSpec:
-    # activation / pooling / norm: ~1 flop per element, no params
+    """Activation / pooling / norm: ~1 flop per element, no params —
+    never produces a communication node."""
     return LayerSpec(name, float(elems), 0)
 
 
@@ -149,10 +158,12 @@ CNN_WORKLOADS = {
 
 
 def total_params(layers: Sequence[LayerSpec]) -> int:
+    """Total learnable parameter count (multiply by 4 for f32 bytes)."""
     return sum(l.params for l in layers)
 
 
 def total_flops(layers: Sequence[LayerSpec]) -> float:
+    """Total forward flop/sample across the layer table."""
     return sum(l.flops_fwd for l in layers)
 
 
@@ -166,33 +177,54 @@ def make_iteration_costs(
     n_workers: int,
     bytes_per_sample: float = 110e3,
     bwd_fwd_ratio: float = 2.0,
-    decode_flops_per_byte: float = 0.0,
+    decode_seconds_per_byte: float = 0.0,
+    collective: str = "ring",
 ) -> IterationCosts:
-    """Build the paper's Table-I cost vocabulary from a layer table.
+    """Build the paper's Table-I cost vocabulary (all entries in
+    **seconds**) from a layer table:
 
-    ``decode_flops_per_byte`` models host-side JPEG decode (the paper
-    attributes CNTK/TF's poor AlexNet scaling to CPU-side decoding of
-    4096 images/iter); it inflates t_io.
+    * ``t_f``/``t_b`` per layer from per-sample forward FLOPs at the
+      device's achieved flop/s (backward = ``bwd_fwd_ratio`` x forward);
+    * ``t_c`` per layer from the cluster's all-reduce model for
+      ``collective`` (one of
+      :data:`repro.core.hardware.COLLECTIVE_ALGORITHMS`);
+    * ``t_io``/``t_h2d`` from ``batch_per_gpu * bytes_per_sample`` bytes
+      over the disk and PCIe links (Eq. 1's input pipeline terms);
+    * ``t_u`` as one read-modify-write sweep over all parameter bytes at
+      HBM bandwidth.
+
+    ``decode_seconds_per_byte`` models host-side JPEG decode in
+    **seconds per input byte** — achieved host decode rate, inverted
+    (the paper attributes CNTK/TF's poor AlexNet scaling to CPU-side
+    decoding of 4096 images/iter); it inflates ``t_io``.
     """
     t_f = [cluster.compute_time(l.flops_fwd * batch_per_gpu) for l in layers]
     t_b = [bwd_fwd_ratio * tf for tf in t_f]
-    t_c = [cluster.allreduce_time(l.grad_bytes, n_workers) if l.params else 0.0
-           for l in layers]
+    t_c = [cluster.allreduce_time(l.grad_bytes, n_workers, collective)
+           if l.params else 0.0 for l in layers]
     grad_bytes = [l.grad_bytes for l in layers]
     nbytes_in = batch_per_gpu * bytes_per_sample
-    t_io = cluster.io_time(nbytes_in) + decode_flops_per_byte * nbytes_in
+    t_io = cluster.io_time(nbytes_in) + decode_seconds_per_byte * nbytes_in
     t_h2d = cluster.h2d_time(nbytes_in)
-    # update: one read-modify-write over all params on the device
-    pbytes = 4.0 * total_params(layers)
-    t_u = 3.0 * pbytes / cluster.device.hbm_bandwidth
+    t_u = update_time(4.0 * total_params(layers), cluster)
     return IterationCosts(t_f=t_f, t_b=t_b, t_c=t_c, t_io=t_io, t_h2d=t_h2d,
                           t_u=t_u, grad_bytes=grad_bytes)
 
 
-def comm_scale_fn(cluster: ClusterSpec, n_workers: int):
-    """Bucket-fusion collective model for the DAG builder."""
+def update_time(param_bytes: float, cluster: ClusterSpec) -> float:
+    """``t_u`` in seconds: the SGD update as one read-modify-write
+    sweep over ``param_bytes`` bytes of parameters at HBM bandwidth
+    (3x traffic: read param, read grad, write param)."""
+    return 3.0 * param_bytes / cluster.device.hbm_bandwidth
+
+
+def comm_scale_fn(cluster: ClusterSpec, n_workers: int,
+                  collective: str = "ring"):
+    """Bucket-fusion collective model for the DAG builder: maps a fused
+    bucket's total gradient bytes to one collective's duration in
+    seconds under the chosen algorithm (ring / tree / hierarchical)."""
 
     def scale(total_bytes: float, _naive_time: float) -> float:
-        return cluster.allreduce_time(total_bytes, n_workers)
+        return cluster.allreduce_time(total_bytes, n_workers, collective)
 
     return scale

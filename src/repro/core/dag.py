@@ -13,6 +13,7 @@ distinguishes Caffe-MPI / CNTK / MXNet / TensorFlow.
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Sequence
@@ -160,6 +161,16 @@ class IterationCosts:
     @property
     def num_layers(self) -> int:
         return len(self.t_f)
+
+    def with_comm(self, t_c: Sequence[float],
+                  grad_bytes: Sequence[float] | None = None) -> "IterationCosts":
+        """Copy with the per-layer comm durations replaced — used by the
+        sweep engine to re-cost the same compute profile under a
+        different collective algorithm / interconnect without rebuilding
+        the layer tables."""
+        return dataclasses.replace(
+            self, t_c=list(t_c),
+            grad_bytes=self.grad_bytes if grad_bytes is None else list(grad_bytes))
 
     def __post_init__(self):
         if not (len(self.t_f) == len(self.t_b) == len(self.t_c)):

@@ -4,7 +4,12 @@ Calibrated to the paper's Table II clusters (K80+PCIe+10GbE,
 V100+NVLink+100Gb InfiniBand) plus the TPU v5e production target
 this framework deploys on.
 
-All bandwidths are bytes/second, latencies seconds, compute flop/s.
+Units, everywhere in this module: bandwidths are **bytes/second**,
+latencies **seconds**, payloads **bytes**, compute rates **flop/s**,
+and every function returning a time returns **seconds**.  The comm
+cost functions accept NumPy arrays for ``nbytes`` and broadcast
+elementwise — this is what the sweep engine's vectorized fast path
+relies on (:mod:`repro.core.sweep`).
 """
 from __future__ import annotations
 
@@ -16,19 +21,81 @@ GB = 1e9
 MB = 1e6
 US = 1e-6
 
+#: All-reduce algorithms understood by :meth:`ClusterSpec.allreduce_time`.
+#: ``ring`` is the paper's NCCL baseline; ``tree`` models NCCL's
+#: double-binary-tree; ``hierarchical`` is intra-node + inter-node
+#: two-level reduction (§VII of the paper calls for exactly this kind
+#: of topology-aware collective study).
+COLLECTIVE_ALGORITHMS = ("ring", "tree", "hierarchical")
+
 
 @dataclass(frozen=True)
 class Interconnect:
-    """A communication channel with an alpha-beta cost model."""
+    """A communication channel with an alpha-beta cost model.
+
+    ``transfer_time(n)`` = alpha + n / (B * efficiency), i.e. the
+    classic latency/bandwidth model the paper uses for every link
+    (PCIe, NVLink, 10GbE, InfiniBand).
+    """
 
     name: str
     bandwidth: float          # bytes / s (peak, per direction)
     latency: float            # seconds per message (alpha term)
     efficiency: float = 1.0   # achieved fraction of peak for collectives
 
+    @property
+    def effective_bandwidth(self) -> float:
+        """Achieved bytes/s for collectives: ``bandwidth * efficiency``."""
+        return self.bandwidth * self.efficiency
+
     def transfer_time(self, nbytes: float) -> float:
-        """Point-to-point transfer time for ``nbytes``."""
-        return self.latency + nbytes / (self.bandwidth * self.efficiency)
+        """Point-to-point transfer time (seconds) for ``nbytes`` bytes."""
+        return self.latency + nbytes / self.effective_bandwidth
+
+    def scaled(self, bandwidth_factor: float = 1.0,
+               latency_factor: float = 1.0) -> "Interconnect":
+        """A what-if copy with scaled bandwidth and/or latency (used by
+        the sweep engine's interconnect axis and the monotonicity
+        property tests)."""
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}x{bandwidth_factor:g}",
+            bandwidth=self.bandwidth * bandwidth_factor,
+            latency=self.latency * latency_factor,
+        )
+
+
+# ----------------------------------------------------------------------
+# Collective algorithm primitives (alpha-beta closed forms).
+#
+# Each returns seconds for all-reducing ``nbytes`` bytes per rank over
+# ``n`` ranks on a link with ``bandwidth`` effective bytes/s and
+# ``latency`` seconds/message.  ``nbytes`` may be a NumPy array.
+# ----------------------------------------------------------------------
+def ring_allreduce_time(nbytes, n: int, bandwidth: float, latency: float):
+    """Ring all-reduce: ``2 (n-1)/n * M/B + 2 (n-1) alpha`` seconds.
+
+    Bandwidth-optimal (each rank sends ``2 (n-1)/n`` of the payload)
+    but latency grows linearly in ``n`` — the regime behind the 9.6%
+    InfiniBand utilization the paper measured for layer-wise messages.
+    """
+    if n <= 1:
+        return nbytes * 0.0
+    return 2.0 * (n - 1) / n * nbytes / bandwidth + 2.0 * (n - 1) * latency
+
+
+def tree_allreduce_time(nbytes, n: int, bandwidth: float, latency: float):
+    """Double-binary-tree all-reduce: ``2 M/B + 2 ceil(log2 n) alpha``.
+
+    NCCL >= 2.4's tree pair pipelines reduce+broadcast so the bandwidth
+    term is a flat ``2 M/B`` (slightly worse than ring's
+    ``2 (n-1)/n M/B``) while latency grows only logarithmically —
+    strictly better than ring for small messages on large clusters.
+    """
+    if n <= 1:
+        return nbytes * 0.0
+    depth = math.ceil(math.log2(n))
+    return 2.0 * nbytes / bandwidth + 2.0 * depth * latency
 
 
 @dataclass(frozen=True)
@@ -70,53 +137,116 @@ class ClusterSpec:
     # Collective models
     # ------------------------------------------------------------------
     def _bottleneck(self, n_workers: int) -> Interconnect:
-        """The link a ring spanning ``n_workers`` devices is limited by."""
+        """The link a flat ring spanning ``n_workers`` devices is limited by."""
         if n_workers <= self.gpus_per_node:
             return self.intra
         return self.inter
 
-    def allreduce_time(self, nbytes: float, n_workers: int | None = None) -> float:
-        """Ring all-reduce of ``nbytes`` over ``n_workers`` devices.
+    def with_interconnect(self, intra: Interconnect | None = None,
+                          inter: Interconnect | None = None) -> "ClusterSpec":
+        """A copy with the intra- and/or inter-node link replaced —
+        the sweep engine's interconnect axis (PCIe vs NVLink vs 10GbE
+        vs InfiniBand, the paper's four communication techniques)."""
+        return dataclasses.replace(
+            self,
+            intra=intra if intra is not None else self.intra,
+            inter=inter if inter is not None else self.inter,
+        )
 
-        t = 2 (n-1)/n * nbytes / B_eff + 2 (n-1) alpha
+    def allreduce_time(self, nbytes, n_workers: int | None = None,
+                       algorithm: str = "ring"):
+        """All-reduce of ``nbytes`` bytes per rank over ``n_workers``
+        devices; returns **seconds**.
+
+        ``algorithm`` selects the cost model (see
+        :data:`COLLECTIVE_ALGORITHMS`):
+
+        * ``ring`` — Eq.-style ``2 (n-1)/n M/B + 2 (n-1) alpha`` on the
+          bottleneck link (the paper's NCCL baseline, and this method's
+          historical behavior).
+        * ``tree`` — double binary tree, ``2 M/B + 2 ceil(log2 n) alpha``
+          on the bottleneck link.
+        * ``hierarchical`` — intra-node reduce-scatter + all-gather on
+          the intra link around an inter-node ring all-reduce of the
+          ``1/g`` shard on the inter link (NCCL "CollNet"/2D style).
+
+        ``nbytes`` may be a scalar or a NumPy array (vectorized over
+        the layer dimension by the sweep fast path).
         """
+        if algorithm not in COLLECTIVE_ALGORITHMS:
+            raise ValueError(
+                f"unknown collective algorithm {algorithm!r}; "
+                f"one of {COLLECTIVE_ALGORITHMS}")
         n = self.total_devices if n_workers is None else n_workers
         if n <= 1:
-            return 0.0
+            return nbytes * 0.0
+        if algorithm == "hierarchical":
+            return self._hierarchical_allreduce_time(nbytes, n)
         link = self._bottleneck(n)
-        bw = link.bandwidth * link.efficiency
-        return 2.0 * (n - 1) / n * nbytes / bw + 2.0 * (n - 1) * link.latency
+        if algorithm == "ring":
+            return ring_allreduce_time(nbytes, n, link.effective_bandwidth,
+                                       link.latency)
+        return tree_allreduce_time(nbytes, n, link.effective_bandwidth,
+                                   link.latency)
+
+    def _hierarchical_allreduce_time(self, nbytes, n: int):
+        """Two-level all-reduce: ``g``-wide intra-node reduce-scatter,
+        inter-node ring all-reduce of the ``nbytes/g`` shard, intra-node
+        all-gather.  Degenerates to a flat intra ring on one node and to
+        a flat inter ring with one device per node."""
+        g = min(n, self.gpus_per_node)
+        nodes = math.ceil(n / g)
+        t = nbytes * 0.0
+        if g > 1:
+            # reduce-scatter + all-gather, each (g-1)/g * M/B + (g-1) alpha
+            t = t + 2.0 * ((g - 1) / g * nbytes / self.intra.effective_bandwidth
+                           + (g - 1) * self.intra.latency)
+        if nodes > 1:
+            shard = nbytes / g
+            t = t + ring_allreduce_time(shard, nodes,
+                                        self.inter.effective_bandwidth,
+                                        self.inter.latency)
+        return t
 
     def reduce_scatter_time(self, nbytes: float, n_workers: int | None = None) -> float:
+        """Ring reduce-scatter of ``nbytes`` bytes per rank, in seconds:
+        ``(n-1)/n * M/B + (n-1) alpha`` on the bottleneck link."""
         n = self.total_devices if n_workers is None else n_workers
         if n <= 1:
             return 0.0
         link = self._bottleneck(n)
-        bw = link.bandwidth * link.efficiency
-        return (n - 1) / n * nbytes / bw + (n - 1) * link.latency
+        return (n - 1) / n * nbytes / link.effective_bandwidth \
+            + (n - 1) * link.latency
 
     def allgather_time(self, nbytes: float, n_workers: int | None = None) -> float:
+        """Ring all-gather — same alpha-beta cost as reduce-scatter."""
         return self.reduce_scatter_time(nbytes, n_workers)
 
     def alltoall_time(self, nbytes: float, n_workers: int | None = None) -> float:
-        """All-to-all of ``nbytes`` held per device (MoE dispatch)."""
+        """All-to-all of ``nbytes`` bytes held per device (MoE dispatch),
+        in seconds."""
         n = self.total_devices if n_workers is None else n_workers
         if n <= 1:
             return 0.0
         link = self._bottleneck(n)
-        bw = link.bandwidth * link.efficiency
-        return (n - 1) / n * nbytes / bw + (n - 1) * link.latency
+        return (n - 1) / n * nbytes / link.effective_bandwidth \
+            + (n - 1) * link.latency
 
     # ------------------------------------------------------------------
-    # Elementary task models
+    # Elementary task models (the paper's Table I vocabulary)
     # ------------------------------------------------------------------
     def compute_time(self, flops: float) -> float:
+        """Seconds to execute ``flops`` floating-point operations at the
+        device's achieved rate (``peak_flops * compute_efficiency``) —
+        feeds the DAG's ``t_f`` / ``t_b`` nodes."""
         return flops / (self.device.peak_flops * self.device.compute_efficiency)
 
     def io_time(self, nbytes: float) -> float:
+        """Seconds to read ``nbytes`` bytes from storage (``t_io``)."""
         return self.disk.transfer_time(nbytes)
 
     def h2d_time(self, nbytes: float) -> float:
+        """Seconds to copy ``nbytes`` bytes host->device (``t_h2d``)."""
         return self.h2d.transfer_time(nbytes)
 
 
@@ -209,6 +339,41 @@ TPU_V5E_POD = ClusterSpec(
 TPU_V5E_MULTIPOD = dataclasses.replace(TPU_V5E_POD, name="tpu-v5e-2pod", n_nodes=2)
 
 CLUSTERS = {c.name: c for c in (K80_CLUSTER, V100_CLUSTER, TPU_V5E_POD, TPU_V5E_MULTIPOD)}
+
+# ----------------------------------------------------------------------
+# Interconnect presets — the sweep engine's interconnect axis.
+#
+# Each preset names a link and the slot it replaces on a ClusterSpec
+# ("intra" or "inter"); the paper's four communication techniques
+# (PCIe, NVLink, 10GbE, InfiniBand) plus faster what-if variants.
+# ----------------------------------------------------------------------
+INTERCONNECT_PRESETS: dict[str, tuple[str, Interconnect]] = {
+    "pcie": ("intra", Interconnect("pcie3", 15 * GB, 10 * US, efficiency=0.7)),
+    "nvlink": ("intra", Interconnect("nvlink", 95 * GB, 5 * US, efficiency=0.6)),
+    "10gbe": ("inter", Interconnect("10gbe", 1.25 * GB, 50 * US, efficiency=0.7)),
+    "ib-100g": ("inter", Interconnect("ib-100g", 12.5 * GB, 10 * US, efficiency=0.19)),
+    # What-if links beyond the paper's testbeds: IB with DDP-style bucket
+    # fusion reaches far higher collective efficiency, and 200G doubles
+    # the rate.  Useful sweep points for the §VII optimization study.
+    "ib-100g-fused": ("inter", Interconnect("ib-100g-fused", 12.5 * GB, 10 * US,
+                                            efficiency=0.7)),
+    "ib-200g": ("inter", Interconnect("ib-200g", 25 * GB, 10 * US, efficiency=0.7)),
+}
+
+
+def apply_interconnect_preset(cluster: ClusterSpec, preset: str | None) -> ClusterSpec:
+    """Return ``cluster`` with the named preset's link substituted in.
+
+    ``None`` (or ``"default"``) leaves the cluster untouched.
+    """
+    if preset is None or preset == "default":
+        return cluster
+    try:
+        slot, link = INTERCONNECT_PRESETS[preset]
+    except KeyError:
+        raise KeyError(f"unknown interconnect preset {preset!r}; "
+                       f"one of {sorted(INTERCONNECT_PRESETS)} or 'default'")
+    return cluster.with_interconnect(**{slot: link})
 
 # Roofline constants for the v5e target (used by launch/roofline.py).
 V5E_PEAK_FLOPS_BF16 = 197e12

@@ -12,10 +12,10 @@ from dataclasses import dataclass
 from repro.core import analytical
 from repro.core.costmodel import (CNN_WORKLOADS, comm_scale_fn,
                                   make_iteration_costs)
-from repro.core.dag import IterationCosts, build_ssgd_dag
+from repro.core.dag import NET_CHANNEL, IterationCosts
 from repro.core.hardware import ClusterSpec
 from repro.core.policies import Policy
-from repro.core.simulator import simulate
+from repro.core.simulator import simulate_policy, simulate_steady
 
 
 @dataclass(frozen=True)
@@ -37,26 +37,24 @@ def predict(
     costs_1gpu: IterationCosts | None = None,
     cluster: ClusterSpec | None = None,
     warm_iterations: int = 4,
+    collective: str = "ring",
 ) -> Prediction:
     """Steady-state iteration time for ``costs`` under ``policy``."""
-    comm_scale = comm_scale_fn(cluster, n_workers) if cluster else None
-    g = build_ssgd_dag(costs, n_workers, policy, n_iterations=warm_iterations,
-                       comm_scale=comm_scale)
-    prio = frozenset(["net"]) if policy.priority_comm else None
-    r = simulate(g, priority_channels=prio)
+    comm_scale = comm_scale_fn(cluster, n_workers, collective) \
+        if cluster else None
+    r = simulate_policy(costs, n_workers, policy,
+                        n_iterations=warm_iterations, comm_scale=comm_scale)
     t_iter = r.steady_iteration_time()
 
     base = costs_1gpu or costs
     c1 = IterationCosts(t_f=base.t_f, t_b=base.t_b, t_c=[0.0] * base.num_layers,
                         t_io=base.t_io, t_h2d=base.t_h2d, t_u=base.t_u)
-    g1 = build_ssgd_dag(c1, 1, policy, n_iterations=warm_iterations)
-    t1 = simulate(g1).steady_iteration_time()
+    t1 = simulate_steady(c1, 1, policy, n_iterations=warm_iterations)
     speedup = n_workers * t1 / t_iter if t_iter > 0 else float(n_workers)
 
-    try:
-        ana = analytical.iteration_time(costs, policy.name)
-    except KeyError:
-        ana = None
+    # None for bucketed/priority policies: their steady state has no
+    # exact closed form, only the simulator result above.
+    ana = analytical.closed_form(costs, policy)
     return Prediction(
         policy=policy.name,
         n_workers=n_workers,
@@ -64,7 +62,7 @@ def predict(
         analytical_time=ana,
         samples_per_sec=n_workers * batch_per_gpu / t_iter if t_iter else 0.0,
         speedup=speedup,
-        comm_utilization=r.utilization("net"),
+        comm_utilization=r.utilization(NET_CHANNEL),
     )
 
 
@@ -73,17 +71,24 @@ def predict_cnn(
     cluster: ClusterSpec,
     n_workers: int,
     policy: Policy,
+    collective: str = "ring",
     **cost_kw,
 ) -> Prediction:
-    """End-to-end: paper CNN workload name -> prediction on a cluster."""
+    """End-to-end: paper CNN workload name -> prediction on a cluster.
+
+    ``collective`` picks the all-reduce cost model (ring / tree /
+    hierarchical, see :data:`repro.core.hardware.COLLECTIVE_ALGORITHMS`).
+    """
     builder, batch, bytes_per_sample = CNN_WORKLOADS[workload]
     layers = builder()
     costs = make_iteration_costs(layers, cluster, batch, n_workers,
-                                 bytes_per_sample=bytes_per_sample, **cost_kw)
+                                 bytes_per_sample=bytes_per_sample,
+                                 collective=collective, **cost_kw)
     costs_1 = make_iteration_costs(layers, cluster, batch, 1,
-                                   bytes_per_sample=bytes_per_sample, **cost_kw)
+                                   bytes_per_sample=bytes_per_sample,
+                                   collective=collective, **cost_kw)
     return predict(costs, n_workers, policy, batch_per_gpu=batch,
-                   costs_1gpu=costs_1, cluster=cluster)
+                   costs_1gpu=costs_1, cluster=cluster, collective=collective)
 
 
 def scaling_curve(workload: str, cluster: ClusterSpec, policy: Policy,

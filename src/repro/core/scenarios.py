@@ -1,0 +1,136 @@
+"""Declarative scenario grids for the S-SGD sweep engine.
+
+A :class:`Scenario` is one fully-specified what-if question the paper's
+DAG model can answer: *this* workload on *this* cluster with *this*
+many workers, *this* interconnect, *this* overlap policy and *this*
+all-reduce algorithm.  A :class:`ScenarioGrid` is the cross product of
+axis values — the shape of study behind the paper's Figs. 2-4 (four
+frameworks x two clusters x three CNNs x 1..16 GPUs) and of every
+follow-up study §VII calls for.
+
+:mod:`repro.core.sweep` evaluates grids; this module only describes
+and validates them, so grids stay cheap to build, hash and diff.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Iterator, Sequence
+
+from repro.core.costmodel import CNN_WORKLOADS
+from repro.core.hardware import (CLUSTERS, COLLECTIVE_ALGORITHMS,
+                                 INTERCONNECT_PRESETS, ClusterSpec,
+                                 apply_interconnect_preset)
+from repro.core.policies import ALL_POLICIES, Policy, get_policy
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One point of the sweep: a fully-resolved what-if question.
+
+    ``interconnect`` is ``None`` (cluster default) or a preset name from
+    :data:`repro.core.hardware.INTERCONNECT_PRESETS`; ``batch_per_gpu``
+    ``None`` means the workload's Table-IV default.
+    """
+
+    workload: str
+    cluster: str
+    n_workers: int
+    policy: str
+    collective: str = "ring"
+    interconnect: str | None = None
+    batch_per_gpu: int | None = None
+
+    def label(self) -> str:
+        ic = self.interconnect or "default"
+        return (f"{self.workload}/{self.cluster}/w{self.n_workers}"
+                f"/{self.policy}/{self.collective}/{ic}")
+
+    def validate(self) -> None:
+        if self.workload not in CNN_WORKLOADS:
+            raise ValueError(f"unknown workload {self.workload!r}; "
+                             f"one of {sorted(CNN_WORKLOADS)}")
+        if self.cluster not in CLUSTERS:
+            raise ValueError(f"unknown cluster {self.cluster!r}; "
+                             f"one of {sorted(CLUSTERS)}")
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if self.policy not in ALL_POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}; "
+                             f"one of {sorted(ALL_POLICIES)}")
+        if self.collective not in COLLECTIVE_ALGORITHMS:
+            raise ValueError(f"unknown collective {self.collective!r}; "
+                             f"one of {COLLECTIVE_ALGORITHMS}")
+        if self.interconnect is not None \
+                and self.interconnect != "default" \
+                and self.interconnect not in INTERCONNECT_PRESETS:
+            raise ValueError(f"unknown interconnect preset "
+                             f"{self.interconnect!r}; one of "
+                             f"{sorted(INTERCONNECT_PRESETS)} or None")
+        if self.batch_per_gpu is not None and self.batch_per_gpu < 1:
+            raise ValueError(f"batch_per_gpu must be >= 1, "
+                             f"got {self.batch_per_gpu}")
+
+
+def resolve_cluster(scenario: Scenario) -> ClusterSpec:
+    """Concrete :class:`ClusterSpec` for a scenario: the named base
+    cluster resized to hold ``n_workers`` devices (whole nodes of
+    ``gpus_per_node``, like the paper's 1/2/4-node testbeds) with the
+    interconnect preset applied."""
+    base = CLUSTERS[scenario.cluster]
+    n_nodes = max(1, math.ceil(scenario.n_workers / base.gpus_per_node))
+    cluster = base.with_workers(n_nodes=n_nodes)
+    return apply_interconnect_preset(cluster, scenario.interconnect)
+
+
+def resolve_policy(scenario: Scenario) -> Policy:
+    return get_policy(scenario.policy)
+
+
+@dataclass(frozen=True)
+class ScenarioGrid:
+    """Cross product of sweep axes; ``expand()`` yields the scenarios.
+
+    Every axis value is validated eagerly at expansion so a typo'd
+    policy name fails before the first evaluation, not after thousands.
+    """
+
+    workloads: Sequence[str] = ("alexnet", "googlenet", "resnet50")
+    clusters: Sequence[str] = ("k80-pcie-10gbe", "v100-nvlink-ib")
+    worker_counts: Sequence[int] = (1, 2, 4, 8, 16)
+    policies: Sequence[str] = ("naive", "cntk", "mxnet", "tensorflow",
+                               "caffe-mpi")
+    collectives: Sequence[str] = ("ring",)
+    interconnects: Sequence[str | None] = (None,)
+    batch_per_gpu: int | None = None
+
+    def __len__(self) -> int:
+        return (len(self.workloads) * len(self.clusters)
+                * len(self.worker_counts) * len(self.policies)
+                * len(self.collectives) * len(self.interconnects))
+
+    def __iter__(self) -> Iterator[Scenario]:
+        return iter(self.expand())
+
+    def expand(self) -> list[Scenario]:
+        out = []
+        for wl, cl, n, pol, coll, ic in itertools.product(
+                self.workloads, self.clusters, self.worker_counts,
+                self.policies, self.collectives, self.interconnects):
+            s = Scenario(workload=wl, cluster=cl, n_workers=int(n),
+                         policy=pol, collective=coll, interconnect=ic,
+                         batch_per_gpu=self.batch_per_gpu)
+            s.validate()
+            out.append(s)
+        return out
+
+def default_grid() -> ScenarioGrid:
+    """The out-of-the-box study: every paper workload and cluster, six
+    cluster sizes, the five exactly-solvable policies, and all three
+    collective algorithms — 540 scenarios, all on the analytical fast
+    path."""
+    return ScenarioGrid(
+        worker_counts=(1, 2, 4, 8, 16, 32),
+        collectives=COLLECTIVE_ALGORITHMS,
+    )

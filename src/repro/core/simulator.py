@@ -11,8 +11,10 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
+from typing import Callable
 
-from repro.core.dag import DAG, Task, TaskKind
+from repro.core.dag import (DAG, NET_CHANNEL, IterationCosts, Task, TaskKind,
+                            build_ssgd_dag)
 
 
 @dataclass(frozen=True)
@@ -116,3 +118,37 @@ def simulate(dag: DAG, priority_channels: frozenset[str] | None = None) -> SimRe
 
     makespan = max((s.finish for s in schedule.values()), default=0.0)
     return SimResult(makespan, schedule, channel_busy)
+
+
+def simulate_policy(
+    costs: IterationCosts,
+    n_workers: int,
+    policy,
+    n_iterations: int = 6,
+    comm_scale: Callable[[float, float], float] | None = None,
+) -> SimResult:
+    """Build the Fig.-1 S-SGD DAG for ``policy`` and list-schedule it.
+
+    One-stop entry point shared by the predictor, the sweep engine's
+    simulator fallback, and the property tests; honors
+    ``policy.priority_comm`` by putting the collective channel in
+    priority-scheduling mode.
+    """
+    g = build_ssgd_dag(costs, n_workers, policy, n_iterations=n_iterations,
+                       comm_scale=comm_scale)
+    prio = frozenset([NET_CHANNEL]) if getattr(policy, "priority_comm", False) \
+        else None
+    return simulate(g, priority_channels=prio)
+
+
+def simulate_steady(
+    costs: IterationCosts,
+    n_workers: int,
+    policy,
+    n_iterations: int = 6,
+    comm_scale: Callable[[float, float], float] | None = None,
+) -> float:
+    """:func:`simulate_policy`, reduced to the warm per-iteration time
+    in seconds."""
+    return simulate_policy(costs, n_workers, policy, n_iterations,
+                           comm_scale).steady_iteration_time()

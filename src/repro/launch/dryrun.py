@@ -27,7 +27,7 @@ from repro.configs import ARCH_IDS, SHAPES, dryrun_matrix, get_config
 from repro.core import archcost
 from repro.launch import hlo as hlo_mod
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import activate_mesh, make_production_mesh
 from repro.models import sharding as shd
 from repro.optim.sgd import sgd
 
@@ -101,7 +101,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
                 donate_argnums=(1,) if donate else ())
             args = (pshape, specs)
 
-        with jax.sharding.set_mesh(mesh):
+        with activate_mesh(mesh):
             t0 = time.time()
             lowered = jitted.lower(*args)
             t1 = time.time()

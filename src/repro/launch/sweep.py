@@ -1,0 +1,122 @@
+"""Scenario-sweep CLI: evaluate a grid of S-SGD what-if scenarios and
+emit a tidy results table.
+
+    PYTHONPATH=src python -m repro.launch.sweep
+    PYTHONPATH=src python -m repro.launch.sweep \\
+        --workloads resnet50 --clusters v100-nvlink-ib \\
+        --workers 4,8,16,32 --policies caffe-mpi,bucketed-25mb \\
+        --collectives ring,tree,hierarchical --csv /tmp/sweep.csv
+
+Axis values are comma-separated; ``--interconnects`` accepts preset
+names from ``repro.core.hardware.INTERCONNECT_PRESETS`` plus
+``default`` (keep the cluster's own links).  The default grid is 540
+scenarios, all on the analytical fast path (< 1 s end to end).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+from repro.core.hardware import COLLECTIVE_ALGORITHMS, INTERCONNECT_PRESETS
+from repro.core.scenarios import default_grid
+from repro.core.sweep import COLUMNS, sweep
+
+
+def _csv_list(text: str) -> list[str]:
+    return [t.strip() for t in text.split(",") if t.strip()]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.launch.sweep",
+        description="Batched what-if sweep over the S-SGD DAG model.")
+    p.add_argument("--workloads", type=_csv_list, default=None,
+                   help="comma-separated workloads (alexnet,googlenet,resnet50)")
+    p.add_argument("--clusters", type=_csv_list, default=None,
+                   help="comma-separated cluster names")
+    p.add_argument("--workers", type=_csv_list, default=None,
+                   help="comma-separated worker counts, e.g. 1,4,16,64")
+    p.add_argument("--policies", type=_csv_list, default=None,
+                   help="comma-separated policy names (see repro.core.policies)")
+    p.add_argument("--collectives", type=_csv_list, default=None,
+                   help=f"comma-separated algorithms {COLLECTIVE_ALGORITHMS}")
+    p.add_argument("--interconnects", type=_csv_list, default=None,
+                   help="comma-separated presets "
+                        f"({', '.join(sorted(INTERCONNECT_PRESETS))}) "
+                        "and/or 'default'")
+    p.add_argument("--batch-per-gpu", type=int, default=None,
+                   help="override the workload's per-GPU batch size")
+    p.add_argument("--force-simulator", action="store_true",
+                   help="run every scenario through the event-driven "
+                        "simulator (slow; for validation)")
+    p.add_argument("--sort", default="samples_per_sec",
+                   help="result column to sort by (descending)")
+    p.add_argument("--top", type=int, default=20,
+                   help="print only the best N rows (0 = all)")
+    p.add_argument("--csv", default=None, metavar="PATH",
+                   help="also write the full table as CSV")
+    return p
+
+
+def grid_from_args(args: argparse.Namespace):
+    """Default grid with any CLI-provided axes substituted in
+    (unknown axis names are impossible: argparse defines the flags)."""
+    base = default_grid()
+    axes: dict = {}
+    if args.workloads:
+        axes["workloads"] = tuple(args.workloads)
+    if args.clusters:
+        axes["clusters"] = tuple(args.clusters)
+    if args.workers:
+        axes["worker_counts"] = tuple(int(w) for w in args.workers)
+    if args.policies:
+        axes["policies"] = tuple(args.policies)
+    if args.collectives:
+        axes["collectives"] = tuple(args.collectives)
+    if args.interconnects:
+        axes["interconnects"] = tuple(
+            None if i == "default" else i for i in args.interconnects)
+    if args.batch_per_gpu is not None:
+        axes["batch_per_gpu"] = args.batch_per_gpu
+    return dataclasses.replace(base, **axes)
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    try:
+        grid = grid_from_args(args)
+        grid.expand()                  # validate axis values up front
+    except (ValueError, KeyError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if args.sort and args.sort not in COLUMNS:
+        print(f"error: unknown --sort column {args.sort!r}; "
+              f"one of {', '.join(COLUMNS)}", file=sys.stderr)
+        return 2
+    print(f"sweep: {len(grid)} scenarios "
+          f"({len(grid.workloads)} workloads x {len(grid.clusters)} clusters "
+          f"x {len(grid.worker_counts)} sizes x {len(grid.policies)} policies "
+          f"x {len(grid.collectives)} collectives "
+          f"x {len(grid.interconnects)} interconnects)")
+    result = sweep(grid, force_simulator=args.force_simulator)
+    print(f"evaluated in {result.elapsed_s:.2f}s "
+          f"({result.n_analytical} analytical, "
+          f"{result.n_simulated} simulated)")
+
+    rows = result.sorted_by(args.sort) if args.sort else result.rows
+    limit = args.top if args.top and args.top > 0 else None
+    print()
+    print(result.format_table(rows, limit=limit))
+    if limit is not None and len(rows) > limit:
+        print(f"... {len(rows) - limit} more rows "
+              f"(use --top 0 for all, --csv for the full table)")
+    if args.csv:
+        result.to_csv(args.csv)
+        print(f"\nwrote {len(result)} rows to {args.csv}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

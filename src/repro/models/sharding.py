@@ -132,7 +132,8 @@ def resolve_spec(shape, dim_candidates, sc: ShardingConfig) -> P:
             axes = sc._axis(logical)
             if axes is None:
                 continue
-            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            was_tuple = isinstance(axes, tuple)
+            axes_t = axes if was_tuple else (axes,)
             # progressively drop trailing axes until divisible & unused
             while axes_t:
                 prod = 1
@@ -146,7 +147,10 @@ def resolve_spec(shape, dim_candidates, sc: ShardingConfig) -> P:
                     break
                 axes_t = axes_t[:-1]
             if axes_t:
-                chosen = axes_t if len(axes_t) > 1 else axes_t[0]
+                # keep tuple-ness: a multi-axis logical role stays a
+                # tuple entry even when dropped to one axis (older jax
+                # PartitionSpecs do not equate 'x' with ('x',))
+                chosen = axes_t if was_tuple else axes_t[0]
                 used.update(axes_t)
                 break
         out.append(chosen)

@@ -1,0 +1,111 @@
+"""Minimal stand-in for the slice of the `hypothesis` API this test
+suite uses, loaded by ``conftest.py`` only when the real library is not
+installed (the build image forbids adding dependencies).
+
+It runs each ``@given`` test ``max_examples`` times with values drawn
+from a deterministically seeded PRNG (seed = CRC32 of the test's
+qualified name), so failures are reproducible run-to-run.  It does NOT
+shrink counterexamples or track coverage — when the real ``hypothesis``
+package is available it is always preferred.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, Sequence
+
+
+class Strategy:
+    """A value source: ``do_draw(rng)`` yields one example."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw = draw_fn
+
+    def do_draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda r: fn(self.do_draw(r)))
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    return Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    return Strategy(
+        lambda r: [elements.do_draw(r) for _ in range(r.randint(min_size, max_size))])
+
+
+def sampled_from(seq: Sequence[Any]) -> Strategy:
+    items = list(seq)
+    return Strategy(lambda r: items[r.randrange(len(items))])
+
+
+class DataObject:
+    """Interactive draw handle for ``@given(st.data())`` tests."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: Strategy, label: str | None = None) -> Any:
+        return strategy.do_draw(self._rng)
+
+
+def data() -> Strategy:
+    return Strategy(lambda r: DataObject(r))
+
+
+def composite(fn: Callable) -> Callable[..., Strategy]:
+    """``@composite`` strategies: ``fn(draw, *args)`` -> value."""
+
+    @functools.wraps(fn)
+    def make(*args: Any, **kwargs: Any) -> Strategy:
+        return Strategy(lambda r: fn(lambda s: s.do_draw(r), *args, **kwargs))
+
+    return make
+
+
+class settings:
+    """Decorator recording ``max_examples``; other knobs are ignored."""
+
+    def __init__(self, max_examples: int = 20, deadline: Any = None, **_: Any):
+        self.max_examples = max_examples
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._mini_hyp_settings = self  # read by the @given wrapper
+        return fn
+
+
+def given(*strategies: Strategy) -> Callable[[Callable], Callable]:
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args: Any, **kwargs: Any):
+            cfg = getattr(wrapper, "_mini_hyp_settings", None)
+            n = cfg.max_examples if cfg is not None else 20
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.do_draw(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        # Hide the drawn parameters from pytest's fixture resolution:
+        # the wrapper's visible signature keeps only the leading params
+        # (e.g. ``self``) that the strategies do not supply.
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[:len(params) - len(strategies)]
+        wrapper.__signature__ = inspect.Signature(keep)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return deco

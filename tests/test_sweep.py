@@ -1,0 +1,292 @@
+"""Scenario-sweep engine: grid expansion, analytical-vs-simulator
+agreement, collective-algorithm cost models, and bandwidth
+monotonicity (ISSUE 1 acceptance criteria)."""
+import dataclasses
+import random
+
+import pytest
+
+from repro.core import analytical as A
+from repro.core import hardware as HW
+from repro.core.costmodel import make_iteration_costs, CNN_WORKLOADS
+from repro.core.policies import ALL_POLICIES, get_policy
+from repro.core.scenarios import (Scenario, ScenarioGrid, default_grid,
+                                  resolve_cluster)
+from repro.core.sweep import evaluate_scenario, has_fast_path, sweep
+
+EXACT_POLICIES = ("naive", "cntk", "mxnet", "tensorflow", "caffe-mpi")
+
+
+class TestGridExpansion:
+    def test_cross_product_size(self):
+        g = ScenarioGrid(workloads=("alexnet",), clusters=("v100-nvlink-ib",),
+                         worker_counts=(1, 4), policies=("naive", "cntk"),
+                         collectives=("ring", "tree"),
+                         interconnects=(None, "ib-200g"))
+        scenarios = g.expand()
+        assert len(scenarios) == len(g) == 1 * 1 * 2 * 2 * 2 * 2
+        assert len(set(scenarios)) == len(scenarios)      # all distinct
+
+    def test_default_grid_meets_acceptance_size(self):
+        assert len(default_grid()) >= 500
+
+    @pytest.mark.parametrize("field,value", [
+        ("workload", "vgg16"), ("cluster", "dgx-h100"),
+        ("policy", "horovod"), ("collective", "butterfly"),
+        ("interconnect", "carrier-pigeon"), ("n_workers", 0),
+        ("batch_per_gpu", 0), ("batch_per_gpu", -4)])
+    def test_invalid_axis_value_rejected(self, field, value):
+        kw = dict(workload="alexnet", cluster="v100-nvlink-ib",
+                  n_workers=4, policy="naive")
+        kw[field] = value
+        with pytest.raises(ValueError):
+            Scenario(**kw).validate()
+
+    def test_replace_rejects_unknown_axis(self):
+        with pytest.raises(TypeError):
+            dataclasses.replace(default_grid(), worker_count=(1,))
+
+    def test_resolve_cluster_sizes_nodes(self):
+        s = Scenario("alexnet", "v100-nvlink-ib", 32, "naive")
+        c = resolve_cluster(s)
+        assert c.gpus_per_node == 4 and c.n_nodes == 8
+        s1 = Scenario("alexnet", "v100-nvlink-ib", 3, "naive")
+        assert resolve_cluster(s1).n_nodes == 1
+
+    def test_resolve_cluster_applies_preset(self):
+        s = Scenario("alexnet", "k80-pcie-10gbe", 16, "naive",
+                     interconnect="ib-100g")
+        assert resolve_cluster(s).inter.name == "ib-100g"
+
+
+class TestArrayValuedClosedForms:
+    def test_closed_form_accepts_numpy_costs(self):
+        """The fast path feeds ndarray-valued IterationCosts into the
+        scalar closed forms; they must agree with list-based costs."""
+        import numpy as np
+
+        from repro.core.dag import IterationCosts
+
+        rng = random.Random(7)
+        for _ in range(50):
+            L = rng.randint(1, 12)
+            t_f = [rng.uniform(0.01, 10.0) for _ in range(L)]
+            t_b = [rng.uniform(0.01, 10.0) for _ in range(L)]
+            t_c = [rng.uniform(0.0, 10.0) if rng.random() > 0.3 else 0.0
+                   for _ in range(L)]
+            lists = IterationCosts(t_f=t_f, t_b=t_b, t_c=t_c,
+                                   t_io=1.0, t_h2d=0.5, t_u=0.2)
+            arrays = IterationCosts(t_f=np.asarray(t_f),
+                                    t_b=np.asarray(t_b),
+                                    t_c=np.asarray(t_c),
+                                    t_io=1.0, t_h2d=0.5, t_u=0.2)
+            for name in EXACT_POLICIES:
+                pol = get_policy(name)
+                assert float(A.closed_form(arrays, pol)) == pytest.approx(
+                    A.closed_form(lists, pol), abs=1e-12)
+
+
+class TestAnalyticalSimulatorAgreement:
+    """ISSUE-1 acceptance: the fast path matches the event-driven
+    simulator within 1e-6 on no-overlap policies (and, in fact, on
+    every policy with an exact closed form)."""
+
+    @pytest.mark.parametrize("policy", ["naive", "cntk"])
+    def test_no_overlap_policies_within_1e6(self, policy):
+        grid = ScenarioGrid(worker_counts=(1, 2, 16), policies=(policy,),
+                            collectives=HW.COLLECTIVE_ALGORITHMS)
+        for s in grid.expand():
+            fast = evaluate_scenario(s, method="analytical")
+            slow = evaluate_scenario(s, method="simulator")
+            assert fast["iteration_time_s"] == pytest.approx(
+                slow["iteration_time_s"], rel=1e-6), s.label()
+
+    @pytest.mark.parametrize("policy", ["mxnet", "caffe-mpi"])
+    def test_overlap_policies_also_exact(self, policy):
+        grid = ScenarioGrid(workloads=("alexnet", "resnet50"),
+                            worker_counts=(4, 16), policies=(policy,))
+        for s in grid.expand():
+            fast = evaluate_scenario(s, method="analytical")
+            slow = evaluate_scenario(s, method="simulator")
+            assert fast["iteration_time_s"] == pytest.approx(
+                slow["iteration_time_s"], rel=1e-6), s.label()
+
+    def test_fast_path_covers_exact_policies_only(self):
+        for name, pol in ALL_POLICIES.items():
+            expected = name in EXACT_POLICIES
+            assert has_fast_path(pol) == expected, name
+
+    def test_bucketed_routes_through_simulator(self):
+        g = ScenarioGrid(workloads=("alexnet",), clusters=("v100-nvlink-ib",),
+                         worker_counts=(4,),
+                         policies=("caffe-mpi", "bucketed-25mb"))
+        r = sweep(g)
+        assert r.n_analytical == 1 and r.n_simulated == 1
+        methods = {row["policy"]: row["method"] for row in r.rows}
+        assert methods == {"caffe-mpi": "analytical",
+                           "bucketed-25mb": "simulated"}
+
+
+class TestCollectiveAlgorithms:
+    def test_tree_beats_ring_for_small_messages_large_n(self):
+        # 4 KB gradient over 64 workers: latency-dominated
+        link = HW.Interconnect("x", 10 * HW.GB, 10 * HW.US)
+        ring = HW.ring_allreduce_time(4096, 64, link.effective_bandwidth,
+                                      link.latency)
+        tree = HW.tree_allreduce_time(4096, 64, link.effective_bandwidth,
+                                      link.latency)
+        assert tree < ring
+
+    def test_ring_beats_tree_for_large_messages(self):
+        # 1 GB over 8 workers: bandwidth-dominated; ring moves
+        # 2(n-1)/n < 2 payloads per rank
+        link = HW.Interconnect("x", 10 * HW.GB, 10 * HW.US)
+        ring = HW.ring_allreduce_time(1e9, 8, link.effective_bandwidth,
+                                      link.latency)
+        tree = HW.tree_allreduce_time(1e9, 8, link.effective_bandwidth,
+                                      link.latency)
+        assert ring < tree
+
+    def test_hierarchical_equals_ring_on_single_node(self):
+        c = HW.V100_CLUSTER
+        n = c.gpus_per_node                    # fits one node
+        for nbytes in (1e4, 1e6, 1e8):
+            assert c.allreduce_time(nbytes, n, "hierarchical") == \
+                pytest.approx(c.allreduce_time(nbytes, n, "ring"))
+
+    def test_hierarchical_beats_flat_ring_across_nodes(self):
+        # 16 GPUs over 4 nodes: the flat ring pays 2*15 inter-node
+        # alphas; hierarchical pays 2*3 intra + 2*3 inter on 1/4 the
+        # payload
+        c = HW.V100_CLUSTER
+        assert c.allreduce_time(25e6, 16, "hierarchical") < \
+            c.allreduce_time(25e6, 16, "ring")
+
+    def test_unknown_algorithm_rejected(self):
+        with pytest.raises(ValueError, match="unknown collective"):
+            HW.V100_CLUSTER.allreduce_time(1e6, 8, "butterfly")
+
+    def test_single_worker_free(self):
+        for alg in HW.COLLECTIVE_ALGORITHMS:
+            assert HW.V100_CLUSTER.allreduce_time(1e9, 1, alg) == 0.0
+
+
+class TestBandwidthMonotonicity:
+    """More bandwidth never increases predicted iteration time."""
+
+    @pytest.mark.parametrize("policy", EXACT_POLICIES)
+    @pytest.mark.parametrize("collective", HW.COLLECTIVE_ALGORITHMS)
+    def test_closed_forms_monotone_in_link_bandwidth(self, policy, collective):
+        base = HW.V100_CLUSTER
+        boosted = dataclasses.replace(
+            base, intra=base.intra.scaled(2.0), inter=base.inter.scaled(2.0))
+        builder, batch, bps = CNN_WORKLOADS["resnet50"]
+        layers = builder()
+        pol = get_policy(policy)
+        for n in (2, 4, 16):
+            t_base = A.closed_form(
+                make_iteration_costs(layers, base, batch, n,
+                                     bytes_per_sample=bps,
+                                     collective=collective), pol)
+            t_boost = A.closed_form(
+                make_iteration_costs(layers, boosted, batch, n,
+                                     bytes_per_sample=bps,
+                                     collective=collective), pol)
+            assert t_boost <= t_base + 1e-12
+
+    def test_sweep_monotone_across_interconnect_presets(self):
+        # ib-100g strictly dominates 10gbe (higher effective bandwidth,
+        # lower latency), so no scenario may get slower under it
+        kw = dict(workloads=("alexnet", "resnet50"),
+                  clusters=("k80-pcie-10gbe",), worker_counts=(8, 16),
+                  policies=EXACT_POLICIES,
+                  collectives=HW.COLLECTIVE_ALGORITHMS)
+        slow_net = sweep(ScenarioGrid(interconnects=("10gbe",), **kw))
+        fast_net = sweep(ScenarioGrid(interconnects=("ib-100g",), **kw))
+        assert len(slow_net) == len(fast_net)
+        for a, b in zip(slow_net.rows, fast_net.rows):
+            assert b["iteration_time_s"] <= a["iteration_time_s"] + 1e-12
+
+
+class TestSweepEngine:
+    def test_default_grid_fast_and_under_budget(self):
+        r = sweep(default_grid())
+        assert len(r) >= 500
+        assert r.n_simulated == 0
+        assert r.elapsed_s < 30.0          # acceptance gate (actual: ~0.1 s)
+
+    def test_row_schema_and_sanity(self):
+        from repro.core.sweep import COLUMNS
+
+        r = sweep(ScenarioGrid(workloads=("googlenet",),
+                               worker_counts=(1, 4), policies=("caffe-mpi",)))
+        for row in r.rows:
+            assert set(row) == set(COLUMNS)
+            assert row["iteration_time_s"] > 0
+            assert row["samples_per_sec"] > 0
+            assert 0 < row["speedup"] <= row["n_workers"] + 1e-9
+
+    def test_speedup_baseline_is_single_worker(self):
+        r = sweep(ScenarioGrid(workloads=("alexnet",),
+                               clusters=("k80-pcie-10gbe",),
+                               worker_counts=(1,), policies=("caffe-mpi",)))
+        [row] = r.rows
+        assert row["speedup"] == pytest.approx(1.0)
+
+    def test_to_csv_roundtrip(self, tmp_path):
+        import csv
+
+        r = sweep(ScenarioGrid(workloads=("alexnet",), worker_counts=(2,),
+                               policies=("naive",)))
+        path = tmp_path / "sweep.csv"
+        r.to_csv(path)
+        with open(path) as f:
+            rows = list(csv.DictReader(f))
+        assert len(rows) == len(r)
+        assert float(rows[0]["iteration_time_s"]) == pytest.approx(
+            r.rows[0]["iteration_time_s"])
+
+    def test_filter_and_sort(self):
+        r = sweep(ScenarioGrid(workloads=("alexnet",),
+                               worker_counts=(2, 4), policies=("naive",)))
+        sub = r.filter(n_workers=4)
+        assert {x["n_workers"] for x in sub} == {4}
+        top = r.sorted_by("samples_per_sec")
+        assert top[0]["samples_per_sec"] >= top[-1]["samples_per_sec"]
+
+
+class TestSweepCLI:
+    def test_main_smoke(self, capsys, tmp_path):
+        from repro.launch.sweep import main
+
+        out_csv = tmp_path / "out.csv"
+        rc = main(["--workloads", "alexnet", "--clusters", "v100-nvlink-ib",
+                   "--workers", "2,4", "--policies", "naive,caffe-mpi",
+                   "--collectives", "ring,tree", "--top", "3",
+                   "--csv", str(out_csv)])
+        assert rc == 0
+        captured = capsys.readouterr().out
+        assert "8 scenarios" in captured
+        assert "8 analytical" in captured
+        assert out_csv.exists()
+
+    def test_main_default_grid_meets_acceptance(self, capsys):
+        from repro.launch.sweep import main
+
+        rc = main(["--top", "1"])
+        assert rc == 0
+        captured = capsys.readouterr().out
+        assert "540 scenarios" in captured
+
+    @pytest.mark.parametrize("argv", [
+        ["--policies", "horovod"],
+        ["--collectives", "butterfly"],
+        ["--batch-per-gpu", "0"],
+        ["--sort", "iter_ms"],
+    ])
+    def test_main_invalid_input_fails_cleanly(self, argv, capsys):
+        from repro.launch.sweep import main
+
+        rc = main(argv + ["--workers", "2", "--workloads", "alexnet"])
+        assert rc == 2
+        assert "error:" in capsys.readouterr().err
