@@ -1,0 +1,74 @@
+"""Sweep-engine throughput: scenarios/second on the analytical fast
+path, for the 540-scenario default grid and the 1620-scenario
+mixed-provider grid (cnn: + trace: + llm:).
+
+    PYTHONPATH=src python -m benchmarks.bench_sweep_throughput
+    PYTHONPATH=src python -m benchmarks.bench_sweep_throughput --smoke
+
+Prints the shared ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_sweep.json`` (override with ``--json``) so the perf trajectory
+of the engine is tracked run over run.  ``--smoke`` does one timed
+repeat per grid — the CI regression gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from benchmarks.common import row
+from repro.core.scenarios import default_grid, mixed_grid
+from repro.core.sweep import sweep
+
+
+def _throughput(grid, repeats: int) -> dict:
+    n = len(grid)
+    sweep(grid)                          # warm the workload-table cache
+    elapsed = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = sweep(grid)
+        elapsed.append(time.perf_counter() - t0)
+    elapsed.sort()
+    med = elapsed[len(elapsed) // 2]
+    return {
+        "n_scenarios": n,
+        "elapsed_s": med,
+        "scenarios_per_sec": n / med,
+        "n_analytical": result.n_analytical,
+        "n_simulated": result.n_simulated,
+    }
+
+
+def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
+    repeats = 1 if smoke else 5
+    grids = {"default_grid": default_grid(), "mixed_grid": mixed_grid()}
+    report: dict = {"smoke": smoke, "repeats": repeats}
+    for name, grid in grids.items():
+        r = _throughput(grid, repeats)
+        report[name] = r
+        row(f"sweep_{name}", r["elapsed_s"] * 1e6,
+            f"{r['scenarios_per_sec']:.0f} scenarios/s "
+            f"({r['n_scenarios']} scenarios)")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single timed repeat per grid (CI mode)")
+    ap.add_argument("--json", default="BENCH_sweep.json", metavar="PATH",
+                    help="output JSON path ('' to skip)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,7 @@ import argparse
 import sys
 import traceback
 
-SUITES = ("fig2", "fig3", "fig4", "table6", "kernels", "roofline")
+SUITES = ("fig2", "fig3", "fig4", "table6", "kernels", "roofline", "sweep")
 
 
 def main(argv=None) -> int:
@@ -38,6 +38,8 @@ def main(argv=None) -> int:
                 from benchmarks.bench_kernels import run
             elif name == "roofline":
                 from benchmarks.bench_roofline import run
+            elif name == "sweep":
+                from benchmarks.bench_sweep_throughput import run
             run()
         except Exception:  # noqa: BLE001
             failures += 1

@@ -103,6 +103,67 @@ def _attention_flops_fwd(cfg: ModelConfig, S: int, B: int) -> float:
     return total
 
 
+@dataclass(frozen=True)
+class BlockCost:
+    """One DAG layer of an ``llm:`` workload: the embedding, one
+    pattern block, one audio-encoder block, or the untied LM head."""
+
+    name: str
+    flops_fwd: float          # forward flops for ONE sequence of seq_len tokens
+    params: float             # total learnable params (gradient payload)
+    active_params: float      # per-token-active params (compute source)
+
+
+def _block_attn_flops_fwd(cfg: ModelConfig, kind: str, S: int) -> float:
+    """Score+value matmul forward flops of one block for one sequence —
+    the per-block slice of :func:`_attention_flops_fwd` (B=1)."""
+    H, hd = cfg.num_heads, cfg.head_size
+    if kind == "G":
+        return 2.0 * S * S * H * hd
+    if kind == "L":
+        return 4.0 * S * _attn_ctx(cfg, kind, S) * H * hd
+    if kind == "C":
+        return 2.0 * S * S * H * hd + 4.0 * S * _attn_ctx(cfg, kind, S) * H * hd
+    if kind == "W":
+        return 4.0 * S * hd * cfg.d_model
+    if kind == "R":
+        return 8.0 * S * cfg.rnn_size
+    raise ValueError(kind)
+
+
+def block_cost_table(cfg: ModelConfig, seq_len: int) -> list[BlockCost]:
+    """Slice the architecture into per-block layer costs — the
+    ``llm:`` workload provider's cost source.
+
+    Follows :func:`param_counts` / :func:`step_cost` exactly: every
+    parameter matrix contributes ``2 * active_params * seq_len`` forward
+    matmul flops per sequence (embeddings included, per the 6ND
+    convention) plus the block kind's attention term, so
+
+    * ``sum(params)`` == ``param_counts(cfg)[0]``,
+    * ``sum(active_params)`` == ``param_counts(cfg)[1]``,
+    * ``3 * B * sum(flops_fwd)`` == ``step_cost(cfg, train).flops``
+      when the shapes' ``seq_len`` match (train = 3x forward).
+    """
+    S = seq_len
+    emb = float(cfg.vocab_size * cfg.d_model)
+    table = [BlockCost("embed", 2.0 * emb * S, emb, emb)]
+    for i, kind in enumerate(_pattern_of(cfg)):
+        total, active = _block_params(cfg, kind)
+        table.append(BlockCost(
+            f"block{i}_{kind}",
+            2.0 * active * S + _block_attn_flops_fwd(cfg, kind, S),
+            float(total), float(active)))
+    if cfg.arch_type == "audio":
+        d = cfg.d_model
+        enc = float(4 * d * d + 2 * d * cfg.d_ff)
+        for j in range(cfg.encoder_layers):
+            table.append(BlockCost(f"enc{j}", 2.0 * enc * S, enc, enc))
+    if not cfg.tie_embeddings:
+        table.append(BlockCost("lm_head", 2.0 * emb * S, emb, emb))
+    return table
+
+
 def step_cost(cfg: ModelConfig, shape: InputShape) -> StepCost:
     B, S = shape.global_batch, shape.seq_len
     n_total, n_active = param_counts(cfg)

@@ -171,17 +171,26 @@ def total_flops(layers: Sequence[LayerSpec]) -> float:
 # LayerSpec list -> IterationCosts on a concrete cluster.
 # ----------------------------------------------------------------------
 def make_iteration_costs(
-    layers: Sequence[LayerSpec],
+    layers: Sequence[LayerSpec] | str,
     cluster: ClusterSpec,
     batch_per_gpu: int,
     n_workers: int,
-    bytes_per_sample: float = 110e3,
-    bwd_fwd_ratio: float = 2.0,
+    bytes_per_sample: float | None = None,
+    bwd_fwd_ratio: float | None = None,
     decode_seconds_per_byte: float = 0.0,
     collective: str = "ring",
 ) -> IterationCosts:
     """Build the paper's Table-I cost vocabulary (all entries in
-    **seconds**) from a layer table:
+    **seconds**) from a layer table.
+
+    ``layers`` may also be a workload *name* (``"resnet50"``,
+    ``"cnn:alexnet"``, ``"trace:alexnet-k80"``, ``"llm:gemma3-1b"`` —
+    anything :func:`repro.core.workloads.resolve_workload` accepts), in
+    which case the memoized registry table supplies the per-layer
+    costs; ``bytes_per_sample`` ``None`` then means the workload's own
+    value (and 110e3, the Table-IV ImageNet figure, for a layer table).
+
+    From a layer table:
 
     * ``t_f``/``t_b`` per layer from per-sample forward FLOPs at the
       device's achieved flop/s (backward = ``bwd_fwd_ratio`` x forward);
@@ -198,6 +207,18 @@ def make_iteration_costs(
     (the paper attributes CNTK/TF's poor AlexNet scaling to CPU-side
     decoding of 4096 images/iter); it inflates ``t_io``.
     """
+    if isinstance(layers, str):
+        from repro.core.workloads import resolve_workload  # circular-safe
+
+        return resolve_workload(layers).iteration_costs(
+            cluster, batch_per_gpu, n_workers, collective,
+            bwd_fwd_ratio=bwd_fwd_ratio,
+            bytes_per_sample=bytes_per_sample,
+            decode_seconds_per_byte=decode_seconds_per_byte)
+    if bytes_per_sample is None:
+        bytes_per_sample = 110e3
+    if bwd_fwd_ratio is None:
+        bwd_fwd_ratio = 2.0
     t_f = [cluster.compute_time(l.flops_fwd * batch_per_gpu) for l in layers]
     t_b = [bwd_fwd_ratio * tf for tf in t_f]
     t_c = [cluster.allreduce_time(l.grad_bytes, n_workers, collective)

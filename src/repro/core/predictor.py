@@ -10,12 +10,12 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core import analytical
-from repro.core.costmodel import (CNN_WORKLOADS, comm_scale_fn,
-                                  make_iteration_costs)
+from repro.core.costmodel import comm_scale_fn
 from repro.core.dag import NET_CHANNEL, IterationCosts
 from repro.core.hardware import ClusterSpec
 from repro.core.policies import Policy
 from repro.core.simulator import simulate_policy, simulate_steady
+from repro.core.workloads import resolve_workload
 
 
 @dataclass(frozen=True)
@@ -66,32 +66,40 @@ def predict(
     )
 
 
-def predict_cnn(
+def predict_workload(
     workload: str,
     cluster: ClusterSpec,
     n_workers: int,
     policy: Policy,
     collective: str = "ring",
+    batch_per_gpu: int | None = None,
     **cost_kw,
 ) -> Prediction:
-    """End-to-end: paper CNN workload name -> prediction on a cluster.
+    """End-to-end: registry workload name -> prediction on a cluster.
 
-    ``collective`` picks the all-reduce cost model (ring / tree /
-    hierarchical, see :data:`repro.core.hardware.COLLECTIVE_ALGORITHMS`).
+    ``workload`` is anything the registry resolves — a paper CNN
+    (``"resnet50"``), a measured trace (``"trace:alexnet-k80"``) or an
+    LLM config (``"llm:gemma3-1b"``).  ``collective`` picks the
+    all-reduce cost model (ring / tree / hierarchical, see
+    :data:`repro.core.hardware.COLLECTIVE_ALGORITHMS`); ``cost_kw``
+    (``bwd_fwd_ratio``, ``bytes_per_sample``,
+    ``decode_seconds_per_byte``) forwards to
+    :meth:`~repro.core.workloads.WorkloadTable.iteration_costs`.
     """
-    builder, batch, bytes_per_sample = CNN_WORKLOADS[workload]
-    layers = builder()
-    costs = make_iteration_costs(layers, cluster, batch, n_workers,
-                                 bytes_per_sample=bytes_per_sample,
-                                 collective=collective, **cost_kw)
-    costs_1 = make_iteration_costs(layers, cluster, batch, 1,
-                                   bytes_per_sample=bytes_per_sample,
-                                   collective=collective, **cost_kw)
+    tab = resolve_workload(workload)
+    batch = batch_per_gpu or tab.batch_default
+    costs = tab.iteration_costs(cluster, batch, n_workers, collective,
+                                **cost_kw)
+    costs_1 = tab.iteration_costs(cluster, batch, 1, collective, **cost_kw)
     return predict(costs, n_workers, policy, batch_per_gpu=batch,
                    costs_1gpu=costs_1, cluster=cluster, collective=collective)
 
 
+#: Pre-registry name, kept for callers of the CNN-only era.
+predict_cnn = predict_workload
+
+
 def scaling_curve(workload: str, cluster: ClusterSpec, policy: Policy,
                   worker_counts=(1, 2, 4, 8, 16), **cost_kw) -> list[Prediction]:
-    return [predict_cnn(workload, cluster, n, policy, **cost_kw)
+    return [predict_workload(workload, cluster, n, policy, **cost_kw)
             for n in worker_counts]

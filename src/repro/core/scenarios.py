@@ -18,20 +18,25 @@ import math
 from dataclasses import dataclass
 from typing import Iterator, Sequence
 
-from repro.core.costmodel import CNN_WORKLOADS
 from repro.core.hardware import (CLUSTERS, COLLECTIVE_ALGORITHMS,
                                  INTERCONNECT_PRESETS, ClusterSpec,
                                  apply_interconnect_preset)
 from repro.core.policies import ALL_POLICIES, Policy, get_policy
+from repro.core.workloads import validate_workload
 
 
 @dataclass(frozen=True)
 class Scenario:
     """One point of the sweep: a fully-resolved what-if question.
 
-    ``interconnect`` is ``None`` (cluster default) or a preset name from
+    ``workload`` is any name the workload registry resolves
+    (:func:`repro.core.workloads.resolve_workload`): a bare Table-IV
+    CNN name, ``cnn:<name>``, ``trace:<bundled-or-path>`` or
+    ``llm:<arch>``.  ``interconnect`` is ``None`` (cluster default) or
+    a preset name from
     :data:`repro.core.hardware.INTERCONNECT_PRESETS`; ``batch_per_gpu``
-    ``None`` means the workload's Table-IV default.
+    ``None`` means the workload's default (Table IV for CNNs, the
+    measured batch for traces, one sequence for LLM configs).
     """
 
     workload: str
@@ -48,9 +53,7 @@ class Scenario:
                 f"/{self.policy}/{self.collective}/{ic}")
 
     def validate(self) -> None:
-        if self.workload not in CNN_WORKLOADS:
-            raise ValueError(f"unknown workload {self.workload!r}; "
-                             f"one of {sorted(CNN_WORKLOADS)}")
+        validate_workload(self.workload)     # any registered provider
         if self.cluster not in CLUSTERS:
             raise ValueError(f"unknown cluster {self.cluster!r}; "
                              f"one of {sorted(CLUSTERS)}")
@@ -131,6 +134,22 @@ def default_grid() -> ScenarioGrid:
     collective algorithms — 540 scenarios, all on the analytical fast
     path."""
     return ScenarioGrid(
+        worker_counts=(1, 2, 4, 8, 16, 32),
+        collectives=COLLECTIVE_ALGORITHMS,
+    )
+
+
+def mixed_grid() -> ScenarioGrid:
+    """A cross-provider study on the same closed-form fast path: one
+    Table-IV CNN, the bundled Table-VI measured trace, and three
+    modern LLM configs (dense / MoE / recurrent), over both paper
+    clusters and the TPU pod, six sizes, five exact policies and all
+    three collectives — 1620 scenarios."""
+    return ScenarioGrid(
+        workloads=("cnn:resnet50", "trace:alexnet-k80",
+                   "llm:gemma3-1b", "llm:qwen2-moe-a2.7b",
+                   "llm:recurrentgemma-2b", "llm:qwen1.5-32b"),
+        clusters=("k80-pcie-10gbe", "v100-nvlink-ib", "tpu-v5e-pod"),
         worker_counts=(1, 2, 4, 8, 16, 32),
         collectives=COLLECTIVE_ALGORITHMS,
     )

@@ -7,10 +7,11 @@ combinations — in one call, two ways:
 * **Analytical fast path** (the default for every policy whose closed
   form is exact — see :func:`repro.core.analytical.has_closed_form`):
   the per-layer cost model is evaluated as NumPy arrays over the layer
-  dimension (layer tables built once per workload and shared across
-  every scenario that uses them) and fed straight into the shared
-  closed forms of :mod:`repro.core.analytical`; each scenario costs
-  microseconds.
+  dimension (workload tables resolved through the pluggable registry
+  of :mod:`repro.core.workloads` — ``cnn:``/``trace:``/``llm:`` — and
+  memoized at module scope, shared across every scenario and every
+  call) and fed straight into the shared closed forms of
+  :mod:`repro.core.analytical`; each scenario costs microseconds.
 * **Event-driven fallback** for policies whose steady state depends on
   the schedule itself (gradient-bucket fusion, priority comm): the
   Fig.-1 DAG is built and list-scheduled via
@@ -22,6 +23,7 @@ every policy with an exact closed form.
 from __future__ import annotations
 
 import csv
+import json
 import time
 from dataclasses import dataclass, replace
 from typing import Iterable, Sequence
@@ -29,14 +31,12 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from repro.core import analytical
-from repro.core.costmodel import (CNN_WORKLOADS, comm_scale_fn,
-                                  make_iteration_costs, total_params,
-                                  update_time)
-from repro.core.dag import IterationCosts
+from repro.core.costmodel import comm_scale_fn
 from repro.core.policies import Policy
 from repro.core.scenarios import (Scenario, ScenarioGrid, resolve_cluster,
                                   resolve_policy)
 from repro.core.simulator import simulate_steady
+from repro.core.workloads import WorkloadTable, resolve_workload
 
 #: Column order of the tidy results table.
 COLUMNS = ("workload", "cluster", "n_workers", "policy", "collective",
@@ -52,72 +52,35 @@ def has_fast_path(policy: Policy) -> bool:
     return analytical.has_closed_form(policy)
 
 
-@dataclass(frozen=True)
-class _WorkloadTable:
-    """Per-workload layer arrays, built once and shared by the batch."""
-
-    flops_fwd: np.ndarray         # (L,) per-sample forward flops
-    grad_bytes: np.ndarray        # (L,) f32 gradient payload per layer
-    batch_default: int
-    bytes_per_sample: float
-    param_bytes: float            # total 4B * params
-
-
-def _workload_table(workload: str) -> _WorkloadTable:
-    builder, batch, bytes_per_sample = CNN_WORKLOADS[workload]
-    layers = builder()
-    return _WorkloadTable(
-        flops_fwd=np.array([l.flops_fwd for l in layers], dtype=np.float64),
-        grad_bytes=np.array([l.grad_bytes for l in layers], dtype=np.float64),
-        batch_default=batch,
-        bytes_per_sample=bytes_per_sample,
-        param_bytes=4.0 * total_params(layers),
-    )
+def _scenario_costs(s: Scenario, tab: WorkloadTable):
+    """(costs, cluster, policy, batch) for one scenario, through the
+    single construction path every workload provider shares
+    (:meth:`repro.core.workloads.WorkloadTable.iteration_costs`)."""
+    cluster = resolve_cluster(s)
+    policy = resolve_policy(s)
+    batch = s.batch_per_gpu or tab.batch_default
+    costs = tab.iteration_costs(cluster, batch, s.n_workers, s.collective)
+    return costs, cluster, policy, batch
 
 
-def _fast_eval(s: Scenario, tab: _WorkloadTable,
-               bwd_fwd_ratio: float = 2.0) -> dict:
+def _fast_eval(s: Scenario) -> dict:
     """Analytical fast path: one scenario, NumPy arrays over the layer
     dimension fed straight into the shared closed forms (the scalar
     equations in :mod:`repro.core.analytical` are pure arithmetic over
     sequences, so array-valued ``IterationCosts`` evaluate directly —
     no parallel formula implementation to keep in lockstep)."""
-    cluster = resolve_cluster(s)
-    policy = resolve_policy(s)
-    batch = s.batch_per_gpu or tab.batch_default
-    t_f = cluster.compute_time(tab.flops_fwd * batch)
-    t_b = bwd_fwd_ratio * t_f
-    if s.n_workers > 1:
-        t_c = np.where(
-            tab.grad_bytes > 0,
-            cluster.allreduce_time(tab.grad_bytes, s.n_workers, s.collective),
-            0.0)
-    else:
-        t_c = np.zeros_like(t_f)
-    nbytes_in = batch * tab.bytes_per_sample
-    costs = IterationCosts(
-        t_f=t_f, t_b=t_b, t_c=t_c,
-        t_io=cluster.io_time(nbytes_in),
-        t_h2d=cluster.h2d_time(nbytes_in),
-        t_u=update_time(tab.param_bytes, cluster),
-        grad_bytes=tab.grad_bytes)
-
+    costs, _, policy, batch = _scenario_costs(s, resolve_workload(s.workload))
     t_iter = float(analytical.closed_form(costs, policy))
     t1 = float(analytical.closed_form(
-        costs.with_comm(np.zeros_like(t_f)), policy))
-    return _row(s, batch, t_iter, t1, float(np.sum(t_c)),
-                float(np.sum(t_f) + np.sum(t_b)), "analytical")
+        costs.with_comm(np.zeros_like(costs.t_f)), policy))
+    return _row(s, batch, t_iter, t1, float(np.sum(costs.t_c)),
+                float(np.sum(costs.t_f) + np.sum(costs.t_b)), "analytical")
 
 
 def _sim_eval(s: Scenario, warm_iterations: int = 6) -> dict:
     """Event-driven fallback: build the Fig.-1 DAG and list-schedule."""
-    cluster = resolve_cluster(s)
-    policy = resolve_policy(s)
-    builder, batch_default, bytes_per_sample = CNN_WORKLOADS[s.workload]
-    batch = s.batch_per_gpu or batch_default
-    costs = make_iteration_costs(builder(), cluster, batch, s.n_workers,
-                                 bytes_per_sample=bytes_per_sample,
-                                 collective=s.collective)
+    tab = resolve_workload(s.workload)
+    costs, cluster, policy, batch = _scenario_costs(s, tab)
     comm_scale = comm_scale_fn(cluster, s.n_workers, s.collective) \
         if policy.bucket_bytes else None
     t_iter = simulate_steady(costs, s.n_workers, policy,
@@ -129,8 +92,8 @@ def _sim_eval(s: Scenario, warm_iterations: int = 6) -> dict:
     t1 = analytical.closed_form(c1, base_policy)
     if t1 is None:                                    # pragma: no cover
         t1 = simulate_steady(c1, 1, base_policy, n_iterations=warm_iterations)
-    return _row(s, batch, t_iter, t1, float(sum(costs.t_c)),
-                float(sum(costs.t_f) + sum(costs.t_b)), "simulated")
+    return _row(s, batch, t_iter, t1, float(np.sum(costs.t_c)),
+                float(np.sum(costs.t_f) + np.sum(costs.t_b)), "simulated")
 
 
 def _row(s: Scenario, batch: int, t_iter: float, t1: float, t_comm: float,
@@ -178,6 +141,23 @@ class SweepResult:
             w.writeheader()
             w.writerows(self.rows)
 
+    def to_json(self, path=None, indent: int | None = 2) -> str:
+        """The full result as a JSON document (and optionally write it
+        to ``path``): sweep metadata plus the tidy rows."""
+        doc = {
+            "columns": list(COLUMNS),
+            "n_scenarios": len(self.rows),
+            "elapsed_s": self.elapsed_s,
+            "n_analytical": self.n_analytical,
+            "n_simulated": self.n_simulated,
+            "rows": self.rows,
+        }
+        text = json.dumps(doc, indent=indent)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
     def to_dataframe(self):
         """Results as a pandas DataFrame (pandas is optional)."""
         import pandas as pd
@@ -189,13 +169,14 @@ class SweepResult:
         rows = self.rows if rows is None else list(rows)
         if limit is not None:
             rows = rows[:limit]
-        header = (f"{'workload':10s} {'cluster':16s} {'wk':>3s} "
+        # wide enough for provider-prefixed names (llm:qwen2-moe-a2.7b)
+        header = (f"{'workload':22s} {'cluster':16s} {'wk':>3s} "
                   f"{'policy':13s} {'coll':12s} {'interconn':12s} "
                   f"{'iter_ms':>9s} {'samp/s':>10s} {'speedup':>7s} {'m':>2s}")
         lines = [header, "-" * len(header)]
         for r in rows:
             lines.append(
-                f"{r['workload']:10s} {r['cluster']:16s} "
+                f"{r['workload']:22s} {r['cluster']:16s} "
                 f"{r['n_workers']:3d} {r['policy']:13s} "
                 f"{r['collective']:12s} {r['interconnect']:12s} "
                 f"{r['iteration_time_s'] * 1e3:9.2f} "
@@ -216,16 +197,12 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
     scenarios = grid.expand() if isinstance(grid, ScenarioGrid) \
         else list(grid)
     t0 = time.perf_counter()
-    tables: dict[str, _WorkloadTable] = {}
     rows: list[dict] = []
     n_fast = n_slow = 0
     for s in scenarios:
         s.validate()
         if not force_simulator and has_fast_path(resolve_policy(s)):
-            tab = tables.get(s.workload)
-            if tab is None:
-                tab = tables[s.workload] = _workload_table(s.workload)
-            rows.append(_fast_eval(s, tab))
+            rows.append(_fast_eval(s))     # tables memoized in the registry
             n_fast += 1
         else:
             rows.append(_sim_eval(s, warm_iterations))
@@ -245,9 +222,9 @@ def evaluate_scenario(s: Scenario, method: str = "auto",
     if method == "analytical":
         if not has_fast_path(policy):
             raise ValueError(f"policy {s.policy!r} has no exact closed form")
-        return _fast_eval(s, _workload_table(s.workload))
+        return _fast_eval(s)
     if method != "auto":
         raise ValueError(f"unknown method {method!r}")
     if has_fast_path(policy):
-        return _fast_eval(s, _workload_table(s.workload))
+        return _fast_eval(s)
     return _sim_eval(s, warm_iterations)

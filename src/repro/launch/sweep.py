@@ -2,15 +2,22 @@
 emit a tidy results table.
 
     PYTHONPATH=src python -m repro.launch.sweep
+    PYTHONPATH=src python -m repro.launch.sweep --grid mixed
     PYTHONPATH=src python -m repro.launch.sweep \\
-        --workloads resnet50 --clusters v100-nvlink-ib \\
+        --workloads cnn:resnet50,trace:alexnet-k80,llm:gemma3-1b \\
+        --clusters v100-nvlink-ib \\
         --workers 4,8,16,32 --policies caffe-mpi,bucketed-25mb \\
         --collectives ring,tree,hierarchical --csv /tmp/sweep.csv
 
-Axis values are comma-separated; ``--interconnects`` accepts preset
-names from ``repro.core.hardware.INTERCONNECT_PRESETS`` plus
-``default`` (keep the cluster's own links).  The default grid is 540
-scenarios, all on the analytical fast path (< 1 s end to end).
+Workloads resolve through the pluggable registry
+(``repro.core.workloads``): bare paper CNN names or ``cnn:<name>``,
+``trace:<bundled-name-or-file-path>``, ``llm:<arch>`` — see
+``--list-workloads``.  Axis values are comma-separated;
+``--interconnects`` accepts preset names from
+``repro.core.hardware.INTERCONNECT_PRESETS`` plus ``default`` (keep
+the cluster's own links).  The default grid is 540 scenarios, all on
+the analytical fast path (< 1 s end to end); ``--grid mixed`` spans
+all three providers (1620 scenarios, same fast path).
 """
 from __future__ import annotations
 
@@ -19,8 +26,9 @@ import dataclasses
 import sys
 
 from repro.core.hardware import COLLECTIVE_ALGORITHMS, INTERCONNECT_PRESETS
-from repro.core.scenarios import default_grid
+from repro.core.scenarios import default_grid, mixed_grid
 from repro.core.sweep import COLUMNS, sweep
+from repro.core.workloads import known_workloads
 
 
 def _csv_list(text: str) -> list[str]:
@@ -31,8 +39,17 @@ def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="repro.launch.sweep",
         description="Batched what-if sweep over the S-SGD DAG model.")
+    p.add_argument("--grid", choices=("default", "mixed"), default="default",
+                   help="base grid: 'default' (paper CNNs, 540 scenarios) "
+                        "or 'mixed' (cnn:/trace:/llm: providers, 1620); "
+                        "other axis flags override either")
     p.add_argument("--workloads", type=_csv_list, default=None,
-                   help="comma-separated workloads (alexnet,googlenet,resnet50)")
+                   help="comma-separated workload names: bare CNNs "
+                        "(alexnet,googlenet,resnet50), cnn:<name>, "
+                        "trace:<bundled-or-path>, llm:<arch> "
+                        "(see --list-workloads)")
+    p.add_argument("--list-workloads", action="store_true",
+                   help="print every registered workload name and exit")
     p.add_argument("--clusters", type=_csv_list, default=None,
                    help="comma-separated cluster names")
     p.add_argument("--workers", type=_csv_list, default=None,
@@ -56,13 +73,16 @@ def build_parser() -> argparse.ArgumentParser:
                    help="print only the best N rows (0 = all)")
     p.add_argument("--csv", default=None, metavar="PATH",
                    help="also write the full table as CSV")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write the full table (plus sweep metadata) "
+                        "as JSON")
     return p
 
 
 def grid_from_args(args: argparse.Namespace):
-    """Default grid with any CLI-provided axes substituted in
+    """The chosen base grid with any CLI-provided axes substituted in
     (unknown axis names are impossible: argparse defines the flags)."""
-    base = default_grid()
+    base = mixed_grid() if args.grid == "mixed" else default_grid()
     axes: dict = {}
     if args.workloads:
         axes["workloads"] = tuple(args.workloads)
@@ -85,6 +105,10 @@ def grid_from_args(args: argparse.Namespace):
 def main(argv: list[str] | None = None) -> int:
     parser = build_parser()
     args = parser.parse_args(argv)
+    if args.list_workloads:
+        for name in known_workloads():
+            print(name)
+        return 0
     try:
         grid = grid_from_args(args)
         grid.expand()                  # validate axis values up front
@@ -115,6 +139,9 @@ def main(argv: list[str] | None = None) -> int:
     if args.csv:
         result.to_csv(args.csv)
         print(f"\nwrote {len(result)} rows to {args.csv}")
+    if args.json:
+        result.to_json(args.json)
+        print(f"\nwrote {len(result)} rows to {args.json}")
     return 0
 
 

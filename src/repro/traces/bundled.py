@@ -37,6 +37,11 @@ _ALEXNET_K80_ROWS = [
     (21, "loss", 1723.49, 293.024, 0, 0),
 ]
 
-ALEXNET_K80: Trace = make_trace("alexnet", "k80-pcie-10gbe", _ALEXNET_K80_ROWS)
+# Table IV's AlexNet config: 1024 samples per GPU per iteration.
+ALEXNET_K80: Trace = make_trace("alexnet", "k80-pcie-10gbe", _ALEXNET_K80_ROWS,
+                                batch_per_gpu=1024)
+
+#: Bundled traces the ``trace:`` workload provider resolves by name.
+BUNDLED_TRACES: dict[str, Trace] = {"alexnet-k80": ALEXNET_K80}
 
 TOTAL_GRAD_BYTES = sum(r[5] for r in _ALEXNET_K80_ROWS)   # ~244 MB = 61M f32

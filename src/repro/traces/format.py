@@ -35,11 +35,33 @@ class LayerRecord:
 
 @dataclass(frozen=True)
 class Trace:
-    """One or more iterations of layer-wise records."""
+    """One or more iterations of layer-wise records.
+
+    ``batch_per_gpu`` is the per-device batch the trace was measured
+    at (``# batch:`` header; 0 = unrecorded), used by the ``trace:``
+    workload provider to scale times to other batch sizes.
+
+    Every iteration must record the same layers: ragged iterations are
+    rejected at construction (a truncated trace file would otherwise
+    silently skew :meth:`mean_iteration` or crash on indexing).
+    """
 
     network: str
     cluster: str
     iterations: tuple[tuple[LayerRecord, ...], ...]
+    batch_per_gpu: int = 0
+
+    def __post_init__(self):
+        if not self.iterations:
+            raise ValueError("trace has no iterations")
+        counts = {len(it) for it in self.iterations}
+        if len(counts) > 1:
+            raise ValueError(
+                f"ragged trace: iterations record different layer counts "
+                f"{sorted(counts)}; every iteration must have the same "
+                f"layers")
+        if 0 in counts:
+            raise ValueError("trace iteration has no layer records")
 
     @property
     def num_layers(self) -> int:
@@ -59,21 +81,39 @@ class Trace:
                                    rec.size_bytes))
         return tuple(out)
 
+    def mean_compute_records(self) -> tuple[tuple[LayerRecord, ...],
+                                            float | None]:
+        """``(compute_records, io_seconds)``: the mean iteration with
+        the Caffe ``data`` layer split off as the input-pipeline time
+        in **seconds** (``None`` when there is no data layer).
+
+        Caffe traces put the input pipeline in a ``data`` layer whose
+        forward time is the blocking fetch+decode (e.g. 1.2 s for
+        AlexNet's 1024-batch in Table VI).  This is the one place that
+        convention lives; :meth:`to_iteration_costs` and the ``trace:``
+        workload provider both consume it.
+        """
+        recs = list(self.mean_iteration())
+        io_time = None
+        if recs and recs[0].name == "data":
+            io_time = recs[0].forward_us * US
+            recs = recs[1:]
+        return tuple(recs), io_time
+
     def to_iteration_costs(self, t_io: float | None = None,
                            t_h2d: float = 0.0, t_u: float = 0.0,
                            data_layer_as_io: bool = True) -> IterationCosts:
         """Convert to seconds-based :class:`IterationCosts`.
 
-        Caffe traces put the input pipeline in a ``data`` layer whose
-        forward time is the blocking fetch+decode (e.g. 1.2 s for
-        AlexNet's 1024-batch in Table VI); with ``data_layer_as_io``
-        that layer becomes ``t_io`` rather than a compute layer.
+        With ``data_layer_as_io`` the Caffe ``data`` layer becomes
+        ``t_io`` rather than a compute layer (see
+        :meth:`mean_compute_records`).
         """
-        recs = list(self.mean_iteration())
-        io_time = 0.0
-        if data_layer_as_io and recs and recs[0].name == "data":
-            io_time = recs[0].forward_us * US
-            recs = recs[1:]
+        if data_layer_as_io:
+            recs, io_measured = self.mean_compute_records()
+            io_time = io_measured or 0.0
+        else:
+            recs, io_time = list(self.mean_iteration()), 0.0
         if t_io is not None:
             io_time = t_io
         return IterationCosts(
@@ -88,21 +128,26 @@ class Trace:
 
 
 def write_trace(trace: Trace, path: str | Path) -> None:
+    # %.17g is the shortest format that round-trips every float64
+    # exactly, so write_trace -> read_trace is the identity.
     with open(path, "w") as f:
         f.write(f"# network: {trace.network}\n# cluster: {trace.cluster}\n")
+        if trace.batch_per_gpu:
+            f.write(f"# batch: {trace.batch_per_gpu}\n")
         f.write("# Id\tName\tForward\tBackward\tComm.\tSize\n")
         for k, it in enumerate(trace.iterations):
             f.write(f"# iteration {k}\n")
             for r in it:
-                f.write(f"{r.layer_id}\t{r.name}\t{r.forward_us:.10g}\t"
-                        f"{r.backward_us:.10g}\t{r.comm_us:.10g}\t"
-                        f"{r.size_bytes:.10g}\n")
+                f.write(f"{r.layer_id}\t{r.name}\t{r.forward_us:.17g}\t"
+                        f"{r.backward_us:.17g}\t{r.comm_us:.17g}\t"
+                        f"{r.size_bytes:.17g}\n")
 
 
 def read_trace(path: str | Path, network: str = "", cluster: str = "") -> Trace:
     iterations: list[list[LayerRecord]] = []
     cur: list[LayerRecord] = []
     meta = {"network": network, "cluster": cluster}
+    batch = 0
     with open(path) as f:
         for line in f:
             line = line.strip()
@@ -114,6 +159,14 @@ def read_trace(path: str | Path, network: str = "", cluster: str = "") -> Trace:
                     meta["network"] = body.split(":", 1)[1].strip()
                 elif body.startswith("cluster:"):
                     meta["cluster"] = body.split(":", 1)[1].strip()
+                elif body.startswith("batch:"):
+                    value = body.split(":", 1)[1].strip()
+                    try:
+                        batch = int(value)
+                    except ValueError:
+                        raise ValueError(
+                            f"malformed trace file {path}: '# batch:' "
+                            f"value {value!r} is not an integer") from None
                 elif body.startswith("iteration") and cur:
                     iterations.append(cur)
                     cur = []
@@ -130,13 +183,18 @@ def read_trace(path: str | Path, network: str = "", cluster: str = "") -> Trace:
         iterations.append(cur)
     if not iterations:
         raise ValueError(f"empty trace file: {path}")
-    return Trace(meta["network"], meta["cluster"],
-                 tuple(tuple(it) for it in iterations))
+    try:
+        return Trace(meta["network"], meta["cluster"],
+                     tuple(tuple(it) for it in iterations),
+                     batch_per_gpu=batch)
+    except ValueError as e:
+        raise ValueError(f"malformed trace file {path}: {e}") from None
 
 
-def make_trace(network: str, cluster: str,
-               rows: Iterable[Sequence], n_copies: int = 1) -> Trace:
+def make_trace(network: str, cluster: str, rows: Iterable[Sequence],
+               n_copies: int = 1, batch_per_gpu: int = 0) -> Trace:
     """Build a Trace from ``(id, name, fwd_us, bwd_us, comm_us, size)`` rows."""
     recs = tuple(LayerRecord(int(r[0]), str(r[1]), float(r[2]), float(r[3]),
                              float(r[4]), float(r[5])) for r in rows)
-    return Trace(network, cluster, tuple(recs for _ in range(n_copies)))
+    return Trace(network, cluster, tuple(recs for _ in range(n_copies)),
+                 batch_per_gpu=batch_per_gpu)

@@ -3,12 +3,14 @@ predictions from traces, trace generation from instrumented models."""
 import jax
 import jax.numpy as jnp
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core.hardware import K80_CLUSTER
 from repro.core.policies import CAFFE_MPI, CNTK
 from repro.core.predictor import predict
 from repro.traces.bundled import ALEXNET_K80, TOTAL_GRAD_BYTES
-from repro.traces.format import make_trace, read_trace, write_trace
+from repro.traces.format import LayerRecord, Trace, make_trace, read_trace, \
+    write_trace
 from repro.traces.generate import TimedLayer, generate_trace
 
 
@@ -71,6 +73,68 @@ class TestFormat:
         p.write_text("# network: x\n")
         with pytest.raises(ValueError):
             read_trace(p)
+
+    def test_batch_metadata_roundtrip(self, tmp_path):
+        p = tmp_path / "b.trace"
+        write_trace(ALEXNET_K80, p)
+        assert read_trace(p).batch_per_gpu == 1024
+
+    def test_ragged_iterations_rejected_at_construction(self):
+        it1 = make_trace("x", "c", [(0, "a", 1, 1, 0, 0),
+                                    (1, "b", 1, 1, 0, 0)]).iterations[0]
+        it2 = make_trace("x", "c", [(0, "a", 1, 1, 0, 0)]).iterations[0]
+        with pytest.raises(ValueError, match="ragged"):
+            Trace("x", "c", (it1, it2))
+
+    def test_empty_iterations_rejected(self):
+        with pytest.raises(ValueError):
+            Trace("x", "c", ())
+        with pytest.raises(ValueError):
+            Trace("x", "c", ((),))
+
+    def test_read_ragged_file_names_the_file(self, tmp_path):
+        p = tmp_path / "ragged.trace"
+        p.write_text("0\ta\t1\t2\t0\t0\n"
+                     "1\tb\t1\t2\t0\t0\n"
+                     "# iteration 1\n"
+                     "0\ta\t1\t2\t0\t0\n")
+        with pytest.raises(ValueError, match="ragged.trace"):
+            read_trace(p)
+
+
+_times = st.floats(min_value=0.0, max_value=1e7)
+
+
+@st.composite
+def traces(draw):
+    """Random multi-iteration traces with well-formed layer records."""
+    n_layers = draw(st.integers(min_value=1, max_value=8))
+    n_iters = draw(st.integers(min_value=1, max_value=4))
+    batch = draw(st.integers(min_value=0, max_value=4096))
+    its = []
+    for _ in range(n_iters):
+        its.append(tuple(
+            LayerRecord(i, f"layer{i}", draw(_times), draw(_times),
+                        draw(_times), float(draw(st.integers(
+                            min_value=0, max_value=10**9))))
+            for i in range(n_layers)))
+    return Trace("net", "clu", tuple(its), batch_per_gpu=batch)
+
+
+class TestRoundTripProperty:
+    @settings(max_examples=30)
+    @given(traces())
+    def test_write_read_identity(self, trace):
+        """write_trace -> read_trace is the identity (%.17g preserves
+        every float64 exactly)."""
+        import pathlib
+        import tempfile
+
+        with tempfile.TemporaryDirectory() as d:
+            p = pathlib.Path(d) / "t.trace"
+            write_trace(trace, p)
+            back = read_trace(p)
+        assert back == trace
 
 
 class TestGenerator:

@@ -1,0 +1,299 @@
+"""Workload registry: provider resolution, memoization, LLM block
+slicing consistency with archcost, cross-provider sweep integration,
+and the trace-workload analytical/simulator agreement (ISSUE 2
+acceptance criteria)."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import TRAIN_4K
+from repro.core import workloads as W
+from repro.core.archcost import block_cost_table, param_counts, step_cost
+from repro.core.costmodel import CNN_WORKLOADS, make_iteration_costs
+from repro.core.hardware import COLLECTIVE_ALGORITHMS, V100_CLUSTER
+from repro.core.scenarios import Scenario, ScenarioGrid, mixed_grid
+from repro.core.simulator import simulate_steady
+from repro.core.sweep import evaluate_scenario, sweep
+from repro.traces.bundled import ALEXNET_K80
+from repro.traces.format import write_trace
+
+EXACT_POLICIES = ("naive", "cntk", "mxnet", "tensorflow", "caffe-mpi")
+
+
+class TestRegistry:
+    def test_bare_name_is_cnn_scheme(self):
+        assert W.resolve_workload("alexnet") is W.resolve_workload("cnn:alexnet")
+
+    def test_tables_memoized_at_module_scope(self):
+        for name in ("cnn:resnet50", "trace:alexnet-k80", "llm:gemma3-1b"):
+            assert W.resolve_workload(name) is W.resolve_workload(name)
+
+    def test_known_workloads_spans_all_schemes(self):
+        names = W.known_workloads()
+        schemes = {n.split(":", 1)[0] for n in names}
+        assert schemes == {"cnn", "trace", "llm"}
+        assert len([n for n in names if n.startswith("llm:")]) == len(ARCH_IDS)
+
+    @pytest.mark.parametrize("bad", [
+        "vgg16", "cnn:vgg16", "trace:nope", "llm:gpt-5",
+        "dataset:imagenet", "trace:/no/such/file.trace"])
+    def test_unknown_names_raise_value_error(self, bad):
+        with pytest.raises(ValueError, match="unknown"):
+            W.resolve_workload(bad)
+
+    def test_scenario_validate_accepts_all_providers(self):
+        for wl in ("alexnet", "cnn:googlenet", "trace:alexnet-k80",
+                   "llm:rwkv6-1.6b"):
+            Scenario(wl, "v100-nvlink-ib", 4, "caffe-mpi").validate()
+
+    def test_scenario_validate_rejects_unknown_workload(self):
+        with pytest.raises(ValueError, match="unknown workload"):
+            Scenario("llm:nope", "v100-nvlink-ib", 4, "naive").validate()
+
+    def test_cnn_table_matches_costmodel(self):
+        tab = W.resolve_workload("cnn:resnet50")
+        builder, batch, _ = CNN_WORKLOADS["resnet50"]
+        layers = builder()
+        assert tab.batch_default == batch
+        assert tab.num_layers == len(layers)
+        np.testing.assert_allclose(tab.grad_bytes,
+                                   [l.grad_bytes for l in layers])
+
+    def test_trace_from_file_path(self, tmp_path):
+        p = tmp_path / "alexnet.trace"
+        write_trace(ALEXNET_K80, p)
+        tab = W.resolve_workload(f"trace:{p}")
+        bundled = W.resolve_workload("trace:alexnet-k80")
+        assert tab.batch_default == bundled.batch_default == 1024
+        np.testing.assert_allclose(tab.t_f, bundled.t_f)
+        np.testing.assert_allclose(tab.grad_bytes, bundled.grad_bytes)
+
+    def test_trace_table_maps_data_layer_to_io(self):
+        tab = W.resolve_workload("trace:alexnet-k80")
+        assert tab.is_measured
+        assert tab.num_layers == 21                  # data layer stripped
+        assert tab.t_io_measured == pytest.approx(1.2)
+        assert tab.param_bytes == pytest.approx(243_860_896)
+
+
+class TestLLMProvider:
+    @pytest.mark.parametrize("arch", ARCH_IDS)
+    def test_block_table_consistent_with_archcost(self, arch):
+        cfg = get_config(arch)
+        blocks = block_cost_table(cfg, TRAIN_4K.seq_len)
+        total, active = param_counts(cfg)
+        assert sum(b.params for b in blocks) == pytest.approx(total)
+        assert sum(b.active_params for b in blocks) == pytest.approx(active)
+        # train flops = 3x forward (fwd + 2x-fwd backward), B sequences
+        sc = step_cost(cfg, TRAIN_4K)
+        fwd = sum(b.flops_fwd for b in blocks)
+        assert 3.0 * TRAIN_4K.global_batch * fwd == pytest.approx(
+            sc.flops, rel=1e-9)
+
+    def test_grad_payload_is_bf16_total_params(self):
+        cfg = get_config("qwen2-moe-a2.7b")
+        tab = W.resolve_workload("llm:qwen2-moe-a2.7b")
+        total, active = param_counts(cfg)
+        assert tab.grad_bytes.sum() == pytest.approx(2.0 * total)
+        # MoE: gradients cover all experts, compute only routed-active
+        assert tab.param_bytes > 2.0 * active
+
+    def test_pattern_aware_blocks(self):
+        # gemma3: 5 local : 1 global pattern -> heterogeneous flops
+        tab = W.resolve_workload("llm:gemma3-1b")
+        cfg = get_config("gemma3-1b")
+        assert cfg.tie_embeddings
+        assert tab.num_layers == cfg.num_layers + 1   # embed (tied head)
+        block_flops = tab.flops_fwd[1:]               # the L/G blocks
+        assert len(set(block_flops.tolist())) > 1
+
+    def test_untied_head_is_its_own_layer(self):
+        tab = W.resolve_workload("llm:qwen1.5-4b")
+        cfg = get_config("qwen1.5-4b")
+        assert not cfg.tie_embeddings
+        assert tab.num_layers == cfg.num_layers + 2   # embed + lm_head
+        emb_bytes = 2.0 * cfg.vocab_size * cfg.d_model
+        assert tab.grad_bytes[0] == pytest.approx(emb_bytes)
+        assert tab.grad_bytes[-1] == pytest.approx(emb_bytes)
+
+
+class TestAgreement:
+    """ISSUE-2 acceptance: trace: workloads evaluated analytically match
+    the event-driven simulator to <= 1e-6 on every exact policy."""
+
+    @pytest.mark.parametrize("policy", EXACT_POLICIES)
+    def test_trace_workload_fast_path_exact(self, policy):
+        grid = ScenarioGrid(workloads=("trace:alexnet-k80",),
+                            clusters=("k80-pcie-10gbe", "v100-nvlink-ib"),
+                            worker_counts=(1, 2, 16), policies=(policy,),
+                            collectives=COLLECTIVE_ALGORITHMS)
+        for s in grid.expand():
+            fast = evaluate_scenario(s, method="analytical")
+            slow = evaluate_scenario(s, method="simulator")
+            assert fast["iteration_time_s"] == pytest.approx(
+                slow["iteration_time_s"], rel=1e-6), s.label()
+
+    @pytest.mark.parametrize("policy", ("naive", "caffe-mpi"))
+    def test_llm_workload_fast_path_exact(self, policy):
+        grid = ScenarioGrid(workloads=("llm:gemma3-1b", "llm:qwen1.5-32b"),
+                            clusters=("tpu-v5e-pod",),
+                            worker_counts=(4, 64), policies=(policy,))
+        for s in grid.expand():
+            fast = evaluate_scenario(s, method="analytical")
+            slow = evaluate_scenario(s, method="simulator")
+            assert fast["iteration_time_s"] == pytest.approx(
+                slow["iteration_time_s"], rel=1e-6), s.label()
+
+
+class TestMixedSweep:
+    def test_mixed_grid_spans_providers_on_fast_path(self):
+        g = mixed_grid()
+        schemes = {wl.split(":", 1)[0] for wl in g.workloads}
+        assert schemes == {"cnn", "trace", "llm"}
+        assert len([w for w in g.workloads if w.startswith("llm:")]) >= 3
+        r = sweep(g)
+        assert len(r) == len(g) >= 1000
+        assert r.n_simulated == 0
+        assert all(row["iteration_time_s"] > 0 for row in r.rows)
+
+    def test_trace_workload_sweeps_other_scales(self):
+        # the 2-GPU Table VI trace, predicted at 4 and 16 workers:
+        # more workers => more comm => no faster per iteration
+        r = sweep(ScenarioGrid(workloads=("trace:alexnet-k80",),
+                               clusters=("k80-pcie-10gbe",),
+                               worker_counts=(2, 4, 16),
+                               policies=("caffe-mpi",)))
+        times = [row["iteration_time_s"] for row in r.rows]
+        assert times == sorted(times)
+
+    def test_make_iteration_costs_accepts_registry_names(self):
+        by_name = make_iteration_costs("trace:alexnet-k80", V100_CLUSTER,
+                                       1024, 4)
+        tab = W.resolve_workload("trace:alexnet-k80")
+        direct = tab.iteration_costs(V100_CLUSTER, 1024, 4)
+        np.testing.assert_allclose(by_name.t_f, direct.t_f)
+        assert by_name.t_io == pytest.approx(direct.t_io)
+
+    def test_registry_name_honors_legacy_analytic_kwargs(self):
+        # the pre-registry make_iteration_costs/predict_cnn kwargs
+        # still work through the table path
+        base = make_iteration_costs("alexnet", V100_CLUSTER, 32, 4)
+        decoded = make_iteration_costs("alexnet", V100_CLUSTER, 32, 4,
+                                       decode_seconds_per_byte=1e-9)
+        assert decoded.t_io > base.t_io
+        halved = make_iteration_costs("alexnet", V100_CLUSTER, 32, 4,
+                                      bytes_per_sample=55e3)
+        assert halved.t_h2d < base.t_h2d
+        ratio3 = make_iteration_costs("alexnet", V100_CLUSTER, 32, 4,
+                                      bwd_fwd_ratio=3.0)
+        np.testing.assert_allclose(ratio3.t_b, 1.5 * np.asarray(base.t_b))
+
+    def test_measured_workload_rejects_decode_override(self):
+        tab = W.resolve_workload("trace:alexnet-k80")
+        with pytest.raises(ValueError, match="already includes the decode"):
+            tab.iteration_costs(V100_CLUSTER, 1024, 4,
+                                decode_seconds_per_byte=1e-9)
+
+    def test_measured_workload_rejects_bwd_fwd_ratio_override(self):
+        tab = W.resolve_workload("trace:alexnet-k80")
+        with pytest.raises(ValueError, match="own backward times"):
+            tab.iteration_costs(V100_CLUSTER, 1024, 4, bwd_fwd_ratio=3.0)
+        # the plain default path stays fine (sweep/make_iteration_costs)
+        make_iteration_costs("trace:alexnet-k80", V100_CLUSTER, 1024, 4)
+
+    def test_rewritten_trace_file_is_not_served_stale(self, tmp_path):
+        import os
+
+        p = tmp_path / "evolving.trace"
+        p.write_text("# batch: 8\n0\tconv\t100\t200\t10\t4096\n")
+        first = W.resolve_workload(f"trace:{p}")
+        p.write_text("# batch: 8\n0\tconv\t999\t200\t10\t4096\n")
+        os.utime(p, ns=(os.stat(p).st_mtime_ns + 10**9,) * 2)
+        second = W.resolve_workload(f"trace:{p}")
+        assert second is not first
+        assert second.t_f[0] == pytest.approx(999e-6)
+
+    def test_trace_without_batch_header_locks_batch(self, tmp_path):
+        p = tmp_path / "nobatch.trace"
+        p.write_text("# network: x\n"
+                     "0\tconv\t100\t200\t10\t4096\n")
+        tab = W.resolve_workload(f"trace:{p}")
+        assert tab.batch_locked and tab.batch_default == 1
+        tab.iteration_costs(V100_CLUSTER, 1, 4)       # default batch fine
+        with pytest.raises(ValueError, match="no recorded batch"):
+            tab.iteration_costs(V100_CLUSTER, 64, 4)
+
+    def test_malformed_batch_header_names_the_file(self, tmp_path):
+        from repro.traces.format import read_trace
+
+        p = tmp_path / "badbatch.trace"
+        p.write_text("# batch: 1k\n0\tconv\t1\t2\t0\t0\n")
+        with pytest.raises(ValueError, match="badbatch.trace"):
+            read_trace(p)
+
+    def test_simulator_fallback_uses_registry_tables(self):
+        s = Scenario("llm:gemma3-1b", "tpu-v5e-pod", 8, "bucketed-25mb")
+        row = evaluate_scenario(s)
+        assert row["method"] == "simulated"
+        assert row["iteration_time_s"] > 0
+
+
+class TestJSON:
+    def test_sweep_result_to_json_roundtrip(self, tmp_path):
+        import json
+
+        r = sweep(ScenarioGrid(workloads=("trace:alexnet-k80",),
+                               worker_counts=(2,), policies=("naive",)))
+        path = tmp_path / "sweep.json"
+        text = r.to_json(path)
+        doc = json.loads(path.read_text())
+        assert json.loads(text) == doc
+        assert doc["n_scenarios"] == len(r)
+        assert doc["rows"][0]["iteration_time_s"] == pytest.approx(
+            r.rows[0]["iteration_time_s"])
+
+    def test_cli_json_flag(self, tmp_path, capsys):
+        from repro.launch.sweep import main
+
+        out = tmp_path / "out.json"
+        rc = main(["--workloads", "cnn:alexnet,trace:alexnet-k80",
+                   "--clusters", "k80-pcie-10gbe", "--workers", "2",
+                   "--policies", "caffe-mpi", "--collectives", "ring",
+                   "--top", "2", "--json", str(out)])
+        assert rc == 0
+        assert out.exists()
+        import json
+
+        doc = json.loads(out.read_text())
+        assert doc["n_scenarios"] == 2
+
+    def test_cli_mixed_grid(self, capsys):
+        from repro.launch.sweep import main
+
+        rc = main(["--grid", "mixed", "--workers", "4", "--top", "0"])
+        assert rc == 0
+        captured = capsys.readouterr().out
+        assert "270 scenarios" in captured
+        assert "270 analytical" in captured
+        assert "llm:" in captured and "trace:" in captured
+
+    def test_cli_list_workloads(self, capsys):
+        from repro.launch.sweep import main
+
+        rc = main(["--list-workloads"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        for expect in ("cnn:alexnet", "trace:alexnet-k80", "llm:gemma3-1b"):
+            assert expect in out
+
+
+class TestThroughputBenchmark:
+    def test_smoke_mode_writes_json(self, tmp_path):
+        from benchmarks.bench_sweep_throughput import run
+
+        path = tmp_path / "BENCH_sweep.json"
+        report = run(smoke=True, json_path=str(path))
+        assert path.exists()
+        for key in ("default_grid", "mixed_grid"):
+            assert report[key]["scenarios_per_sec"] > 0
+            assert report[key]["n_simulated"] == 0
