@@ -1,14 +1,18 @@
-"""Sweep-engine throughput: scenarios/second on the analytical fast
-path, for the 540-scenario default grid and the 1620-scenario
-mixed-provider grid (cnn: + trace: + llm:).
+"""Sweep-engine throughput: scenarios/second for the scenario-axis
+**batched** kernel versus the per-scenario reference path, on the
+540-scenario default grid, the 1620-scenario mixed-provider grid and
+the 25 920-scenario frontier grid.
 
     PYTHONPATH=src python -m benchmarks.bench_sweep_throughput
     PYTHONPATH=src python -m benchmarks.bench_sweep_throughput --smoke
 
 Prints the shared ``name,us_per_call,derived`` CSV rows and writes
 ``BENCH_sweep.json`` (override with ``--json``) so the perf trajectory
-of the engine is tracked run over run.  ``--smoke`` does one timed
-repeat per grid — the CI regression gate.
+of the engine is tracked run over run: per grid, ``batched`` and
+``per_scenario`` timings plus their ``speedup`` ratio (the ISSUE-3
+acceptance gate is >= 25x on the default grid).  ``--smoke`` does one
+timed repeat per grid and skips the slow per-scenario pass on the
+frontier grid — the CI regression gate.
 """
 from __future__ import annotations
 
@@ -18,17 +22,17 @@ import sys
 import time
 
 from benchmarks.common import row
-from repro.core.scenarios import default_grid, mixed_grid
+from repro.core.scenarios import default_grid, frontier_grid, mixed_grid
 from repro.core.sweep import sweep
 
 
-def _throughput(grid, repeats: int) -> dict:
+def _time_sweep(grid, repeats: int, batched: bool) -> dict:
     n = len(grid)
-    sweep(grid)                          # warm the workload-table cache
+    sweep(grid, batched=batched)         # warm tables + prepared structure
     elapsed = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        result = sweep(grid)
+        result = sweep(grid, batched=batched)
         elapsed.append(time.perf_counter() - t0)
     elapsed.sort()
     med = elapsed[len(elapsed) // 2]
@@ -43,14 +47,27 @@ def _throughput(grid, repeats: int) -> dict:
 
 def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
     repeats = 1 if smoke else 5
-    grids = {"default_grid": default_grid(), "mixed_grid": mixed_grid()}
+    grids = {"default_grid": default_grid(), "mixed_grid": mixed_grid(),
+             "frontier_grid": frontier_grid()}
     report: dict = {"smoke": smoke, "repeats": repeats}
     for name, grid in grids.items():
-        r = _throughput(grid, repeats)
+        r: dict = {"n_scenarios": len(grid)}
+        r["batched"] = _time_sweep(grid, repeats, batched=True)
+        row(f"sweep_{name}_batched", r["batched"]["elapsed_s"] * 1e6,
+            f"{r['batched']['scenarios_per_sec']:.0f} scenarios/s "
+            f"({len(grid)} scenarios)")
+        # The per-scenario reference pass on the frontier grid costs
+        # seconds; skip it in CI smoke mode (the default-grid ratio is
+        # the acceptance gate).
+        if not (smoke and name == "frontier_grid"):
+            r["per_scenario"] = _time_sweep(grid, repeats, batched=False)
+            r["speedup"] = (r["per_scenario"]["elapsed_s"]
+                            / r["batched"]["elapsed_s"])
+            row(f"sweep_{name}_per_scenario",
+                r["per_scenario"]["elapsed_s"] * 1e6,
+                f"{r['per_scenario']['scenarios_per_sec']:.0f} scenarios/s "
+                f"(batched is {r['speedup']:.1f}x faster)")
         report[name] = r
-        row(f"sweep_{name}", r["elapsed_s"] * 1e6,
-            f"{r['scenarios_per_sec']:.0f} scenarios/s "
-            f"({r['n_scenarios']} scenarios)")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)
@@ -61,7 +78,8 @@ def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="single timed repeat per grid (CI mode)")
+                    help="single timed repeat per grid, no frontier "
+                         "per-scenario pass (CI mode)")
     ap.add_argument("--json", default="BENCH_sweep.json", metavar="PATH",
                     help="output JSON path ('' to skip)")
     args = ap.parse_args(argv)

@@ -1,0 +1,608 @@
+"""Scenario-axis batched fast path: the whole sweep as matrices.
+
+The per-scenario fast path (:func:`repro.core.sweep._fast_eval`) is
+vectorized over the *layer* dimension only — every scenario still pays
+a Python round-trip through ``resolve_workload -> iteration_costs ->
+closed_form``, which caps the engine at roughly 10k scenarios/s.  This
+module vectorizes the *scenario* axis too, in two tiers:
+
+* **Kernel grid**: every per-layer cost (``t_f``/``t_b``/``t_c``), the
+  pipeline terms and the WFBP residual depend only on ``(workload,
+  cluster x interconnect, n_workers, collective, batch)`` — *not* on
+  the overlap policy.  The unique points of that reduced product are
+  evaluated as ``(K, L)`` matrices built in one shot from array-valued
+  collective models (:mod:`repro.core.hardware`) over per-point
+  ``(n_workers, bandwidth, latency)`` vectors, with the prefix-max
+  formulation of the WFBP residual
+  (:func:`repro.core.analytical.non_overlapped_comm_batch`) reducing
+  them to ``(K,)`` terms — pure NumPy over both axes, no per-scenario
+  Python.  Workloads of different depths share one zero-padded
+  ``(…, L_max)`` table: a padded layer has ``t_f = t_b = t_c =
+  grad_bytes = 0``, contributes nothing to any sum, and is masked out
+  of the prefix-max.
+* **Policy select**: Eqs. (2)/(3)/(5) and their late-H2D variants are
+  ``max``/``+`` combinations of those ``(K,)`` terms; each scenario
+  gathers its kernel point and selects its policy's equation — cheap
+  ``(S,)`` vector ops, so adding policies to a grid costs almost
+  nothing.
+
+Correctness contract: every row agrees with the per-scenario reference
+implementation ``_fast_eval`` to <= 1e-9 relative (property-tested on
+the default, mixed and frontier grids).  ``_fast_eval`` stays the
+agreement oracle; this module is the throughput engine
+:func:`repro.core.sweep.sweep` routes closed-form scenarios through.
+
+:func:`grid_evaluator` memoizes the prepared *structure* of a grid
+(axis tables, code vectors, label lists) keyed by grid value and
+resolved table identity — numeric results are recomputed on every
+:meth:`GridEvaluator.run`, never cached.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import analytical
+from repro.core.hardware import (CLUSTERS, apply_interconnect_preset,
+                                 hierarchical_allreduce_time,
+                                 ring_allreduce_time, tree_allreduce_time)
+from repro.core.policies import Policy, get_policy
+from repro.core.scenarios import (Scenario, ScenarioGrid,
+                                  normalize_interconnect)
+from repro.core.workloads import WorkloadTable, resolve_workload
+
+_COLLECTIVE_CODE = {"ring": 0, "tree": 1, "hierarchical": 2}
+
+#: Kernel points evaluated per ``(K, L)`` matrix allocation — bounds
+#: transient memory on huge grids without measurably hurting speed.
+KERNEL_CHUNK = 8192
+
+
+# ----------------------------------------------------------------------
+# Axis tables: everything a code vector indexes into.
+# ----------------------------------------------------------------------
+@dataclass
+class _WorkloadAxis:
+    """Unique workloads of the batch, padded to a shared layer count.
+
+    Analytic tables populate ``flops``; measured ones populate
+    ``tf_meas``/``tb_meas`` (the other family's rows are zero, so the
+    combined expression ``flops*batch/rate + tf_meas*scale`` is exact
+    for both — adding literal 0.0 is FP-identity).
+    """
+
+    names: list[str]                  # row-label spelling, as given
+    flops: np.ndarray                 # (W, Lmax) per-sample fwd flops
+    tf_meas: np.ndarray               # (W, Lmax) measured fwd s @ batch_default
+    tb_meas: np.ndarray               # (W, Lmax) measured bwd s @ batch_default
+    grad_bytes: np.ndarray            # (W, Lmax) all-reduce payload
+    bwd_ratio: np.ndarray             # (W,)
+    batch_default: np.ndarray         # (W,) float64
+    bytes_per_sample: np.ndarray      # (W,)
+    param_bytes: np.ndarray           # (W,)
+    t_io_meas: np.ndarray             # (W,) measured input-pipeline s (0 if analytic)
+    has_meas_io: np.ndarray           # (W,) bool
+    batch_locked: np.ndarray          # (W,) bool
+    table_names: list[str]            # canonical names, for error messages
+    any_measured: bool                # any table with measured t_f/t_b
+    any_meas_io: bool                 # any table with measured t_io
+
+
+def _workload_axis(names: Sequence[str]) -> _WorkloadAxis:
+    """Resolve + pad the unique workloads of a batch."""
+    tables: list[WorkloadTable] = [resolve_workload(n) for n in names]
+    lmax = max((t.num_layers for t in tables), default=1)
+    W = len(tables)
+    flops = np.zeros((W, lmax))
+    tf_meas = np.zeros((W, lmax))
+    tb_meas = np.zeros((W, lmax))
+    grad = np.zeros((W, lmax))
+    for i, t in enumerate(tables):
+        L = t.num_layers
+        grad[i, :L] = t.grad_bytes
+        if t.is_measured:
+            tf_meas[i, :L] = t.t_f
+            tb_meas[i, :L] = t.t_b
+        else:
+            flops[i, :L] = t.flops_fwd
+    return _WorkloadAxis(
+        names=list(names),
+        flops=flops, tf_meas=tf_meas, tb_meas=tb_meas, grad_bytes=grad,
+        bwd_ratio=np.array([t.bwd_fwd_ratio for t in tables]),
+        batch_default=np.array([t.batch_default for t in tables],
+                               dtype=np.float64),
+        bytes_per_sample=np.array([t.bytes_per_sample for t in tables]),
+        param_bytes=np.array([t.param_bytes for t in tables]),
+        t_io_meas=np.array([t.t_io_measured or 0.0 for t in tables]),
+        has_meas_io=np.array([t.t_io_measured is not None for t in tables],
+                             dtype=bool),
+        batch_locked=np.array([t.batch_locked for t in tables], dtype=bool),
+        table_names=[t.name for t in tables],
+        # distinct flags: a trace can carry measured t_f/t_b without a
+        # 'data' layer (no measured t_io) — gating the compute-time
+        # terms on measured *I/O* would silently zero its layers
+        any_measured=any(t.is_measured for t in tables),
+        any_meas_io=any(t.t_io_measured is not None for t in tables))
+
+
+def _check_batch_locked(wax: _WorkloadAxis, widx: np.ndarray,
+                        batch: np.ndarray) -> None:
+    """Exactly the guard
+    :meth:`~repro.core.workloads.WorkloadTable.iteration_costs` applies
+    per scenario: a batch override on a trace without a recorded batch
+    is an error (its measured times cannot be rescaled)."""
+    bad = wax.batch_locked[widx] & (batch > 0) \
+        & (batch != wax.batch_default[widx])
+    if bool(bad.any()):
+        i = int(np.argmax(bad))
+        raise ValueError(
+            f"workload {wax.table_names[int(widx[i])]!r} has no recorded "
+            f"batch size (no '# batch:' header in the trace), so its "
+            f"measured times cannot be rescaled to batch_per_gpu="
+            f"{int(batch[i])}; leave batch_per_gpu unset")
+
+
+@dataclass
+class _ClusterAxis:
+    """Unique ``(cluster, interconnect)`` pairs, resolved once.
+
+    Node sizing (``with_workers``) never changes any of these
+    parameters, so the pair — not the worker count — is the right
+    resolution key.
+    """
+
+    intra_bw: np.ndarray
+    intra_lat: np.ndarray
+    inter_bw: np.ndarray
+    inter_lat: np.ndarray
+    gpn: np.ndarray                   # gpus_per_node, int64
+    disk_lat: np.ndarray
+    disk_bw: np.ndarray
+    h2d_lat: np.ndarray
+    h2d_bw: np.ndarray
+    rate: np.ndarray                  # achieved flop/s
+    hbm_bw: np.ndarray
+
+
+def _cluster_axis(pairs: Sequence[tuple[str, str | None]]) -> _ClusterAxis:
+    specs = [apply_interconnect_preset(CLUSTERS[c], ic) for c, ic in pairs]
+    return _ClusterAxis(
+        intra_bw=np.array([c.intra.effective_bandwidth for c in specs]),
+        intra_lat=np.array([c.intra.latency for c in specs]),
+        inter_bw=np.array([c.inter.effective_bandwidth for c in specs]),
+        inter_lat=np.array([c.inter.latency for c in specs]),
+        gpn=np.array([c.gpus_per_node for c in specs], dtype=np.int64),
+        disk_lat=np.array([c.disk.latency for c in specs]),
+        disk_bw=np.array([c.disk.effective_bandwidth for c in specs]),
+        h2d_lat=np.array([c.h2d.latency for c in specs]),
+        h2d_bw=np.array([c.h2d.effective_bandwidth for c in specs]),
+        rate=np.array([c.device.peak_flops * c.device.compute_efficiency
+                       for c in specs]),
+        hbm_bw=np.array([c.device.hbm_bandwidth for c in specs]))
+
+
+@dataclass
+class _PolicyAxis:
+    names: list[str]
+    overlap_io: np.ndarray            # (P,) bool
+    overlap_comm: np.ndarray
+    h2d_early: np.ndarray
+    has_fast: np.ndarray
+
+
+def _policy_axis(names: Sequence[str]) -> _PolicyAxis:
+    pols: list[Policy] = [get_policy(n) for n in names]
+    return _PolicyAxis(
+        names=list(names),
+        overlap_io=np.array([p.overlap_io for p in pols], dtype=bool),
+        overlap_comm=np.array([p.overlap_comm for p in pols], dtype=bool),
+        h2d_early=np.array([p.h2d_early for p in pols], dtype=bool),
+        has_fast=np.array([analytical.has_closed_form(p) for p in pols],
+                          dtype=bool))
+
+
+# ----------------------------------------------------------------------
+# Tier 1: the (K, L) kernel — policy-independent cost terms.
+# ----------------------------------------------------------------------
+def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
+                 widx: np.ndarray, cidx: np.ndarray, coll: np.ndarray,
+                 n: np.ndarray, batch: np.ndarray,
+                 chunk: int = KERNEL_CHUNK) -> dict[str, np.ndarray]:
+    """Policy-independent terms for every kernel point, reduced over
+    the layer axis: ``(K,)`` vectors of ``io_h2d``, ``t_h2d``, ``comp``
+    (= sum t_f + sum t_b), ``sum_c``, ``tc_no``, ``t_u``, plus the
+    resolved ``n_f``/``batch_f``.  The transient ``(K, L)`` matrices
+    are built ``chunk`` points at a time so huge grids stay in bounded
+    memory.
+    """
+    K = len(widx)
+    out = {name: np.empty(K) for name in
+           ("io_h2d", "t_h2d", "comp", "sum_c", "tc_no", "t_u",
+            "n_f", "batch_f")}
+    for lo in range(0, K, chunk):
+        sl = slice(lo, lo + chunk)
+        w, c = widx[sl], cidx[sl]
+        nn, cl = n[sl], coll[sl]
+        batch_f = np.where(batch[sl] > 0, batch[sl],
+                           wax.batch_default[w]).astype(np.float64)
+        n_f = nn.astype(np.float64)
+
+        # compute costs: (k, L)
+        tfa = wax.flops[w] * batch_f[:, None] / cax.rate[c][:, None]
+        t_f = tfa
+        t_b = wax.bwd_ratio[w][:, None] * tfa
+        if wax.any_measured:          # adding literal 0.0 rows is exact,
+            scale = (batch_f / wax.batch_default[w])[:, None]
+            t_f = t_f + wax.tf_meas[w] * scale     # but skip it when the
+            t_b = t_b + wax.tb_meas[w] * scale     # batch has no traces
+
+        # comm costs: array-valued collective models, each algorithm
+        # evaluated only on its own rows (the collective axis
+        # partitions the points; computing all three models on the
+        # full matrix would triple the dominant kernel cost)
+        grad = wax.grad_bytes[w]
+        use_intra = nn <= cax.gpn[c]
+        link_bw = np.where(use_intra, cax.intra_bw[c], cax.inter_bw[c])
+        link_lat = np.where(use_intra, cax.intra_lat[c], cax.inter_lat[c])
+
+        def comm_rows(sel, code: int) -> np.ndarray:
+            g, ns = grad[sel], nn[sel][:, None]
+            if code == 0:
+                return ring_allreduce_time(g, n_f[sel][:, None],
+                                           link_bw[sel][:, None],
+                                           link_lat[sel][:, None])
+            if code == 1:
+                return tree_allreduce_time(g, ns, link_bw[sel][:, None],
+                                           link_lat[sel][:, None])
+            ci = c[sel]
+            return hierarchical_allreduce_time(
+                g, ns, cax.gpn[ci][:, None],
+                cax.intra_bw[ci][:, None], cax.intra_lat[ci][:, None],
+                cax.inter_bw[ci][:, None], cax.inter_lat[ci][:, None])
+
+        codes_present = np.unique(cl)
+        if len(codes_present) == 1:
+            t_c = comm_rows(slice(None), int(codes_present[0]))
+        else:
+            t_c = np.empty_like(grad)
+            for code in codes_present:
+                sel = np.nonzero(cl == code)[0]
+                t_c[sel] = comm_rows(sel, int(code))
+        t_c = t_c * (grad > 0)
+
+        # pipeline terms: (k,)
+        nbytes_in = batch_f * wax.bytes_per_sample[w]
+        t_io = cax.disk_lat[c] + nbytes_in / cax.disk_bw[c]
+        if wax.any_meas_io:
+            t_io = np.where(wax.has_meas_io[w],
+                            wax.t_io_meas[w] * batch_f
+                            / wax.batch_default[w],
+                            t_io)
+        t_h2d = cax.h2d_lat[c] + nbytes_in / cax.h2d_bw[c]
+
+        out["io_h2d"][sl] = t_io + t_h2d
+        out["t_h2d"][sl] = t_h2d
+        out["comp"][sl] = t_f.sum(axis=1) + t_b.sum(axis=1)
+        out["sum_c"][sl] = t_c.sum(axis=1)
+        out["tc_no"][sl] = analytical.non_overlapped_comm_batch(t_b, t_c)
+        out["t_u"][sl] = 3.0 * wax.param_bytes[w] / cax.hbm_bw[c]
+        out["n_f"][sl] = n_f
+        out["batch_f"][sl] = batch_f
+    return out
+
+
+# ----------------------------------------------------------------------
+# Tier 2: per-scenario policy select — cheap (S,) vector ops.
+# ----------------------------------------------------------------------
+def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
+                   kc: dict[str, np.ndarray],
+                   kidx: np.ndarray | None) -> dict[str, np.ndarray]:
+    """Gather each scenario's kernel point (``kidx=None`` means the
+    identity map) and select its policy's closed form — Eqs. (2), (3),
+    (5) and the late-H2D variants, plus the zero-comm weak-scaling
+    baseline with the *same* policy (what ``_fast_eval`` computes for
+    the speedup column)."""
+    def g(a: np.ndarray) -> np.ndarray:
+        return a if kidx is None else a[kidx]
+
+    io_h2d, t_h2d = g(kc["io_h2d"]), g(kc["t_h2d"])
+    comp, sum_c = g(kc["comp"]), g(kc["sum_c"])
+    tc_no, t_u = g(kc["tc_no"]), g(kc["t_u"])
+    n_f, batch_f = g(kc["n_f"]), g(kc["batch_f"])
+
+    ov_io = pax.overlap_io[polidx]
+    ov_comm = pax.overlap_comm[polidx]
+    early = pax.h2d_early[polidx]
+
+    comm_term = np.where(ov_comm, tc_no, sum_c)     # WFBP residual or full
+    gpu_chain = comp + comm_term + t_u
+    eq2 = io_h2d + gpu_chain                        # no I/O overlap
+    eq_early = np.maximum(io_h2d, gpu_chain)        # Eq. (3)/(5)
+    eq_late = np.maximum(io_h2d, t_h2d + gpu_chain)  # late-H2D variants
+    t_iter = np.where(~ov_io, eq2, np.where(early, eq_early, eq_late))
+
+    base_chain = comp + t_u                         # zero-comm baseline
+    t1 = np.where(~ov_io, io_h2d + base_chain,
+                  np.where(early, np.maximum(io_h2d, base_chain),
+                           np.maximum(io_h2d, t_h2d + base_chain)))
+
+    return {
+        "batch": batch_f,
+        "iteration_time_s": t_iter,
+        "samples_per_sec": n_f * batch_f / t_iter,
+        "speedup": n_f * t1 / t_iter,
+        "t_comm_s": sum_c,
+        "t_comp_s": comp,
+    }
+
+
+def _make_rows(workload: list, cluster: list, n_workers: list, policy: list,
+               collective: list, interconnect: list,
+               cols: dict[str, np.ndarray]) -> list[dict]:
+    """Tidy row dicts from label lists + numeric columns (``.tolist()``
+    converts whole columns to Python scalars in C, which is what keeps
+    row assembly off the throughput critical path)."""
+    return [
+        {
+            "workload": wl, "cluster": cl, "n_workers": nw, "policy": pol,
+            "collective": co, "interconnect": ic, "batch_per_gpu": b,
+            "iteration_time_s": it, "samples_per_sec": sps, "speedup": sp,
+            "t_comm_s": tcm, "t_comp_s": tcp, "method": "analytical",
+        }
+        for wl, cl, nw, pol, co, ic, b, it, sps, sp, tcm, tcp in zip(
+            workload, cluster, n_workers, policy, collective, interconnect,
+            np.asarray(cols["batch"], dtype=np.int64).tolist(),
+            cols["iteration_time_s"].tolist(),
+            cols["samples_per_sec"].tolist(),
+            cols["speedup"].tolist(),
+            cols["t_comm_s"].tolist(),
+            cols["t_comp_s"].tolist())
+    ]
+
+
+# ----------------------------------------------------------------------
+# Grid front end: codes straight from the axes, no Scenario objects.
+# ----------------------------------------------------------------------
+def _axis_codes(sizes: Sequence[int]) -> list[np.ndarray]:
+    """Flat cross-product code vectors, rightmost axis fastest — the
+    exact :meth:`ScenarioGrid.expand` order."""
+    out = []
+    for i, size in enumerate(sizes):
+        after = int(np.prod(sizes[i + 1:], dtype=np.int64))
+        before = int(np.prod(sizes[:i], dtype=np.int64))
+        out.append(np.tile(np.repeat(np.arange(size), after), before))
+    return out
+
+
+class GridEvaluator:
+    """A :class:`ScenarioGrid` prepared for batched evaluation.
+
+    Builds the axis tables, the kernel-grid code vectors (policy axis
+    dropped), the scenario -> kernel-point map and the row label lists
+    directly from the grid's cross-product structure — no per-scenario
+    Python objects at all.  Scenarios whose policy has no closed form
+    are flagged in :attr:`fast_mask`; :meth:`scenario_at` materializes
+    just those for the simulator fallback.
+
+    The evaluator holds only *structure*; :meth:`run` computes the
+    numbers.  Get instances through :func:`grid_evaluator`, which
+    memoizes them by grid value + workload-table identity.
+    """
+
+    def __init__(self, grid: ScenarioGrid):
+        grid.validate_axes()
+        self.grid = grid
+        nW, nC = len(grid.workloads), len(grid.clusters)
+        nK, nP = len(grid.worker_counts), len(grid.policies)
+        nA, nI = len(grid.collectives), len(grid.interconnects)
+        self._sizes = (nW, nC, nK, nP, nA, nI)
+        self.n_scenarios = nW * nC * nK * nP * nA * nI
+
+        self._wax = _workload_axis(grid.workloads)
+        pairs = [(c, ic) for c in grid.clusters for ic in grid.interconnects]
+        self._cax = _cluster_axis(pairs)
+        self._pax = _policy_axis(grid.policies)
+
+        # Kernel grid: the scenario product with the policy axis
+        # dropped — order (workloads, clusters, workers, collectives,
+        # interconnects), rightmost fastest.  O(K) int vectors; every
+        # per-*scenario* quantity is derived per chunk instead (see
+        # _scenario_codes), so preparation stays O(axes + K) however
+        # large the scenario product is.
+        kw, kc, kk, ka, ki = _axis_codes((nW, nC, nK, nA, nI))
+        self._kwidx = kw
+        self._kcidx = kc * nI + ki              # (cluster, interconnect) pair
+        self._kcoll = np.array(
+            [_COLLECTIVE_CODE[c] for c in grid.collectives],
+            dtype=np.int64)[ka]
+        self._kn = np.array([int(k) for k in grid.worker_counts],
+                            dtype=np.int64)[kk]
+        self._kbatch = np.full(len(kw), grid.batch_per_gpu or 0,
+                               dtype=np.int64)
+        _check_batch_locked(self._wax, kw, self._kbatch)
+
+        self.n_fast = (self.n_scenarios // nP if nP else 0) \
+            * int(self._pax.has_fast.sum())
+        self.all_fast = self.n_fast == self.n_scenarios
+
+        # Per-axis label values (tiny object arrays, fancy-indexed per
+        # chunk by the derived codes).
+        self._wl_values = np.array(list(grid.workloads), dtype=object)
+        self._cl_values = np.array(list(grid.clusters), dtype=object)
+        self._n_values = np.array([int(k) for k in grid.worker_counts],
+                                  dtype=np.int64)
+        self._pol_values = np.array(list(grid.policies), dtype=object)
+        self._coll_values = np.array(list(grid.collectives), dtype=object)
+        self._ic_values = np.array(
+            [normalize_interconnect(ic) for ic in grid.interconnects],
+            dtype=object)
+
+    def __len__(self) -> int:
+        return self.n_scenarios
+
+    def _scenario_codes(self, lo: int, hi: int) -> dict[str, np.ndarray]:
+        """Axis codes, the kernel-point map and the fast mask for flat
+        scenario indices ``[lo, hi)``, derived arithmetically from the
+        expand() order (rightmost axis fastest) — O(chunk) work and
+        memory, nothing per-scenario is ever stored."""
+        nW, nC, nK, nP, nA, nI = self._sizes
+        r = np.arange(lo, hi, dtype=np.int64)
+        ii = r % nI
+        r //= nI
+        ai = r % nA
+        r //= nA
+        pi = r % nP
+        r //= nP
+        ki = r % nK
+        r //= nK
+        ci = r % nC
+        wi = r // nC
+        kidx = (((wi * nC + ci) * nK + ki) * nA + ai) * nI + ii
+        return {"wi": wi, "ci": ci, "ki": ki, "pi": pi, "ai": ai, "ii": ii,
+                "kidx": kidx, "fast": self._pax.has_fast[pi]}
+
+    def run(self) -> "GridRun":
+        """Evaluate the kernel grid (fresh numbers every call) and
+        return the per-run row materializer."""
+        return GridRun(self, _kernel_cols(
+            self._wax, self._cax, self._kwidx, self._kcidx,
+            self._kcoll, self._kn, self._kbatch))
+
+    def scenario_at(self, i: int) -> Scenario:
+        """Materialize flat index ``i`` (used for simulator-fallback
+        entries only)."""
+        g = self.grid
+        sizes = (len(g.workloads), len(g.clusters), len(g.worker_counts),
+                 len(g.policies), len(g.collectives), len(g.interconnects))
+        codes = []
+        for size in reversed(sizes):
+            i, c = divmod(i, size)
+            codes.append(c)
+        wi, ci, ki, pi, ai, ii = reversed(codes)
+        return Scenario(workload=g.workloads[wi], cluster=g.clusters[ci],
+                        n_workers=int(g.worker_counts[ki]),
+                        policy=g.policies[pi], collective=g.collectives[ai],
+                        interconnect=g.interconnects[ii],
+                        batch_per_gpu=g.batch_per_gpu)
+
+
+class GridRun:
+    """One evaluation of a grid: the ``(K,)`` kernel columns plus the
+    shared structure, materializing tidy rows chunk by chunk."""
+
+    def __init__(self, ev: GridEvaluator, kernel_cols: dict[str, np.ndarray]):
+        self._ev = ev
+        self._kc = kernel_cols
+
+    def __len__(self) -> int:
+        return self._ev.n_scenarios
+
+    def rows_slice(self, lo: int, hi: int) -> list[dict | None]:
+        """Batched rows for flat scenario indices ``[lo, hi)`` in grid
+        order; entries whose policy needs the simulator come back as
+        ``None`` for the caller to fill."""
+        ev = self._ev
+        codes = ev._scenario_codes(lo, hi)
+        cols = _policy_select(ev._pax, codes["pi"], self._kc, codes["kidx"])
+        rows: list[dict | None] = _make_rows(
+            ev._wl_values[codes["wi"]].tolist(),
+            ev._cl_values[codes["ci"]].tolist(),
+            ev._n_values[codes["ki"]].tolist(),
+            ev._pol_values[codes["pi"]].tolist(),
+            ev._coll_values[codes["ai"]].tolist(),
+            ev._ic_values[codes["ii"]].tolist(), cols)
+        if not ev.all_fast:
+            for i in np.nonzero(~codes["fast"])[0].tolist():
+                rows[i] = None                # selected a bogus equation
+        return rows
+
+
+#: Structure memo: prepared evaluators keyed by grid value + the
+#: identity of the resolved workload tables (holding the tables alive
+#: keeps the ids stable; a re-resolved table — e.g. an on-disk trace
+#: whose mtime changed — misses the memo and rebuilds).
+_EVALUATOR_MEMO: dict = {}
+_MEMO_LIMIT = 64
+
+
+def grid_evaluator(grid: ScenarioGrid) -> GridEvaluator:
+    """Memoized :class:`GridEvaluator` for ``grid`` (falls back to a
+    fresh instance when the grid isn't hashable, e.g. list-valued
+    axes)."""
+    try:
+        tables = tuple(resolve_workload(w) for w in grid.workloads)
+        key = (grid, tuple(id(t) for t in tables))
+        hash(key)
+    except TypeError:
+        return GridEvaluator(grid)
+    hit = _EVALUATOR_MEMO.get(key)
+    if hit is not None:
+        return hit[0]
+    if len(_EVALUATOR_MEMO) >= _MEMO_LIMIT:
+        _EVALUATOR_MEMO.clear()
+    ev = GridEvaluator(grid)
+    _EVALUATOR_MEMO[key] = (ev, tables)
+    return ev
+
+
+# ----------------------------------------------------------------------
+# Scenario-list front end (arbitrary iterables, already validated).
+# ----------------------------------------------------------------------
+def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
+    """Batched rows (input order) for a list of fast-path-eligible
+    scenarios; one Python pass to build code vectors, then the same
+    two-tier kernel the grid front end uses (with the identity
+    scenario -> kernel-point map).
+
+    Raises ``ValueError`` if any scenario's policy lacks a closed form
+    — callers (:func:`repro.core.sweep.sweep`) partition first.
+    """
+    if not scenarios:
+        return []
+    wl_key: dict[str, int] = {}
+    pair_key: dict[tuple[str, str | None], int] = {}
+    pol_key: dict[str, int] = {}
+    widx = np.empty(len(scenarios), dtype=np.int64)
+    cidx = np.empty(len(scenarios), dtype=np.int64)
+    polidx = np.empty(len(scenarios), dtype=np.int64)
+    coll = np.empty(len(scenarios), dtype=np.int64)
+    n = np.empty(len(scenarios), dtype=np.int64)
+    batch = np.empty(len(scenarios), dtype=np.int64)
+    for i, s in enumerate(scenarios):
+        wi = wl_key.get(s.workload)
+        if wi is None:
+            wi = wl_key[s.workload] = len(wl_key)
+        widx[i] = wi
+        pk = (s.cluster, s.interconnect)
+        ci = pair_key.get(pk)
+        if ci is None:
+            ci = pair_key[pk] = len(pair_key)
+        cidx[i] = ci
+        pi = pol_key.get(s.policy)
+        if pi is None:
+            pi = pol_key[s.policy] = len(pol_key)
+        polidx[i] = pi
+        coll[i] = _COLLECTIVE_CODE[s.collective]
+        n[i] = s.n_workers
+        batch[i] = s.batch_per_gpu or 0
+    wax = _workload_axis(list(wl_key))
+    _check_batch_locked(wax, widx, batch)
+    cax = _cluster_axis(list(pair_key))
+    pax = _policy_axis(list(pol_key))
+    if not bool(pax.has_fast[polidx].all()):
+        bad = [pax.names[int(p)]
+               for p in np.unique(polidx[~pax.has_fast[polidx]])]
+        raise ValueError(f"policies without a closed form cannot take the "
+                         f"batched fast path: {bad}")
+    kc = _kernel_cols(wax, cax, widx, cidx, coll, n, batch)
+    cols = _policy_select(pax, polidx, kc, kidx=None)
+    return _make_rows(
+        [s.workload for s in scenarios],
+        [s.cluster for s in scenarios],
+        [s.n_workers for s in scenarios],
+        [s.policy for s in scenarios],
+        [s.collective for s in scenarios],
+        [normalize_interconnect(s.interconnect) for s in scenarios],
+        cols)

@@ -247,13 +247,11 @@ def build_ssgd_dag(
     gpu_of = (lambda w: "gpu:shared") if shared_compute else gpu_channel
 
     prev_update: int | None = None
-    prev_io: list[int] = []
     prev_h2d: list[int] = []
-    prev_bwd_done: list[int] = []       # all backward tasks of previous iter
 
     for it in range(n_iterations):
         # --- I/O + H2D (communication tasks T0-T7 in Fig. 1) -----------
-        io_tasks, h2d_tasks = [], []
+        h2d_tasks = []
         for w in range(n_workers):
             io = g.add_task(f"io_w{w}", TaskKind.COMM, costs.t_io,
                             disk_channel(w), iteration=it, worker=w)
@@ -277,16 +275,12 @@ def build_ssgd_dag(
                 g.add_edge(prev_update, h2d)
             if prev_h2d:
                 g.add_edge(prev_h2d[w], h2d)
-            io_tasks.append(io)
             h2d_tasks.append(h2d)
 
         # --- forward, layer 1..L ---------------------------------------
         fwd: list[list[int]] = [[] for _ in range(L)]
         for w in range(n_workers):
             prev = h2d_tasks[w]
-            if prev_update is not None:
-                # new iteration's compute waits for previous update
-                pass
             for l in range(L):
                 t = g.add_task(f"fwd_l{l + 1}_w{w}", TaskKind.COMPUTE,
                                costs.t_f[l], gpu_of(w), iteration=it,
@@ -317,9 +311,14 @@ def build_ssgd_dag(
             buckets = _bucketize(costs, policy, comm_scale)
             prev_comm: int | None = None
             for bname, members, dur in buckets:
+                # ByteScheduler semantics (policies.py): priority is the
+                # bucket's earliest layer — layer-1/earlier-needed
+                # tensors overtake on a priority-scheduled net channel
+                # (lower value = scheduled first).  ``members`` is in
+                # backward order, so the earliest layer is members[-1].
                 c = g.add_task(bname, TaskKind.COMM, dur, NET_CHANNEL,
                                iteration=it, layer=members[0] + 1,
-                               priority=float(2 * L - members[-1]),
+                               priority=float(members[-1]),
                                nbytes=sum(costs.grad_bytes[m] for m in members)
                                if costs.grad_bytes is not None else 0.0)
                 if policy.overlap_comm:
@@ -342,7 +341,6 @@ def build_ssgd_dag(
         g.add_edges(last_bwd, upd)
         g.add_edges(comm_tasks, upd)
         prev_update = upd
-        prev_io, prev_h2d = io_tasks, h2d_tasks
-        prev_bwd_done = last_bwd
+        prev_h2d = h2d_tasks
 
     return g

@@ -17,6 +17,8 @@ import dataclasses
 import math
 from dataclasses import dataclass
 
+import numpy as np
+
 GB = 1e9
 MB = 1e6
 US = 1e-6
@@ -70,21 +72,41 @@ class Interconnect:
 #
 # Each returns seconds for all-reducing ``nbytes`` bytes per rank over
 # ``n`` ranks on a link with ``bandwidth`` effective bytes/s and
-# ``latency`` seconds/message.  ``nbytes`` may be a NumPy array.
+# ``latency`` seconds/message.  Every argument may be a NumPy array and
+# broadcasts elementwise — the scenario-axis batched fast path
+# (:mod:`repro.core.batched`) passes per-scenario ``(n, bandwidth,
+# latency)`` column vectors against per-layer ``nbytes`` row vectors to
+# get ``(scenario x layer)`` cost matrices in one shot.
 # ----------------------------------------------------------------------
-def ring_allreduce_time(nbytes, n: int, bandwidth: float, latency: float):
+def ring_allreduce_time(nbytes, n, bandwidth, latency):
     """Ring all-reduce: ``2 (n-1)/n * M/B + 2 (n-1) alpha`` seconds.
 
     Bandwidth-optimal (each rank sends ``2 (n-1)/n`` of the payload)
     but latency grows linearly in ``n`` — the regime behind the 9.6%
     InfiniBand utilization the paper measured for layer-wise messages.
     """
-    if n <= 1:
-        return nbytes * 0.0
-    return 2.0 * (n - 1) / n * nbytes / bandwidth + 2.0 * (n - 1) * latency
+    if np.ndim(n) == 0:
+        if n <= 1:
+            return nbytes * 0.0
+        return 2.0 * (n - 1) / n * nbytes / bandwidth + 2.0 * (n - 1) * latency
+    # Array path: zeroing the n <= 1 entries by mask *multiplication*
+    # (0.0 * finite == 0.0 exactly) — np.where materializes both
+    # branches and costs ~10x an elementwise multiply at sweep sizes.
+    n = np.asarray(n, dtype=np.float64)
+    safe_n = np.where(n > 1, n, 2.0)         # small: broadcast shape of n
+    t = 2.0 * (safe_n - 1) / safe_n * nbytes / bandwidth \
+        + 2.0 * (safe_n - 1) * latency
+    return t * (n > 1)
 
 
-def tree_allreduce_time(nbytes, n: int, bandwidth: float, latency: float):
+def _ceil_log2(n):
+    """Exact ``ceil(log2 n)`` for integer arrays ``n >= 1`` (frexp-based
+    so powers of two never round up a notch)."""
+    m, e = np.frexp(np.asarray(n, dtype=np.float64))
+    return np.where(m == 0.5, e - 1, e).astype(np.float64)
+
+
+def tree_allreduce_time(nbytes, n, bandwidth, latency):
     """Double-binary-tree all-reduce: ``2 M/B + 2 ceil(log2 n) alpha``.
 
     NCCL >= 2.4's tree pair pipelines reduce+broadcast so the bandwidth
@@ -92,10 +114,45 @@ def tree_allreduce_time(nbytes, n: int, bandwidth: float, latency: float):
     ``2 (n-1)/n M/B``) while latency grows only logarithmically —
     strictly better than ring for small messages on large clusters.
     """
-    if n <= 1:
-        return nbytes * 0.0
-    depth = math.ceil(math.log2(n))
-    return 2.0 * nbytes / bandwidth + 2.0 * depth * latency
+    if np.ndim(n) == 0:
+        if n <= 1:
+            return nbytes * 0.0
+        depth = math.ceil(math.log2(n))
+        return 2.0 * nbytes / bandwidth + 2.0 * depth * latency
+    n = np.asarray(n)
+    depth = _ceil_log2(np.where(n > 1, n, 2))    # small: shape of n
+    t = 2.0 * nbytes / bandwidth + 2.0 * depth * latency
+    return t * (n > 1)
+
+
+def hierarchical_allreduce_time(nbytes, n, gpus_per_node,
+                                intra_bandwidth, intra_latency,
+                                inter_bandwidth, inter_latency):
+    """Two-level all-reduce: ``g``-wide intra-node reduce-scatter,
+    inter-node ring all-reduce of the ``nbytes/g`` shard, intra-node
+    all-gather.  Degenerates to a flat intra ring on one node and to a
+    flat inter ring with one device per node.
+
+    Array-valued like the flat primitives: ``n`` / ``gpus_per_node`` /
+    link parameters broadcast against ``nbytes``, which is how the
+    batched fast path costs every scenario of a grid at once.
+    """
+    scalar = np.ndim(n) == 0 and np.ndim(gpus_per_node) == 0
+    n = np.asarray(n, dtype=np.int64)
+    gpn = np.asarray(gpus_per_node, dtype=np.int64)
+    g = np.minimum(n, gpn)
+    safe_g = np.maximum(g, 1)
+    nodes = (n + safe_g - 1) // safe_g          # exact ceil(n / g)
+    gf = safe_g.astype(np.float64)
+    intra = 2.0 * ((gf - 1) / gf * nbytes / intra_bandwidth
+                   + (gf - 1) * intra_latency)
+    # ring_allreduce_time already mask-zeroes its nodes <= 1 entries
+    t = intra * (g > 1) + ring_allreduce_time(
+        nbytes / gf, nodes.astype(np.float64),
+        inter_bandwidth, inter_latency)
+    if scalar and np.ndim(t) == 0:
+        return float(t)
+    return t
 
 
 @dataclass(frozen=True)
@@ -190,23 +247,13 @@ class ClusterSpec:
                                    link.latency)
 
     def _hierarchical_allreduce_time(self, nbytes, n: int):
-        """Two-level all-reduce: ``g``-wide intra-node reduce-scatter,
-        inter-node ring all-reduce of the ``nbytes/g`` shard, intra-node
-        all-gather.  Degenerates to a flat intra ring on one node and to
-        a flat inter ring with one device per node."""
-        g = min(n, self.gpus_per_node)
-        nodes = math.ceil(n / g)
-        t = nbytes * 0.0
-        if g > 1:
-            # reduce-scatter + all-gather, each (g-1)/g * M/B + (g-1) alpha
-            t = t + 2.0 * ((g - 1) / g * nbytes / self.intra.effective_bandwidth
-                           + (g - 1) * self.intra.latency)
-        if nodes > 1:
-            shard = nbytes / g
-            t = t + ring_allreduce_time(shard, nodes,
-                                        self.inter.effective_bandwidth,
-                                        self.inter.latency)
-        return t
+        """Delegates to :func:`hierarchical_allreduce_time` — one
+        implementation shared with the batched fast path so the scalar
+        and scenario-axis vectorized costs cannot drift."""
+        return hierarchical_allreduce_time(
+            nbytes, n, self.gpus_per_node,
+            self.intra.effective_bandwidth, self.intra.latency,
+            self.inter.effective_bandwidth, self.inter.latency)
 
     def reduce_scatter_time(self, nbytes: float, n_workers: int | None = None) -> float:
         """Ring reduce-scatter of ``nbytes`` bytes per rank, in seconds:
@@ -361,18 +408,53 @@ INTERCONNECT_PRESETS: dict[str, tuple[str, Interconnect]] = {
 }
 
 
+def resolve_interconnect_preset(preset: str) -> tuple[str, Interconnect]:
+    """``(slot, link)`` for a preset name, including the *scaled-preset
+    grammar* ``<base>@bw<F>@lat<F>``: a base preset with its bandwidth
+    and/or latency multiplied by ``F`` (either modifier may be omitted,
+    order-free).  ``"ib-100g@bw2@lat0.25"`` is 2x the bandwidth at a
+    quarter of the latency of ``ib-100g`` — the frontier grid sweeps
+    these what-ifs without registering hundreds of named presets.
+
+    Raises ``KeyError`` for unknown bases and ``ValueError`` for
+    malformed modifiers.
+    """
+    base, _, mods = preset.partition("@")
+    try:
+        slot, link = INTERCONNECT_PRESETS[base]
+    except KeyError:
+        raise KeyError(f"unknown interconnect preset {base!r}; "
+                       f"one of {sorted(INTERCONNECT_PRESETS)} or 'default'")
+    if not mods:
+        return slot, link
+    bw_factor = lat_factor = 1.0
+    for mod in mods.split("@"):
+        if mod.startswith("bw"):
+            bw_factor = float(mod[2:])
+        elif mod.startswith("lat"):
+            lat_factor = float(mod[3:])
+        else:
+            raise ValueError(
+                f"malformed interconnect modifier {mod!r} in {preset!r}; "
+                f"expected bw<factor> or lat<factor>")
+        if bw_factor <= 0 or lat_factor < 0:
+            raise ValueError(f"interconnect factors must be positive "
+                             f"(latency may be 0), got {preset!r}")
+    return slot, dataclasses.replace(
+        link, name=preset, bandwidth=link.bandwidth * bw_factor,
+        latency=link.latency * lat_factor)
+
+
 def apply_interconnect_preset(cluster: ClusterSpec, preset: str | None) -> ClusterSpec:
     """Return ``cluster`` with the named preset's link substituted in.
 
-    ``None`` (or ``"default"``) leaves the cluster untouched.
+    ``None`` (or ``"default"``) leaves the cluster untouched; scaled
+    presets (``<base>@bw<F>@lat<F>``) resolve through
+    :func:`resolve_interconnect_preset`.
     """
     if preset is None or preset == "default":
         return cluster
-    try:
-        slot, link = INTERCONNECT_PRESETS[preset]
-    except KeyError:
-        raise KeyError(f"unknown interconnect preset {preset!r}; "
-                       f"one of {sorted(INTERCONNECT_PRESETS)} or 'default'")
+    slot, link = resolve_interconnect_preset(preset)
     return cluster.with_interconnect(**{slot: link})
 
 # Roofline constants for the v5e target (used by launch/roofline.py).

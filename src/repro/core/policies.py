@@ -55,8 +55,13 @@ CAFFE_MPI = Policy("caffe-mpi", overlap_io=True, h2d_early=True, overlap_comm=Tr
 # Beyond-paper optimizations (§VII future work).
 BUCKETED_25MB = Policy("bucketed-25mb", overlap_io=True, h2d_early=True,
                        overlap_comm=True, bucket_bytes=25e6)
+# No serialize_comm chain edges: the net channel still executes one
+# collective at a time (channel constraint), but the *order* is the
+# priority queue's to choose — otherwise issue-order FIFO edges would
+# pin the schedule and the priorities could never reorder anything.
 PRIORITY = Policy("priority", overlap_io=True, h2d_early=True,
-                  overlap_comm=True, priority_comm=True)
+                  overlap_comm=True, serialize_comm=False,
+                  priority_comm=True)
 
 FRAMEWORK_POLICIES = {
     "caffe-mpi": CAFFE_MPI,

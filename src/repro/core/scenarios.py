@@ -20,9 +20,32 @@ from typing import Iterator, Sequence
 
 from repro.core.hardware import (CLUSTERS, COLLECTIVE_ALGORITHMS,
                                  INTERCONNECT_PRESETS, ClusterSpec,
-                                 apply_interconnect_preset)
+                                 apply_interconnect_preset,
+                                 resolve_interconnect_preset)
 from repro.core.policies import ALL_POLICIES, Policy, get_policy
 from repro.core.workloads import validate_workload
+
+
+def normalize_interconnect(interconnect: str | None) -> str:
+    """The one spelling of "cluster default links" used everywhere:
+    ``None`` and ``"default"`` both mean it, and rows/labels/filters all
+    go through this normalizer so they can never disagree."""
+    return "default" if interconnect is None else interconnect
+
+
+def validate_interconnect(interconnect: str | None) -> None:
+    """Raise ``ValueError`` unless ``interconnect`` is ``None``,
+    ``"default"``, a preset name, or a scaled preset
+    (``<base>@bw<F>@lat<F>``)."""
+    if interconnect is None or interconnect == "default":
+        return
+    try:
+        resolve_interconnect_preset(interconnect)
+    except (KeyError, ValueError) as e:
+        raise ValueError(
+            f"unknown interconnect preset {interconnect!r}: {e}; one of "
+            f"{sorted(INTERCONNECT_PRESETS)} (optionally with @bw<F>/"
+            f"@lat<F> modifiers) or None") from None
 
 
 @dataclass(frozen=True)
@@ -48,7 +71,7 @@ class Scenario:
     batch_per_gpu: int | None = None
 
     def label(self) -> str:
-        ic = self.interconnect or "default"
+        ic = normalize_interconnect(self.interconnect)
         return (f"{self.workload}/{self.cluster}/w{self.n_workers}"
                 f"/{self.policy}/{self.collective}/{ic}")
 
@@ -65,12 +88,7 @@ class Scenario:
         if self.collective not in COLLECTIVE_ALGORITHMS:
             raise ValueError(f"unknown collective {self.collective!r}; "
                              f"one of {COLLECTIVE_ALGORITHMS}")
-        if self.interconnect is not None \
-                and self.interconnect != "default" \
-                and self.interconnect not in INTERCONNECT_PRESETS:
-            raise ValueError(f"unknown interconnect preset "
-                             f"{self.interconnect!r}; one of "
-                             f"{sorted(INTERCONNECT_PRESETS)} or None")
+        validate_interconnect(self.interconnect)
         if self.batch_per_gpu is not None and self.batch_per_gpu < 1:
             raise ValueError(f"batch_per_gpu must be >= 1, "
                              f"got {self.batch_per_gpu}")
@@ -116,17 +134,42 @@ class ScenarioGrid:
     def __iter__(self) -> Iterator[Scenario]:
         return iter(self.expand())
 
+    def validate_axes(self) -> None:
+        """Validate every axis *value* once.  Scenario validity is
+        axis-separable (no cross-field constraints), so this is
+        equivalent to validating all ``len(self)`` scenarios — which is
+        exactly why ``expand()`` can skip per-scenario validation."""
+        if self.batch_per_gpu is not None and self.batch_per_gpu < 1:
+            raise ValueError(f"batch_per_gpu must be >= 1, "
+                             f"got {self.batch_per_gpu}")
+        for wl in self.workloads:
+            validate_workload(wl)
+        for cl in self.clusters:
+            if cl not in CLUSTERS:
+                raise ValueError(f"unknown cluster {cl!r}; "
+                                 f"one of {sorted(CLUSTERS)}")
+        for n in self.worker_counts:
+            if int(n) < 1:
+                raise ValueError(f"n_workers must be >= 1, got {n}")
+        for pol in self.policies:
+            if pol not in ALL_POLICIES:
+                raise ValueError(f"unknown policy {pol!r}; "
+                                 f"one of {sorted(ALL_POLICIES)}")
+        for coll in self.collectives:
+            if coll not in COLLECTIVE_ALGORITHMS:
+                raise ValueError(f"unknown collective {coll!r}; "
+                                 f"one of {COLLECTIVE_ALGORITHMS}")
+        for ic in self.interconnects:
+            validate_interconnect(ic)
+
     def expand(self) -> list[Scenario]:
-        out = []
-        for wl, cl, n, pol, coll, ic in itertools.product(
-                self.workloads, self.clusters, self.worker_counts,
-                self.policies, self.collectives, self.interconnects):
-            s = Scenario(workload=wl, cluster=cl, n_workers=int(n),
+        self.validate_axes()
+        return [Scenario(workload=wl, cluster=cl, n_workers=int(n),
                          policy=pol, collective=coll, interconnect=ic,
                          batch_per_gpu=self.batch_per_gpu)
-            s.validate()
-            out.append(s)
-        return out
+                for wl, cl, n, pol, coll, ic in itertools.product(
+                    self.workloads, self.clusters, self.worker_counts,
+                    self.policies, self.collectives, self.interconnects)]
 
 def default_grid() -> ScenarioGrid:
     """The out-of-the-box study: every paper workload and cluster, six
@@ -152,4 +195,35 @@ def mixed_grid() -> ScenarioGrid:
         clusters=("k80-pcie-10gbe", "v100-nvlink-ib", "tpu-v5e-pod"),
         worker_counts=(1, 2, 4, 8, 16, 32),
         collectives=COLLECTIVE_ALGORITHMS,
+    )
+
+
+#: Frontier-grid what-if axes: inter-node link bases (``ib-100g-fused``
+#: is the DDP-style bucket-fusion what-if — the collective efficiency a
+#: fused gradient stream achieves, on the exact fast path) crossed with
+#: bandwidth and latency scale factors via the scaled-preset grammar.
+FRONTIER_LINK_BASES = ("10gbe", "ib-100g", "ib-100g-fused", "ib-200g")
+FRONTIER_BW_FACTORS = (0.5, 1, 2, 4)
+FRONTIER_LAT_FACTORS = (0.25, 1, 4)
+
+
+def frontier_grid() -> ScenarioGrid:
+    """The §VII design-space study at interactive scale: every paper CNN
+    on both paper clusters, six cluster sizes, the five exact policies,
+    all three collectives, and a ``bandwidth x latency x bucket-fusion``
+    interconnect frontier (four inter-node link bases, each at
+    {0.5,1,2,4}x bandwidth and {0.25,1,4}x latency via the scaled-preset
+    grammar) — 25 920 scenarios, all on the batched analytical fast
+    path.  This is the kind of model x cluster x algorithm sweep the
+    companion performance-modeling literature runs offline; the batched
+    evaluator answers it in well under a second."""
+    interconnects = tuple(
+        f"{base}@bw{bw:g}@lat{lat:g}"
+        for base in FRONTIER_LINK_BASES
+        for bw in FRONTIER_BW_FACTORS
+        for lat in FRONTIER_LAT_FACTORS)
+    return ScenarioGrid(
+        worker_counts=(2, 4, 8, 16, 32, 64),
+        collectives=COLLECTIVE_ALGORITHMS,
+        interconnects=interconnects,
     )

@@ -41,14 +41,30 @@ class SimResult:
         return sorted(self.schedule.values(), key=lambda s: (s.start, s.task.channel))
 
     def iteration_times(self) -> list[float]:
-        """Finish time of each iteration's update task (cumulative)."""
+        """Finish time of each iteration's update task (cumulative).
+
+        Empty when the DAG has no ``update`` task (``n_iterations=0``
+        or a custom graph) — callers that need at least one iteration
+        (:meth:`steady_iteration_time`) raise a clear error instead of
+        indexing into nothing.
+        """
         ups = sorted((s for s in self.schedule.values() if s.task.name == "update"),
                      key=lambda s: s.task.iteration)
         return [s.finish for s in ups]
 
     def steady_iteration_time(self) -> float:
-        """Per-iteration time once the pipeline is warm (last iter delta)."""
+        """Per-iteration time once the pipeline is warm (last iter delta).
+
+        Raises ``ValueError`` when the schedule contains no ``update``
+        task — e.g. a DAG built with ``n_iterations=0`` or a custom
+        graph without an update node.
+        """
         it = self.iteration_times()
+        if not it:
+            raise ValueError(
+                "schedule contains no 'update' task (was the DAG built "
+                "with n_iterations=0, or without an update node?); "
+                "steady-state iteration time is undefined")
         if len(it) == 1:
             return it[0]
         return it[-1] - it[-2]
@@ -61,24 +77,32 @@ def simulate(dag: DAG, priority_channels: frozenset[str] | None = None) -> SimRe
     executes ready tasks one at a time.  Ready tasks on the same channel
     are ordered by (ready_time, priority, tid) — FIFO with the task's
     ``priority`` as a tie-break — unless the channel is in
-    ``priority_channels`` in which case priority dominates ready time
-    (ByteScheduler-style preemption-free priority queueing).
+    ``priority_channels`` in which case the channel takes, each time it
+    frees up, the smallest-``priority`` task among those already ready
+    (ByteScheduler-style preemption-free priority queueing).  Priority
+    scheduling is *work-conserving*: the channel never idles waiting
+    for a higher-priority task that has not been released yet.
     """
     priority_channels = priority_channels or frozenset()
     indeg = {t: len(p) for t, p in dag.preds.items()}
     ready_time = {t: 0.0 for t in dag.tasks}
 
-    # Per-channel priority queues of ready tasks.
+    # Per-channel queues of ready tasks: a (ready, prio, tid) heap for
+    # FIFO channels, a plain scanned list for priority channels (the
+    # candidate depends on when the channel frees, so no static heap
+    # order is correct — queues are short, the scan is cheap).
     queues: dict[str, list[tuple]] = {}
     channel_free: dict[str, float] = {}
 
     def push(tid: int, at: float):
         ch = dag.tasks[tid].channel
         prio = dag.tasks[tid].priority
-        key = (prio, at, tid) if ch in priority_channels else (at, prio, tid)
         queues.setdefault(ch, [])
         channel_free.setdefault(ch, 0.0)
-        heapq.heappush(queues[ch], (key, tid))
+        if ch in priority_channels:
+            queues[ch].append((prio, at, tid))
+        else:
+            heapq.heappush(queues[ch], ((at, prio, tid), tid))
 
     for t, d in indeg.items():
         if d == 0:
@@ -86,24 +110,36 @@ def simulate(dag: DAG, priority_channels: frozenset[str] | None = None) -> SimRe
 
     schedule: dict[int, ScheduledTask] = {}
     channel_busy: dict[str, float] = {}
-    # Event loop: repeatedly pick the channel whose head task can start
-    # earliest.
+    # Event loop: repeatedly pick the channel whose chosen task can
+    # start earliest.
     n_done = 0
     n_total = len(dag.tasks)
     while n_done < n_total:
         best = None
+        best_item = None
         for ch, q in queues.items():
             if not q:
                 continue
-            key, tid = q[0]
-            start = max(channel_free[ch], ready_time[tid])
-            cand = (start, key, ch, tid)
+            if ch in priority_channels:
+                # earliest instant the channel can start anything...
+                start = max(channel_free[ch], min(r for _, r, _ in q))
+                # ...and the best priority among tasks ready by then
+                item = min(it for it in q if it[1] <= start)
+                cand = (start, item, ch, item[2])
+            else:
+                key, tid = q[0]
+                start = max(channel_free[ch], ready_time[tid])
+                item = None
+                cand = (start, key, ch, tid)
             if best is None or cand < best:
-                best = cand
+                best, best_item = cand, item
         if best is None:
             raise RuntimeError("deadlock: no ready task but DAG not done (cycle?)")
         start, key, ch, tid = best
-        heapq.heappop(queues[ch])
+        if ch in priority_channels:
+            queues[ch].remove(best_item)
+        else:
+            heapq.heappop(queues[ch])
         task = dag.tasks[tid]
         finish = start + task.duration
         schedule[tid] = ScheduledTask(task, start, finish)

@@ -4,21 +4,26 @@ Evaluates a :class:`repro.core.scenarios.ScenarioGrid` — thousands of
 ``(workload x cluster x workers x interconnect x policy x collective)``
 combinations — in one call, two ways:
 
-* **Analytical fast path** (the default for every policy whose closed
-  form is exact — see :func:`repro.core.analytical.has_closed_form`):
-  the per-layer cost model is evaluated as NumPy arrays over the layer
-  dimension (workload tables resolved through the pluggable registry
-  of :mod:`repro.core.workloads` — ``cnn:``/``trace:``/``llm:`` — and
-  memoized at module scope, shared across every scenario and every
-  call) and fed straight into the shared closed forms of
-  :mod:`repro.core.analytical`; each scenario costs microseconds.
+* **Batched analytical fast path** (the default for every policy
+  whose closed form is exact — see
+  :func:`repro.core.analytical.has_closed_form`): the scenario-axis
+  batched kernel of :mod:`repro.core.batched` evaluates the whole
+  grid as ``(scenario x layer)`` matrices (workload tables resolved
+  through the pluggable registry of :mod:`repro.core.workloads` —
+  ``cnn:``/``trace:``/``llm:`` — and memoized at module scope);
+  hundreds of thousands of scenarios per second.  The per-scenario
+  :func:`_fast_eval` stays as the reference implementation — the two
+  agree to <= 1e-9 relative (property-tested), and ``batched=False``
+  pins a sweep to it.
 * **Event-driven fallback** for policies whose steady state depends on
   the schedule itself (gradient-bucket fusion, priority comm): the
   Fig.-1 DAG is built and list-scheduled via
   :func:`repro.core.simulator.simulate_steady`.
 
-The property tests assert the two paths agree to <= 1e-6 relative on
-every policy with an exact closed form.
+The property tests assert the analytical and simulator paths agree to
+<= 1e-6 relative on every policy with an exact closed form.  For
+grids too big to buffer, :func:`iter_rows` / :func:`stream_csv` /
+:func:`stream_json` evaluate lazily chunk by chunk.
 """
 from __future__ import annotations
 
@@ -26,14 +31,16 @@ import csv
 import json
 import time
 from dataclasses import dataclass, replace
-from typing import Iterable, Sequence
+from typing import Iterable, Iterator, Sequence
 
 import numpy as np
 
 from repro.core import analytical
+from repro.core.batched import eval_scenarios, grid_evaluator
 from repro.core.costmodel import comm_scale_fn
 from repro.core.policies import Policy
-from repro.core.scenarios import (Scenario, ScenarioGrid, resolve_cluster,
+from repro.core.scenarios import (Scenario, ScenarioGrid,
+                                  normalize_interconnect, resolve_cluster,
                                   resolve_policy)
 from repro.core.simulator import simulate_steady
 from repro.core.workloads import WorkloadTable, resolve_workload
@@ -64,11 +71,16 @@ def _scenario_costs(s: Scenario, tab: WorkloadTable):
 
 
 def _fast_eval(s: Scenario) -> dict:
-    """Analytical fast path: one scenario, NumPy arrays over the layer
+    """Per-scenario analytical path: NumPy arrays over the layer
     dimension fed straight into the shared closed forms (the scalar
     equations in :mod:`repro.core.analytical` are pure arithmetic over
     sequences, so array-valued ``IterationCosts`` evaluate directly —
-    no parallel formula implementation to keep in lockstep)."""
+    no parallel formula implementation to keep in lockstep).
+
+    This is the **reference implementation and agreement oracle** for
+    the scenario-axis batched kernel (:mod:`repro.core.batched`), which
+    is what :func:`sweep` actually routes closed-form scenarios
+    through; the property tests pin the two to <= 1e-9 relative."""
     costs, _, policy, batch = _scenario_costs(s, resolve_workload(s.workload))
     t_iter = float(analytical.closed_form(costs, policy))
     t1 = float(analytical.closed_form(
@@ -104,7 +116,7 @@ def _row(s: Scenario, batch: int, t_iter: float, t1: float, t_comm: float,
         "n_workers": s.n_workers,
         "policy": s.policy,
         "collective": s.collective,
-        "interconnect": s.interconnect or "default",
+        "interconnect": normalize_interconnect(s.interconnect),
         "batch_per_gpu": batch,
         "iteration_time_s": t_iter,
         "samples_per_sec": s.n_workers * batch / t_iter if t_iter else 0.0,
@@ -131,7 +143,14 @@ class SweepResult:
         return sorted(self.rows, key=lambda r: r[column], reverse=reverse)
 
     def filter(self, **eq) -> list[dict]:
-        """Rows matching all ``column=value`` pairs."""
+        """Rows matching all ``column=value`` pairs.
+
+        ``interconnect`` accepts both spellings of "cluster default":
+        ``None`` and ``"default"`` (rows always store the normalized
+        form, via the same normalizer as ``Scenario.label()``).
+        """
+        if "interconnect" in eq:
+            eq["interconnect"] = normalize_interconnect(eq["interconnect"])
         return [r for r in self.rows
                 if all(r[k] == v for k, v in eq.items())]
 
@@ -185,30 +204,179 @@ class SweepResult:
         return "\n".join(lines)
 
 
+#: Scenarios evaluated per batched kernel call — bounds transient
+#: ``(S, L)`` matrix memory on huge (frontier-sized) grids without
+#: measurably hurting throughput.
+DEFAULT_CHUNK = 8192
+
+
+def _grid_chunks(grid: ScenarioGrid, warm_iterations: int,
+                 chunk: int) -> Iterator[list[dict]]:
+    """Evaluate a grid through the batched kernel chunk by chunk,
+    filling simulator-fallback entries in place — the one copy of the
+    interleave logic shared by :func:`sweep` and :func:`iter_rows`."""
+    ev = grid_evaluator(grid)
+    run = ev.run()
+    for lo in range(0, len(run), chunk):
+        part = run.rows_slice(lo, min(lo + chunk, len(run)))
+        if not ev.all_fast:
+            for i, r in enumerate(part):
+                if r is None:
+                    part[i] = _sim_eval(ev.scenario_at(lo + i),
+                                        warm_iterations)
+        yield part
+
+
+def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
+              force_simulator: bool = False,
+              warm_iterations: int = 6,
+              batched: bool = True,
+              chunk: int = DEFAULT_CHUNK) -> Iterator[dict]:
+    """Yield tidy result rows in scenario order, lazily.
+
+    The streaming core behind :func:`sweep` and :func:`stream`:
+    closed-form scenarios are evaluated by the scenario-axis batched
+    kernel ``chunk`` at a time, simulator fallbacks are interleaved in
+    place, and no more than one chunk of rows is ever buffered — which
+    is what lets frontier-sized grids (tens of thousands of scenarios)
+    stream straight to disk.
+
+    ``batched=False`` forces the per-scenario reference path
+    (:func:`_fast_eval`) — the agreement oracle and the slow side of
+    the throughput benchmark.
+    """
+    if isinstance(grid, ScenarioGrid):
+        if batched and not force_simulator:
+            for part in _grid_chunks(grid, warm_iterations, chunk):
+                yield from part
+            return
+        scenarios = grid.expand()          # validates the axes
+    else:
+        scenarios = list(grid)
+        for s in scenarios:
+            s.validate()
+    fast_of: dict[str, bool] = {}
+    for lo in range(0, len(scenarios), chunk):
+        part = scenarios[lo:lo + chunk]
+        fast: list[int] = []
+        for i, s in enumerate(part):
+            ok = fast_of.get(s.policy)
+            if ok is None:
+                ok = fast_of[s.policy] = has_fast_path(resolve_policy(s))
+            if ok and not force_simulator:
+                fast.append(i)
+        if batched and fast:
+            fast_rows = iter(eval_scenarios([part[i] for i in fast]))
+        else:
+            fast_rows = iter([_fast_eval(part[i]) for i in fast])
+        fast_set = set(fast)
+        for i, s in enumerate(part):
+            yield next(fast_rows) if i in fast_set \
+                else _sim_eval(s, warm_iterations)
+
+
 def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
           force_simulator: bool = False,
-          warm_iterations: int = 6) -> SweepResult:
+          warm_iterations: int = 6,
+          batched: bool = True) -> SweepResult:
     """Evaluate every scenario of ``grid`` and return the tidy table.
 
-    ``force_simulator=True`` routes *all* scenarios through the
-    event-driven simulator — used by the agreement tests and for
-    studying schedules the closed forms cannot express.
+    Closed-form scenarios go through the scenario-axis batched kernel
+    (:mod:`repro.core.batched`); the rest through the event-driven
+    simulator.  ``batched=False`` pins the closed-form scenarios to the
+    per-scenario reference path instead (same rows to <= 1e-9 relative
+    — property-tested).  ``force_simulator=True`` routes *all*
+    scenarios through the event-driven simulator — used by the
+    agreement tests and for studying schedules the closed forms cannot
+    express.
     """
-    scenarios = grid.expand() if isinstance(grid, ScenarioGrid) \
-        else list(grid)
     t0 = time.perf_counter()
     rows: list[dict] = []
+    if isinstance(grid, ScenarioGrid) and batched and not force_simulator:
+        ev = grid_evaluator(grid)
+        for part in _grid_chunks(grid, warm_iterations, DEFAULT_CHUNK):
+            rows.extend(part)
+        return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
+                           n_analytical=ev.n_fast,
+                           n_simulated=len(ev) - ev.n_fast)
     n_fast = n_slow = 0
-    for s in scenarios:
-        s.validate()
-        if not force_simulator and has_fast_path(resolve_policy(s)):
-            rows.append(_fast_eval(s))     # tables memoized in the registry
+    for r in iter_rows(grid, force_simulator=force_simulator,
+                       warm_iterations=warm_iterations, batched=batched):
+        rows.append(r)
+        if r["method"] == "analytical":
             n_fast += 1
         else:
-            rows.append(_sim_eval(s, warm_iterations))
             n_slow += 1
     return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
                        n_analytical=n_fast, n_simulated=n_slow)
+
+
+def stream(grid: ScenarioGrid | Iterable[Scenario], *,
+           csv_path=None, json_path=None,
+           force_simulator: bool = False, warm_iterations: int = 6,
+           batched: bool = True, chunk: int = DEFAULT_CHUNK) -> dict:
+    """Evaluate ``grid`` **once** and write the tidy table to
+    ``csv_path`` and/or ``json_path`` incrementally — one chunk of
+    rows in memory at a time, both formats fed from the same pass.
+    Returns summary metadata (``n_scenarios`` / ``elapsed_s`` /
+    ``n_analytical`` / ``n_simulated``).
+
+    The JSON document has the :meth:`SweepResult.to_json` shape (same
+    keys; ``rows`` first so the array can stream, counts in the
+    trailer).
+    """
+    if csv_path is None and json_path is None:
+        raise ValueError("stream() needs csv_path and/or json_path")
+    t0 = time.perf_counter()
+    n_fast = n_slow = 0
+    csv_file = json_file = None
+    try:
+        if csv_path is not None:
+            csv_file = open(csv_path, "w", newline="")
+            writer = csv.DictWriter(csv_file, fieldnames=COLUMNS)
+            writer.writeheader()
+        if json_path is not None:
+            json_file = open(json_path, "w")
+            json_file.write('{\n  "columns": %s,\n  "rows": ['
+                            % json.dumps(list(COLUMNS)))
+        first = True
+        for r in iter_rows(grid, force_simulator=force_simulator,
+                           warm_iterations=warm_iterations,
+                           batched=batched, chunk=chunk):
+            if csv_file is not None:
+                writer.writerow(r)
+            if json_file is not None:
+                json_file.write(("\n    " if first else ",\n    ")
+                                + json.dumps(r))
+            first = False
+            if r["method"] == "analytical":
+                n_fast += 1
+            else:
+                n_slow += 1
+        elapsed = time.perf_counter() - t0
+        if json_file is not None:
+            json_file.write(
+                '\n  ],\n  "n_scenarios": %d,\n  "elapsed_s": %s,\n'
+                '  "n_analytical": %d,\n  "n_simulated": %d\n}\n'
+                % (n_fast + n_slow, json.dumps(elapsed), n_fast, n_slow))
+    finally:
+        for f in (csv_file, json_file):
+            if f is not None:
+                f.close()
+    return {"n_scenarios": n_fast + n_slow, "elapsed_s": elapsed,
+            "n_analytical": n_fast, "n_simulated": n_slow}
+
+
+def stream_csv(grid: ScenarioGrid | Iterable[Scenario], path,
+               **kw) -> dict:
+    """:func:`stream` to a single CSV file."""
+    return stream(grid, csv_path=path, **kw)
+
+
+def stream_json(grid: ScenarioGrid | Iterable[Scenario], path,
+                **kw) -> dict:
+    """:func:`stream` to a single JSON document."""
+    return stream(grid, json_path=path, **kw)
 
 
 def evaluate_scenario(s: Scenario, method: str = "auto",

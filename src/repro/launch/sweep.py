@@ -3,6 +3,8 @@ emit a tidy results table.
 
     PYTHONPATH=src python -m repro.launch.sweep
     PYTHONPATH=src python -m repro.launch.sweep --grid mixed
+    PYTHONPATH=src python -m repro.launch.sweep --grid frontier \\
+        --stream --csv /tmp/frontier.csv
     PYTHONPATH=src python -m repro.launch.sweep \\
         --workloads cnn:resnet50,trace:alexnet-k80,llm:gemma3-1b \\
         --clusters v100-nvlink-ib \\
@@ -14,10 +16,14 @@ Workloads resolve through the pluggable registry
 ``trace:<bundled-name-or-file-path>``, ``llm:<arch>`` — see
 ``--list-workloads``.  Axis values are comma-separated;
 ``--interconnects`` accepts preset names from
-``repro.core.hardware.INTERCONNECT_PRESETS`` plus ``default`` (keep
-the cluster's own links).  The default grid is 540 scenarios, all on
-the analytical fast path (< 1 s end to end); ``--grid mixed`` spans
-all three providers (1620 scenarios, same fast path).
+``repro.core.hardware.INTERCONNECT_PRESETS``, scaled what-ifs
+(``ib-100g@bw2@lat0.25``) and ``default`` (keep the cluster's own
+links).  The default grid is 540 scenarios on the batched analytical
+fast path (milliseconds end to end); ``--grid mixed`` spans all three
+providers (1620 scenarios); ``--grid frontier`` is the 25 920-scenario
+bandwidth x latency x bucket-fusion design-space study — pair it with
+``--stream`` to write CSV/JSON incrementally instead of buffering
+every row.
 """
 from __future__ import annotations
 
@@ -26,8 +32,8 @@ import dataclasses
 import sys
 
 from repro.core.hardware import COLLECTIVE_ALGORITHMS, INTERCONNECT_PRESETS
-from repro.core.scenarios import default_grid, mixed_grid
-from repro.core.sweep import COLUMNS, sweep
+from repro.core.scenarios import default_grid, frontier_grid, mixed_grid
+from repro.core.sweep import COLUMNS, stream, sweep
 from repro.core.workloads import known_workloads
 
 
@@ -39,10 +45,13 @@ def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="repro.launch.sweep",
         description="Batched what-if sweep over the S-SGD DAG model.")
-    p.add_argument("--grid", choices=("default", "mixed"), default="default",
-                   help="base grid: 'default' (paper CNNs, 540 scenarios) "
-                        "or 'mixed' (cnn:/trace:/llm: providers, 1620); "
-                        "other axis flags override either")
+    p.add_argument("--grid", choices=("default", "mixed", "frontier"),
+                   default="default",
+                   help="base grid: 'default' (paper CNNs, 540 scenarios), "
+                        "'mixed' (cnn:/trace:/llm: providers, 1620) or "
+                        "'frontier' (bandwidth x latency x bucket-fusion "
+                        "what-ifs, 25920); other axis flags override any "
+                        "of them")
     p.add_argument("--workloads", type=_csv_list, default=None,
                    help="comma-separated workload names: bare CNNs "
                         "(alexnet,googlenet,resnet50), cnn:<name>, "
@@ -67,6 +76,14 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--force-simulator", action="store_true",
                    help="run every scenario through the event-driven "
                         "simulator (slow; for validation)")
+    p.add_argument("--per-scenario", action="store_true",
+                   help="pin closed-form scenarios to the per-scenario "
+                        "reference path instead of the batched kernel "
+                        "(slow; the agreement oracle)")
+    p.add_argument("--stream", action="store_true",
+                   help="stream rows straight to --csv/--json without "
+                        "buffering the table (huge grids); skips the "
+                        "printed table")
     p.add_argument("--sort", default="samples_per_sec",
                    help="result column to sort by (descending)")
     p.add_argument("--top", type=int, default=20,
@@ -82,7 +99,8 @@ def build_parser() -> argparse.ArgumentParser:
 def grid_from_args(args: argparse.Namespace):
     """The chosen base grid with any CLI-provided axes substituted in
     (unknown axis names are impossible: argparse defines the flags)."""
-    base = mixed_grid() if args.grid == "mixed" else default_grid()
+    base = {"default": default_grid, "mixed": mixed_grid,
+            "frontier": frontier_grid}[args.grid]()
     axes: dict = {}
     if args.workloads:
         axes["workloads"] = tuple(args.workloads)
@@ -111,7 +129,7 @@ def main(argv: list[str] | None = None) -> int:
         return 0
     try:
         grid = grid_from_args(args)
-        grid.expand()                  # validate axis values up front
+        grid.validate_axes()           # validate axis values up front
     except (ValueError, KeyError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
@@ -119,12 +137,27 @@ def main(argv: list[str] | None = None) -> int:
         print(f"error: unknown --sort column {args.sort!r}; "
               f"one of {', '.join(COLUMNS)}", file=sys.stderr)
         return 2
+    if args.stream and not (args.csv or args.json):
+        print("error: --stream requires --csv and/or --json",
+              file=sys.stderr)
+        return 2
     print(f"sweep: {len(grid)} scenarios "
           f"({len(grid.workloads)} workloads x {len(grid.clusters)} clusters "
           f"x {len(grid.worker_counts)} sizes x {len(grid.policies)} policies "
           f"x {len(grid.collectives)} collectives "
           f"x {len(grid.interconnects)} interconnects)")
-    result = sweep(grid, force_simulator=args.force_simulator)
+    if args.stream:
+        summary = stream(grid, csv_path=args.csv, json_path=args.json,
+                         force_simulator=args.force_simulator,
+                         batched=not args.per_scenario)
+        dests = ", ".join(p for p in (args.csv, args.json) if p)
+        print(f"streamed {summary['n_scenarios']} rows to {dests} "
+              f"in {summary['elapsed_s']:.2f}s "
+              f"({summary['n_analytical']} analytical, "
+              f"{summary['n_simulated']} simulated)")
+        return 0
+    result = sweep(grid, force_simulator=args.force_simulator,
+                   batched=not args.per_scenario)
     print(f"evaluated in {result.elapsed_s:.2f}s "
           f"({result.n_analytical} analytical, "
           f"{result.n_simulated} simulated)")

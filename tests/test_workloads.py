@@ -294,6 +294,11 @@ class TestThroughputBenchmark:
         path = tmp_path / "BENCH_sweep.json"
         report = run(smoke=True, json_path=str(path))
         assert path.exists()
+        for key in ("default_grid", "mixed_grid", "frontier_grid"):
+            assert report[key]["batched"]["scenarios_per_sec"] > 0
+            assert report[key]["batched"]["n_simulated"] == 0
+        # both paths timed (and the speedup ratio recorded) on the
+        # default and mixed grids even in smoke mode
         for key in ("default_grid", "mixed_grid"):
-            assert report[key]["scenarios_per_sec"] > 0
-            assert report[key]["n_simulated"] == 0
+            assert report[key]["per_scenario"]["scenarios_per_sec"] > 0
+            assert report[key]["speedup"] > 1.0
