@@ -35,8 +35,8 @@ def main():
                         worker_counts=(1, 2, 4, 8, 16), policies=POLICIES)
     result = sweep(grid)
     print(f"swept {len(result)} scenarios in {result.elapsed_s:.2f}s "
-          f"({result.n_analytical} analytical, {result.n_simulated} "
-          f"event-driven)")
+          f"({result.n_analytical} analytical, {result.n_timeline} "
+          f"bucket-timeline, {result.n_simulated} event-driven)")
 
     print("\nFig. 2 reproduction: single node, 1-4 GPUs")
     for cluster in CLUSTERS:

@@ -18,7 +18,11 @@ Module map (see ``docs/architecture.md`` for the paper mapping):
   (§V-D / Fig. 4).
 * :mod:`repro.core.scenarios` / :mod:`repro.core.sweep` — declarative
   scenario grids and the batched sweep engine (vectorized closed-form
-  fast path + simulator fallback).
+  fast path, batched bucket-timeline path for schedule-dependent
+  policies, simulator fallback).
+* :mod:`repro.core.bucketsim` — the bucket-timeline steady state:
+  padded ``(scenario x bucket)`` structure tables and the vectorized
+  residual that makes bucketed/priority policies batchable.
 * :mod:`repro.core.archcost` — compiled-HLO cost analysis for the
   production transformer workloads.
 """

@@ -149,15 +149,41 @@ def eq6_speedup(costs_1gpu: IterationCosts, costs_n: IterationCosts,
 
 
 def has_closed_form(policy) -> bool:
-    """True when ``policy``'s steady state has an exact closed form.
+    """True when ``policy``'s steady state has an exact *per-layer*
+    closed form — Eqs. (2)/(3)/(5) or a late-H2D variant.
 
-    Bucket fusion and priority comm are inexact: bucket boundaries and
-    net-channel reordering depend on the schedule itself, which only
-    the event-driven simulator reproduces.  The single shared predicate
-    for :func:`closed_form` and the sweep engine's fast-path routing.
+    Bucket fusion and priority comm fall outside these equations:
+    bucket boundaries and net-channel reordering depend on the schedule
+    itself.  Their steady state *is* still exactly expressible — as the
+    bucket-timeline form (:func:`has_timeline_form`,
+    :mod:`repro.core.bucketsim`) — just not by the per-layer equations
+    this predicate guards.  The single shared predicate for
+    :func:`closed_form` and the sweep engine's fast-path routing.
     """
     if policy.bucket_bytes or policy.priority_comm:
         return False
+    if not policy.overlap_io and (policy.overlap_comm or policy.h2d_early):
+        return False           # combination not studied; simulate it
+    return True
+
+
+def has_timeline_form(policy) -> bool:
+    """True when ``policy``'s steady state is exactly expressible by
+    the **bucket-timeline** form (:mod:`repro.core.bucketsim`): a
+    schedule-dependent comm policy (bucket fusion and/or priority
+    scheduling) whose pipeline flags are among the studied
+    combinations.
+
+    The net channel is a single work-conserving resource, so its
+    iteration makespan is order-independent — bucketed-FIFO and
+    priority schedules share one closed residual (property-tested
+    against the event-driven simulator, which remains the agreement
+    oracle and the path ``force_simulator=True`` pins).  Policies that
+    are neither closed-form nor timeline-form (unstudied pipeline
+    combinations) still fall back to the simulator.
+    """
+    if not (policy.bucket_bytes or policy.priority_comm):
+        return False           # per-layer exact policy: closed form
     if not policy.overlap_io and (policy.overlap_comm or policy.h2d_early):
         return False           # combination not studied; simulate it
     return True

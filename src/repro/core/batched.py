@@ -26,11 +26,21 @@ module vectorizes the *scenario* axis too, in two tiers:
   ``(S,)`` vector ops, so adding policies to a grid costs almost
   nothing.
 
-Correctness contract: every row agrees with the per-scenario reference
-implementation ``_fast_eval`` to <= 1e-9 relative (property-tested on
-the default, mixed and frontier grids).  ``_fast_eval`` stays the
-agreement oracle; this module is the throughput engine
-:func:`repro.core.sweep.sweep` routes closed-form scenarios through.
+Schedule-dependent policies (bucket fusion, priority comm) ride the
+same two tiers: the kernel additionally reduces padded ``(S, B)``
+bucket matrices (structure from :mod:`repro.core.bucketsim`, fused
+payloads costed through the same collective dispatch as the per-layer
+``t_c``) to one timeline-residual column per distinct bucket size, and
+the policy select substitutes that residual for the WFBP term — see
+:func:`repro.core.analytical.has_timeline_form` for why this is exact.
+
+Correctness contract: every closed-form row agrees with the
+per-scenario reference implementation ``_fast_eval`` to <= 1e-9
+relative, and every timeline row with the event-driven
+``simulate_steady`` oracle to <= 1e-6 (property-tested on the default,
+mixed and frontier grids).  This module is the throughput engine
+:func:`repro.core.sweep.sweep` routes every batched-eligible scenario
+through.
 
 :func:`grid_evaluator` memoizes the prepared *structure* of a grid
 (axis tables, code vectors, label lists) keyed by grid value and
@@ -44,7 +54,7 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core import analytical
+from repro.core import analytical, bucketsim
 from repro.core.hardware import (CLUSTERS, apply_interconnect_preset,
                                  hierarchical_allreduce_time,
                                  ring_allreduce_time, tree_allreduce_time)
@@ -189,18 +199,35 @@ class _PolicyAxis:
     overlap_io: np.ndarray            # (P,) bool
     overlap_comm: np.ndarray
     h2d_early: np.ndarray
-    has_fast: np.ndarray
+    has_fast: np.ndarray              # (P,) exact per-layer closed form
+    has_tl: np.ndarray                # (P,) exact bucket-timeline form
+    tl_spec: np.ndarray               # (P,) index into tl_specs, -1 = none
+    #: Unique ``(bucket_bytes, overlap_comm)`` pairs the kernel must
+    #: compute a timeline-residual column for.  Priority-only policies
+    #: (no buckets) need no column: order-independence makes their
+    #: residual the per-layer WFBP term ``tc_no`` already on hand.
+    tl_specs: list[tuple[float, bool]]
 
 
 def _policy_axis(names: Sequence[str]) -> _PolicyAxis:
     pols: list[Policy] = [get_policy(n) for n in names]
+    specs: dict[tuple[float, bool], int] = {}
+    tl_spec = np.full(len(pols), -1, dtype=np.int64)
+    for i, p in enumerate(pols):
+        if analytical.has_timeline_form(p) and p.bucket_bytes:
+            key = (float(p.bucket_bytes), bool(p.overlap_comm))
+            tl_spec[i] = specs.setdefault(key, len(specs))
     return _PolicyAxis(
         names=list(names),
         overlap_io=np.array([p.overlap_io for p in pols], dtype=bool),
         overlap_comm=np.array([p.overlap_comm for p in pols], dtype=bool),
         h2d_early=np.array([p.h2d_early for p in pols], dtype=bool),
         has_fast=np.array([analytical.has_closed_form(p) for p in pols],
-                          dtype=bool))
+                          dtype=bool),
+        has_tl=np.array([analytical.has_timeline_form(p) for p in pols],
+                        dtype=bool),
+        tl_spec=tl_spec,
+        tl_specs=list(specs))
 
 
 # ----------------------------------------------------------------------
@@ -209,6 +236,7 @@ def _policy_axis(names: Sequence[str]) -> _PolicyAxis:
 def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
                  widx: np.ndarray, cidx: np.ndarray, coll: np.ndarray,
                  n: np.ndarray, batch: np.ndarray,
+                 tl_specs: Sequence[tuple[float, bool]] = (),
                  chunk: int = KERNEL_CHUNK) -> dict[str, np.ndarray]:
     """Policy-independent terms for every kernel point, reduced over
     the layer axis: ``(K,)`` vectors of ``io_h2d``, ``t_h2d``, ``comp``
@@ -216,11 +244,26 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
     resolved ``n_f``/``batch_f``.  The transient ``(K, L)`` matrices
     are built ``chunk`` points at a time so huge grids stay in bounded
     memory.
+
+    ``tl_specs`` (from :attr:`_PolicyAxis.tl_specs`) adds one
+    bucket-timeline residual column ``tl<i>`` per unique
+    ``(bucket_bytes, overlap_comm)`` pair: bucket payloads from the
+    shared :func:`repro.core.bucketsim.bucket_table` structure, costed
+    through the *same* per-chunk collective dispatch as the per-layer
+    ``t_c`` (so fused buckets amortize latency exactly as
+    ``repro.core.costmodel.comm_scale_fn`` does), reduced by
+    :func:`repro.core.bucketsim.timeline_residual`.
     """
     K = len(widx)
+    # Bucket structure depends only on (workload axis, bucket size) —
+    # built once per call, gathered per chunk.
+    btables = [bucketsim.bucket_table(wax.grad_bytes, bb)
+               for bb, _ in tl_specs]
     out = {name: np.empty(K) for name in
            ("io_h2d", "t_h2d", "comp", "sum_c", "tc_no", "t_u",
             "n_f", "batch_f")}
+    for i in range(len(tl_specs)):
+        out[f"tl{i}"] = np.empty(K)
     for lo in range(0, K, chunk):
         sl = slice(lo, lo + chunk)
         w, c = widx[sl], cidx[sl]
@@ -241,14 +284,17 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
         # comm costs: array-valued collective models, each algorithm
         # evaluated only on its own rows (the collective axis
         # partitions the points; computing all three models on the
-        # full matrix would triple the dominant kernel cost)
+        # full matrix would triple the dominant kernel cost).  The
+        # dispatch is payload-agnostic, so the same closure costs the
+        # per-layer gradients *and* the fused bucket payloads.
         grad = wax.grad_bytes[w]
         use_intra = nn <= cax.gpn[c]
         link_bw = np.where(use_intra, cax.intra_bw[c], cax.inter_bw[c])
         link_lat = np.where(use_intra, cax.intra_lat[c], cax.inter_lat[c])
+        codes_present = np.unique(cl)
 
-        def comm_rows(sel, code: int) -> np.ndarray:
-            g, ns = grad[sel], nn[sel][:, None]
+        def comm_rows(payload, sel, code: int) -> np.ndarray:
+            g, ns = payload[sel], nn[sel][:, None]
             if code == 0:
                 return ring_allreduce_time(g, n_f[sel][:, None],
                                            link_bw[sel][:, None],
@@ -262,15 +308,19 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
                 cax.intra_bw[ci][:, None], cax.intra_lat[ci][:, None],
                 cax.inter_bw[ci][:, None], cax.inter_lat[ci][:, None])
 
-        codes_present = np.unique(cl)
-        if len(codes_present) == 1:
-            t_c = comm_rows(slice(None), int(codes_present[0]))
-        else:
-            t_c = np.empty_like(grad)
-            for code in codes_present:
-                sel = np.nonzero(cl == code)[0]
-                t_c[sel] = comm_rows(sel, int(code))
-        t_c = t_c * (grad > 0)
+        def comm_matrix(payload: np.ndarray) -> np.ndarray:
+            """(k, B) payload bytes -> (k, B) collective seconds, with
+            zero-payload entries (padding, no-comm layers) zeroed."""
+            if len(codes_present) == 1:
+                t = comm_rows(payload, slice(None), int(codes_present[0]))
+            else:
+                t = np.empty_like(payload)
+                for code in codes_present:
+                    sel = np.nonzero(cl == code)[0]
+                    t[sel] = comm_rows(payload, sel, int(code))
+            return t * (payload > 0)
+
+        t_c = comm_matrix(grad)
 
         # pipeline terms: (k,)
         nbytes_in = batch_f * wax.bytes_per_sample[w]
@@ -290,6 +340,15 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
         out["t_u"][sl] = 3.0 * wax.param_bytes[w] / cax.hbm_bw[c]
         out["n_f"][sl] = n_f
         out["batch_f"][sl] = batch_f
+
+        # bucket-timeline residuals: gather the (W, B) bucket structure
+        # to this chunk's rows, cost the fused payloads through the
+        # same collective dispatch, reduce over the bucket axis
+        for i, (bt, (_, ov_comm)) in enumerate(zip(btables, tl_specs)):
+            dur = comm_matrix(bt.nbytes[w])
+            out[f"tl{i}"][sl] = bucketsim.timeline_residual(
+                t_b, dur, bt.release_layer[w], bt.mask[w],
+                overlap_comm=ov_comm)
     return out
 
 
@@ -300,10 +359,11 @@ def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
                    kc: dict[str, np.ndarray],
                    kidx: np.ndarray | None) -> dict[str, np.ndarray]:
     """Gather each scenario's kernel point (``kidx=None`` means the
-    identity map) and select its policy's closed form — Eqs. (2), (3),
-    (5) and the late-H2D variants, plus the zero-comm weak-scaling
-    baseline with the *same* policy (what ``_fast_eval`` computes for
-    the speedup column)."""
+    identity map) and select its policy's steady-state form — Eqs. (2),
+    (3), (5) and the late-H2D variants for closed-form policies, the
+    bucket-timeline residual for schedule-dependent ones — plus the
+    zero-comm weak-scaling baseline with the *same* policy (what
+    ``_fast_eval`` / ``_sim_eval`` compute for the speedup column)."""
     def g(a: np.ndarray) -> np.ndarray:
         return a if kidx is None else a[kidx]
 
@@ -317,6 +377,14 @@ def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
     early = pax.h2d_early[polidx]
 
     comm_term = np.where(ov_comm, tc_no, sum_c)     # WFBP residual or full
+    # Schedule-dependent overrides.  Bucketed policies substitute their
+    # bucket-timeline residual column; priority-only policies need no
+    # override — the net channel is work-conserving, so reordering
+    # never moves the last comm finish and the per-layer term already
+    # selected (tc_no / sum_c) *is* their residual.
+    spec_of = pax.tl_spec[polidx]
+    for i in range(len(pax.tl_specs)):
+        comm_term = np.where(spec_of == i, g(kc[f"tl{i}"]), comm_term)
     gpu_chain = comp + comm_term + t_u
     eq2 = io_h2d + gpu_chain                        # no I/O overlap
     eq_early = np.maximum(io_h2d, gpu_chain)        # Eq. (3)/(5)
@@ -328,6 +396,14 @@ def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
                   np.where(early, np.maximum(io_h2d, base_chain),
                            np.maximum(io_h2d, t_h2d + base_chain)))
 
+    # method labels: the per-row evaluation-path column ("analytical"
+    # for closed forms, "timeline" for the bucket-timeline form; rows
+    # matching neither are discarded by the caller for the simulator)
+    fast = pax.has_fast[polidx]
+    method = np.where(fast, "analytical",
+                      np.where(pax.has_tl[polidx], "timeline",
+                               "simulated")).tolist()
+
     return {
         "batch": batch_f,
         "iteration_time_s": t_iter,
@@ -335,6 +411,7 @@ def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
         "speedup": n_f * t1 / t_iter,
         "t_comm_s": sum_c,
         "t_comp_s": comp,
+        "method": method,
     }
 
 
@@ -349,16 +426,17 @@ def _make_rows(workload: list, cluster: list, n_workers: list, policy: list,
             "workload": wl, "cluster": cl, "n_workers": nw, "policy": pol,
             "collective": co, "interconnect": ic, "batch_per_gpu": b,
             "iteration_time_s": it, "samples_per_sec": sps, "speedup": sp,
-            "t_comm_s": tcm, "t_comp_s": tcp, "method": "analytical",
+            "t_comm_s": tcm, "t_comp_s": tcp, "method": meth,
         }
-        for wl, cl, nw, pol, co, ic, b, it, sps, sp, tcm, tcp in zip(
+        for wl, cl, nw, pol, co, ic, b, it, sps, sp, tcm, tcp, meth in zip(
             workload, cluster, n_workers, policy, collective, interconnect,
             np.asarray(cols["batch"], dtype=np.int64).tolist(),
             cols["iteration_time_s"].tolist(),
             cols["samples_per_sec"].tolist(),
             cols["speedup"].tolist(),
             cols["t_comm_s"].tolist(),
-            cols["t_comp_s"].tolist())
+            cols["t_comp_s"].tolist(),
+            cols["method"])
     ]
 
 
@@ -382,9 +460,10 @@ class GridEvaluator:
     Builds the axis tables, the kernel-grid code vectors (policy axis
     dropped), the scenario -> kernel-point map and the row label lists
     directly from the grid's cross-product structure — no per-scenario
-    Python objects at all.  Scenarios whose policy has no closed form
-    are flagged in :attr:`fast_mask`; :meth:`scenario_at` materializes
-    just those for the simulator fallback.
+    Python objects at all.  Closed-form *and* bucket-timeline policies
+    are both batched; scenarios whose policy has neither form come
+    back as ``None`` rows and :meth:`scenario_at` materializes just
+    those for the simulator fallback.
 
     The evaluator holds only *structure*; :meth:`run` computes the
     numbers.  Get instances through :func:`grid_evaluator`, which
@@ -423,9 +502,11 @@ class GridEvaluator:
                                dtype=np.int64)
         _check_batch_locked(self._wax, kw, self._kbatch)
 
-        self.n_fast = (self.n_scenarios // nP if nP else 0) \
-            * int(self._pax.has_fast.sum())
-        self.all_fast = self.n_fast == self.n_scenarios
+        per_policy = self.n_scenarios // nP if nP else 0
+        self.n_fast = per_policy * int(self._pax.has_fast.sum())
+        self.n_timeline = per_policy * int(self._pax.has_tl.sum())
+        self.all_batched = \
+            self.n_fast + self.n_timeline == self.n_scenarios
 
         # Per-axis label values (tiny object arrays, fancy-indexed per
         # chunk by the derived codes).
@@ -461,14 +542,16 @@ class GridEvaluator:
         wi = r // nC
         kidx = (((wi * nC + ci) * nK + ki) * nA + ai) * nI + ii
         return {"wi": wi, "ci": ci, "ki": ki, "pi": pi, "ai": ai, "ii": ii,
-                "kidx": kidx, "fast": self._pax.has_fast[pi]}
+                "kidx": kidx,
+                "batched": self._pax.has_fast[pi] | self._pax.has_tl[pi]}
 
     def run(self) -> "GridRun":
         """Evaluate the kernel grid (fresh numbers every call) and
         return the per-run row materializer."""
         return GridRun(self, _kernel_cols(
             self._wax, self._cax, self._kwidx, self._kcidx,
-            self._kcoll, self._kn, self._kbatch))
+            self._kcoll, self._kn, self._kbatch,
+            tl_specs=self._pax.tl_specs))
 
     def scenario_at(self, i: int) -> Scenario:
         """Materialize flat index ``i`` (used for simulator-fallback
@@ -513,8 +596,8 @@ class GridRun:
             ev._pol_values[codes["pi"]].tolist(),
             ev._coll_values[codes["ai"]].tolist(),
             ev._ic_values[codes["ii"]].tolist(), cols)
-        if not ev.all_fast:
-            for i in np.nonzero(~codes["fast"])[0].tolist():
+        if not ev.all_batched:
+            for i in np.nonzero(~codes["batched"])[0].tolist():
                 rows[i] = None                # selected a bogus equation
         return rows
 
@@ -551,13 +634,13 @@ def grid_evaluator(grid: ScenarioGrid) -> GridEvaluator:
 # Scenario-list front end (arbitrary iterables, already validated).
 # ----------------------------------------------------------------------
 def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
-    """Batched rows (input order) for a list of fast-path-eligible
-    scenarios; one Python pass to build code vectors, then the same
-    two-tier kernel the grid front end uses (with the identity
-    scenario -> kernel-point map).
+    """Batched rows (input order) for a list of batched-path-eligible
+    scenarios (closed-form or bucket-timeline policies); one Python
+    pass to build code vectors, then the same two-tier kernel the grid
+    front end uses (with the identity scenario -> kernel-point map).
 
-    Raises ``ValueError`` if any scenario's policy lacks a closed form
-    — callers (:func:`repro.core.sweep.sweep`) partition first.
+    Raises ``ValueError`` if any scenario's policy has neither form —
+    callers (:func:`repro.core.sweep.sweep`) partition first.
     """
     if not scenarios:
         return []
@@ -591,12 +674,15 @@ def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
     _check_batch_locked(wax, widx, batch)
     cax = _cluster_axis(list(pair_key))
     pax = _policy_axis(list(pol_key))
-    if not bool(pax.has_fast[polidx].all()):
+    batched_ok = pax.has_fast | pax.has_tl
+    if not bool(batched_ok[polidx].all()):
         bad = [pax.names[int(p)]
-               for p in np.unique(polidx[~pax.has_fast[polidx]])]
-        raise ValueError(f"policies without a closed form cannot take the "
-                         f"batched fast path: {bad}")
-    kc = _kernel_cols(wax, cax, widx, cidx, coll, n, batch)
+               for p in np.unique(polidx[~batched_ok[polidx]])]
+        raise ValueError(f"policies with neither a closed form nor a "
+                         f"bucket-timeline form cannot take the batched "
+                         f"path: {bad}")
+    kc = _kernel_cols(wax, cax, widx, cidx, coll, n, batch,
+                      tl_specs=pax.tl_specs)
     cols = _policy_select(pax, polidx, kc, kidx=None)
     return _make_rows(
         [s.workload for s in scenarios],

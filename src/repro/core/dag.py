@@ -188,71 +188,75 @@ def _bucketize(costs: IterationCosts, policy: Policy,
     bucket (the paper's layer-wise NCCL pattern).  With bucketing the
     durations are re-derived via ``comm_scale(total_bytes, total_time)``
     when byte sizes are known, else summed.
+
+    Boundaries come from the shared
+    :func:`repro.core.bucketsim.bucket_partition` — the one boundary
+    rule this builder and the batched timeline kernel both consume, so
+    the event-driven oracle and the batched path can never drift.
     """
-    L = costs.num_layers
-    order = list(range(L - 1, -1, -1))            # backward order: layer L first
+    from repro.core.bucketsim import bucket_partition  # circular-safe
+
     if not policy.bucket_bytes:
-        return [(f"comm_l{l + 1}", [l], costs.t_c[l]) for l in order if costs.t_c[l] > 0]
+        return [(f"comm_l{m + 1}", [m], costs.t_c[m])
+                for [m] in bucket_partition(
+                    [c > 0 for c in costs.t_c], None, None)]
 
     buckets: list[tuple[str, list[int], float]] = []
-    cur: list[int] = []
-    cur_bytes = 0.0
-    cur_time = 0.0
-
-    def flush():
-        nonlocal cur, cur_bytes, cur_time
-        if cur:
-            dur = comm_scale(cur_bytes, cur_time) if (comm_scale and cur_bytes) else cur_time
-            buckets.append((f"comm_bucket{len(buckets)}", list(cur), dur))
-        cur, cur_bytes, cur_time = [], 0.0, 0.0
-
-    for l in order:
-        if costs.t_c[l] <= 0:
-            continue
-        cur.append(l)
-        cur_time += costs.t_c[l]
-        if costs.grad_bytes is not None:
-            cur_bytes += costs.grad_bytes[l]
-        if costs.grad_bytes is not None and cur_bytes >= policy.bucket_bytes:
-            flush()
-    flush()
+    for members in bucket_partition([c > 0 for c in costs.t_c],
+                                    costs.grad_bytes, policy.bucket_bytes):
+        cur_time = sum(costs.t_c[m] for m in members)
+        cur_bytes = sum(costs.grad_bytes[m] for m in members) \
+            if costs.grad_bytes is not None else 0.0
+        dur = comm_scale(cur_bytes, cur_time) \
+            if (comm_scale and cur_bytes) else cur_time
+        buckets.append((f"comm_bucket{len(buckets)}", members, dur))
     return buckets
 
 
-def build_ssgd_dag(
-    costs: IterationCosts,
-    n_workers: int,
-    policy: Policy,
-    n_iterations: int = 1,
-    comm_scale: Callable[[float, float], float] | None = None,
-    shared_compute: bool = False,
-) -> DAG:
-    """Build the S-SGD DAG of Fig. 1 for ``n_iterations`` iterations.
+class SSGDDagBuilder:
+    """Incremental Fig.-1 DAG construction, one iteration at a time.
 
-    Single-GPU training (``n_workers == 1``) degenerates to Eq. (1):
-    the comm tasks get zero duration and the graph is a chain.
-
-    ``comm_scale(total_bytes, naive_total_time)`` maps a fused bucket to
-    its collective duration (used by the bucketing policy to model the
-    latency amortization the paper calls for in §VII).
+    Holds the cross-iteration state (the previous update and H2D
+    tasks) so callers can interleave :meth:`add_iteration` with
+    incremental simulation — this is what lets
+    :func:`repro.core.simulator.simulate_steady` stop building as soon
+    as the update-task deltas converge instead of always paying the
+    full warm-up cap.  :func:`build_ssgd_dag` wraps it for the common
+    build-everything-up-front case.
     """
-    if n_workers < 1:
-        raise ValueError("n_workers >= 1")
-    g = DAG()
-    L = costs.num_layers
-    multi = n_workers > 1
-    # ``shared_compute`` serializes all workers on one compute channel —
-    # models host-device oversubscription (N logical devices on one
-    # core), used by examples/dag_validation.py.
-    gpu_of = (lambda w: "gpu:shared") if shared_compute else gpu_channel
 
-    prev_update: int | None = None
-    prev_h2d: list[int] = []
+    def __init__(self, costs: IterationCosts, n_workers: int, policy: Policy,
+                 comm_scale: Callable[[float, float], float] | None = None,
+                 shared_compute: bool = False):
+        if n_workers < 1:
+            raise ValueError("n_workers >= 1")
+        self.dag = DAG()
+        self.costs = costs
+        self.n_workers = n_workers
+        self.policy = policy
+        self.n_iterations = 0
+        # ``shared_compute`` serializes all workers on one compute
+        # channel — models host-device oversubscription (N logical
+        # devices on one core), used by examples/dag_validation.py.
+        self._gpu_of = (lambda w: "gpu:shared") if shared_compute \
+            else gpu_channel
+        # bucket boundaries depend only on (costs, policy, comm_scale)
+        self._buckets = _bucketize(costs, policy, comm_scale) \
+            if n_workers > 1 else []
+        self._prev_update: int | None = None
+        self._prev_h2d: list[int] = []
 
-    for it in range(n_iterations):
+    def add_iteration(self) -> int:
+        """Append one iteration's tasks and edges; returns the
+        iteration's ``update`` task id."""
+        g, costs, policy = self.dag, self.costs, self.policy
+        L = costs.num_layers
+        it = self.n_iterations
+        prev_update, prev_h2d = self._prev_update, self._prev_h2d
+
         # --- I/O + H2D (communication tasks T0-T7 in Fig. 1) -----------
         h2d_tasks = []
-        for w in range(n_workers):
+        for w in range(self.n_workers):
             io = g.add_task(f"io_w{w}", TaskKind.COMM, costs.t_io,
                             disk_channel(w), iteration=it, worker=w)
             # Overlapped I/O: next fetch only waits for the previous fetch
@@ -279,11 +283,11 @@ def build_ssgd_dag(
 
         # --- forward, layer 1..L ---------------------------------------
         fwd: list[list[int]] = [[] for _ in range(L)]
-        for w in range(n_workers):
+        for w in range(self.n_workers):
             prev = h2d_tasks[w]
             for l in range(L):
                 t = g.add_task(f"fwd_l{l + 1}_w{w}", TaskKind.COMPUTE,
-                               costs.t_f[l], gpu_of(w), iteration=it,
+                               costs.t_f[l], self._gpu_of(w), iteration=it,
                                layer=l + 1, worker=w, priority=float(l))
                 g.add_edge(prev, t)
                 if l == 0 and prev_update is not None:
@@ -293,54 +297,76 @@ def build_ssgd_dag(
 
         # --- backward, layer L..1 --------------------------------------
         bwd: dict[int, list[int]] = {}
-        for w in range(n_workers):
+        for w in range(self.n_workers):
             prev = fwd[L - 1][w]
             for l in range(L - 1, -1, -1):
                 t = g.add_task(f"bwd_l{l + 1}_w{w}", TaskKind.COMPUTE,
-                               costs.t_b[l], gpu_of(w), iteration=it,
+                               costs.t_b[l], self._gpu_of(w), iteration=it,
                                layer=l + 1, worker=w,
                                priority=float(2 * L - l))
                 g.add_edge(prev, t)
                 bwd.setdefault(l, []).append(t)
                 prev = t
-        last_bwd = [bwd[0][w] for w in range(n_workers)]   # layer 1 = last
+        last_bwd = [bwd[0][w] for w in range(self.n_workers)]  # layer 1 last
 
         # --- gradient aggregation (comm tasks T32-T34) -----------------
         comm_tasks: list[int] = []
-        if multi:
-            buckets = _bucketize(costs, policy, comm_scale)
-            prev_comm: int | None = None
-            for bname, members, dur in buckets:
-                # ByteScheduler semantics (policies.py): priority is the
-                # bucket's earliest layer — layer-1/earlier-needed
-                # tensors overtake on a priority-scheduled net channel
-                # (lower value = scheduled first).  ``members`` is in
-                # backward order, so the earliest layer is members[-1].
-                c = g.add_task(bname, TaskKind.COMM, dur, NET_CHANNEL,
-                               iteration=it, layer=members[0] + 1,
-                               priority=float(members[-1]),
-                               nbytes=sum(costs.grad_bytes[m] for m in members)
-                               if costs.grad_bytes is not None else 0.0)
-                if policy.overlap_comm:
-                    # WFBP: ready as soon as every worker finished the
-                    # backward of every member layer of the bucket.
-                    for m in members:
-                        g.add_edges(bwd[m], c)
-                else:
-                    # CNTK: aggregation only after the entire backward pass.
-                    g.add_edges(last_bwd, c)
-                if prev_comm is not None and policy.serialize_comm:
-                    g.add_edge(prev_comm, c)
-                prev_comm = c
-                comm_tasks.append(c)
+        prev_comm: int | None = None
+        for bname, members, dur in self._buckets:
+            # ByteScheduler semantics (policies.py): priority is the
+            # bucket's earliest layer — layer-1/earlier-needed
+            # tensors overtake on a priority-scheduled net channel
+            # (lower value = scheduled first).  ``members`` is in
+            # backward order, so the earliest layer is members[-1].
+            c = g.add_task(bname, TaskKind.COMM, dur, NET_CHANNEL,
+                           iteration=it, layer=members[0] + 1,
+                           priority=float(members[-1]),
+                           nbytes=sum(costs.grad_bytes[m] for m in members)
+                           if costs.grad_bytes is not None else 0.0)
+            if policy.overlap_comm:
+                # WFBP: ready as soon as every worker finished the
+                # backward of every member layer of the bucket.
+                for m in members:
+                    g.add_edges(bwd[m], c)
+            else:
+                # CNTK: aggregation only after the entire backward pass.
+                g.add_edges(last_bwd, c)
+            if prev_comm is not None and policy.serialize_comm:
+                g.add_edge(prev_comm, c)
+            prev_comm = c
+            comm_tasks.append(c)
 
         # --- model update (T35) ----------------------------------------
         upd = g.add_task("update", TaskKind.COMPUTE, costs.t_u,
-                         gpu_of(0), iteration=it,
+                         self._gpu_of(0), iteration=it,
                          priority=float(3 * L + 1))
         g.add_edges(last_bwd, upd)
         g.add_edges(comm_tasks, upd)
-        prev_update = upd
-        prev_h2d = h2d_tasks
+        self._prev_update = upd
+        self._prev_h2d = h2d_tasks
+        self.n_iterations += 1
+        return upd
 
-    return g
+
+def build_ssgd_dag(
+    costs: IterationCosts,
+    n_workers: int,
+    policy: Policy,
+    n_iterations: int = 1,
+    comm_scale: Callable[[float, float], float] | None = None,
+    shared_compute: bool = False,
+) -> DAG:
+    """Build the S-SGD DAG of Fig. 1 for ``n_iterations`` iterations.
+
+    Single-GPU training (``n_workers == 1``) degenerates to Eq. (1):
+    the comm tasks get zero duration and the graph is a chain.
+
+    ``comm_scale(total_bytes, naive_total_time)`` maps a fused bucket to
+    its collective duration (used by the bucketing policy to model the
+    latency amortization the paper calls for in §VII).
+    """
+    b = SSGDDagBuilder(costs, n_workers, policy, comm_scale=comm_scale,
+                       shared_compute=shared_compute)
+    for _ in range(n_iterations):
+        b.add_iteration()
+    return b.dag

@@ -13,10 +13,12 @@ CNTK           yes          no            no
 naive S-SGD    no           no            no
 =============  ===========  ============  =========
 
-Beyond-paper policies: ``BUCKETED_25MB`` fuses layer-wise gradients into
-size-targeted buckets (DDP/Horovod style — the fix for the 9.6% network
-utilization the paper measured on InfiniBand), and ``PRIORITY`` frees
-the comm-channel FIFO so smaller/earlier-needed tensors may overtake
+Beyond-paper policies: the ``bucketed-{1,4,25,100}mb`` family fuses
+layer-wise gradients into size-targeted buckets (DDP/Horovod style —
+the fix for the 9.6% network utilization the paper measured on
+InfiniBand; the size axis sweeps latency amortization against overlap
+lost to coarser release granularity), and ``PRIORITY`` frees the
+comm-channel FIFO so smaller/earlier-needed tensors may overtake
 (ByteScheduler style).
 """
 from __future__ import annotations
@@ -52,9 +54,23 @@ MXNET = Policy("mxnet", overlap_io=True, overlap_comm=True)
 TENSORFLOW = Policy("tensorflow", overlap_io=True, overlap_comm=True)
 CAFFE_MPI = Policy("caffe-mpi", overlap_io=True, h2d_early=True, overlap_comm=True)
 
-# Beyond-paper optimizations (§VII future work).
-BUCKETED_25MB = Policy("bucketed-25mb", overlap_io=True, h2d_early=True,
-                       overlap_comm=True, bucket_bytes=25e6)
+# Beyond-paper optimizations (§VII future work).  The bucket-size
+# family sweeps the fusion axis the paper's conclusion asks about:
+# 1 MB (latency still dominates), 4 MB, 25 MB (DDP's default) and
+# 100 MB (one-ish bucket for the paper CNNs ≈ comm-at-end with a fused
+# collective).
+def _bucketed(mb: float) -> Policy:
+    return Policy(f"bucketed-{mb:g}mb", overlap_io=True, h2d_early=True,
+                  overlap_comm=True, bucket_bytes=mb * 1e6)
+
+
+BUCKETED_1MB = _bucketed(1)
+BUCKETED_4MB = _bucketed(4)
+BUCKETED_25MB = _bucketed(25)
+BUCKETED_100MB = _bucketed(100)
+BUCKETED_POLICIES = {p.name: p for p in
+                     (BUCKETED_1MB, BUCKETED_4MB, BUCKETED_25MB,
+                      BUCKETED_100MB)}
 # No serialize_comm chain edges: the net channel still executes one
 # collective at a time (channel constraint), but the *order* is the
 # priority queue's to choose — otherwise issue-order FIFO edges would
@@ -71,7 +87,7 @@ FRAMEWORK_POLICIES = {
 }
 
 ALL_POLICIES = dict(FRAMEWORK_POLICIES, naive=NAIVE,
-                    **{"bucketed-25mb": BUCKETED_25MB, "priority": PRIORITY})
+                    **BUCKETED_POLICIES, priority=PRIORITY)
 
 
 def get_policy(name: str) -> Policy:

@@ -206,17 +206,27 @@ FRONTIER_LINK_BASES = ("10gbe", "ib-100g", "ib-100g-fused", "ib-200g")
 FRONTIER_BW_FACTORS = (0.5, 1, 2, 4)
 FRONTIER_LAT_FACTORS = (0.25, 1, 4)
 
+#: Frontier policy axis: the five per-layer-exact policies plus the
+#: schedule-dependent ones the bucket-timeline kernel made sweepable —
+#: the bucket-size axis (1/4/25/100 MB) and priority scheduling.
+FRONTIER_POLICIES = ("naive", "cntk", "mxnet", "tensorflow", "caffe-mpi",
+                     "bucketed-1mb", "bucketed-4mb", "bucketed-25mb",
+                     "bucketed-100mb", "priority")
+
 
 def frontier_grid() -> ScenarioGrid:
     """The §VII design-space study at interactive scale: every paper CNN
-    on both paper clusters, six cluster sizes, the five exact policies,
-    all three collectives, and a ``bandwidth x latency x bucket-fusion``
-    interconnect frontier (four inter-node link bases, each at
-    {0.5,1,2,4}x bandwidth and {0.25,1,4}x latency via the scaled-preset
-    grammar) — 25 920 scenarios, all on the batched analytical fast
-    path.  This is the kind of model x cluster x algorithm sweep the
-    companion performance-modeling literature runs offline; the batched
-    evaluator answers it in well under a second."""
+    on both paper clusters, six cluster sizes, all three collectives,
+    ten policies — the five exact ones **plus** the bucket-size axis
+    (1/4/25/100 MB gradient fusion) and priority comm, both on the
+    batched bucket-timeline path — and a ``bandwidth x latency x
+    bucket-fusion`` interconnect frontier (four inter-node link bases,
+    each at {0.5,1,2,4}x bandwidth and {0.25,1,4}x latency via the
+    scaled-preset grammar) — 51 840 scenarios, every one batched.
+    This is exactly the what-if study the paper's future-work section
+    asks for (which bucket size rescues InfiniBand utilization, and at
+    what link speed does fusion stop mattering?); the batched evaluator
+    answers it in about a second."""
     interconnects = tuple(
         f"{base}@bw{bw:g}@lat{lat:g}"
         for base in FRONTIER_LINK_BASES
@@ -224,6 +234,7 @@ def frontier_grid() -> ScenarioGrid:
         for lat in FRONTIER_LAT_FACTORS)
     return ScenarioGrid(
         worker_counts=(2, 4, 8, 16, 32, 64),
+        policies=FRONTIER_POLICIES,
         collectives=COLLECTIVE_ALGORITHMS,
         interconnects=interconnects,
     )

@@ -15,15 +15,23 @@ combinations — in one call, two ways:
   :func:`_fast_eval` stays as the reference implementation — the two
   agree to <= 1e-9 relative (property-tested), and ``batched=False``
   pins a sweep to it.
-* **Event-driven fallback** for policies whose steady state depends on
-  the schedule itself (gradient-bucket fusion, priority comm): the
-  Fig.-1 DAG is built and list-scheduled via
+* **Batched bucket-timeline path** for the schedule-dependent policies
+  (gradient-bucket fusion, priority comm): their steady state is
+  exactly the bucket-timeline form (:mod:`repro.core.bucketsim`), so
+  the same kernel evaluates them as padded ``(scenario x bucket)``
+  matrices — no Python DAG objects, no list scheduler.  Rows carry
+  ``method="timeline"``.
+* **Event-driven fallback** for policies with neither form, and for
+  ``force_simulator=True`` (the agreement oracle): the Fig.-1 DAG is
+  built and list-scheduled via
   :func:`repro.core.simulator.simulate_steady`.
 
 The property tests assert the analytical and simulator paths agree to
-<= 1e-6 relative on every policy with an exact closed form.  For
-grids too big to buffer, :func:`iter_rows` / :func:`stream_csv` /
-:func:`stream_json` evaluate lazily chunk by chunk.
+<= 1e-6 relative on every policy with an exact closed form, and the
+timeline path to <= 1e-6 against the simulator on the bucketed and
+priority policies.  For grids too big to buffer, :func:`iter_rows` /
+:func:`stream_csv` / :func:`stream_json` evaluate lazily chunk by
+chunk.
 """
 from __future__ import annotations
 
@@ -57,6 +65,16 @@ def has_fast_path(policy: Policy) -> bool:
     (delegates to the single source of truth,
     :func:`repro.core.analytical.has_closed_form`)."""
     return analytical.has_closed_form(policy)
+
+
+def has_batched_path(policy: Policy) -> bool:
+    """True when the policy can be evaluated by the batched kernel at
+    all: an exact per-layer closed form (``method="analytical"``) or
+    the bucket-timeline form (``method="timeline"``).  Everything else
+    — and every scenario under ``force_simulator=True`` — goes through
+    the event-driven simulator."""
+    return analytical.has_closed_form(policy) \
+        or analytical.has_timeline_form(policy)
 
 
 def _scenario_costs(s: Scenario, tab: WorkloadTable):
@@ -129,12 +147,18 @@ def _row(s: Scenario, batch: int, t_iter: float, t1: float, t_comm: float,
 
 @dataclass
 class SweepResult:
-    """Tidy results table: one dict per scenario, :data:`COLUMNS` keys."""
+    """Tidy results table: one dict per scenario, :data:`COLUMNS` keys.
+
+    ``n_analytical`` counts closed-form batched rows, ``n_timeline``
+    bucket-timeline batched rows, ``n_simulated`` event-driven
+    fallback rows — the three evaluation paths of :func:`sweep`.
+    """
 
     rows: list[dict]
     elapsed_s: float
     n_analytical: int
     n_simulated: int
+    n_timeline: int = 0
 
     def __len__(self) -> int:
         return len(self.rows)
@@ -168,6 +192,7 @@ class SweepResult:
             "n_scenarios": len(self.rows),
             "elapsed_s": self.elapsed_s,
             "n_analytical": self.n_analytical,
+            "n_timeline": self.n_timeline,
             "n_simulated": self.n_simulated,
             "rows": self.rows,
         }
@@ -219,7 +244,7 @@ def _grid_chunks(grid: ScenarioGrid, warm_iterations: int,
     run = ev.run()
     for lo in range(0, len(run), chunk):
         part = run.rows_slice(lo, min(lo + chunk, len(run)))
-        if not ev.all_fast:
+        if not ev.all_batched:
             for i, r in enumerate(part):
                 if r is None:
                     part[i] = _sim_eval(ev.scenario_at(lo + i),
@@ -235,15 +260,16 @@ def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
     """Yield tidy result rows in scenario order, lazily.
 
     The streaming core behind :func:`sweep` and :func:`stream`:
-    closed-form scenarios are evaluated by the scenario-axis batched
-    kernel ``chunk`` at a time, simulator fallbacks are interleaved in
-    place, and no more than one chunk of rows is ever buffered — which
-    is what lets frontier-sized grids (tens of thousands of scenarios)
-    stream straight to disk.
+    closed-form and bucket-timeline scenarios are evaluated by the
+    scenario-axis batched kernel ``chunk`` at a time, simulator
+    fallbacks are interleaved in place, and no more than one chunk of
+    rows is ever buffered — which is what lets frontier-sized grids
+    (tens of thousands of scenarios) stream straight to disk.
 
-    ``batched=False`` forces the per-scenario reference path
-    (:func:`_fast_eval`) — the agreement oracle and the slow side of
-    the throughput benchmark.
+    ``batched=False`` forces the per-scenario reference paths —
+    :func:`_fast_eval` for closed forms, the event-driven simulator
+    for schedule-dependent policies — the agreement oracles and the
+    slow side of the throughput benchmark.
     """
     if isinstance(grid, ScenarioGrid):
         if batched and not force_simulator:
@@ -255,15 +281,23 @@ def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
         scenarios = list(grid)
         for s in scenarios:
             s.validate()
-    fast_of: dict[str, bool] = {}
+    # per-policy evaluation tier: 2 = closed form, 1 = bucket-timeline
+    # form (batched kernel only), 0 = simulator-only
+    tier_of: dict[str, int] = {}
     for lo in range(0, len(scenarios), chunk):
         part = scenarios[lo:lo + chunk]
         fast: list[int] = []
         for i, s in enumerate(part):
-            ok = fast_of.get(s.policy)
-            if ok is None:
-                ok = fast_of[s.policy] = has_fast_path(resolve_policy(s))
-            if ok and not force_simulator:
+            tier = tier_of.get(s.policy)
+            if tier is None:
+                pol = resolve_policy(s)
+                tier = tier_of[s.policy] = 2 if has_fast_path(pol) \
+                    else (1 if has_batched_path(pol) else 0)
+            if force_simulator:
+                continue
+            # batched=False pins the per-scenario reference paths:
+            # _fast_eval for closed forms, the simulator for the rest
+            if tier >= (1 if batched else 2):
                 fast.append(i)
         if batched and fast:
             fast_rows = iter(eval_scenarios([part[i] for i in fast]))
@@ -281,14 +315,15 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
           batched: bool = True) -> SweepResult:
     """Evaluate every scenario of ``grid`` and return the tidy table.
 
-    Closed-form scenarios go through the scenario-axis batched kernel
-    (:mod:`repro.core.batched`); the rest through the event-driven
-    simulator.  ``batched=False`` pins the closed-form scenarios to the
-    per-scenario reference path instead (same rows to <= 1e-9 relative
-    — property-tested).  ``force_simulator=True`` routes *all*
-    scenarios through the event-driven simulator — used by the
-    agreement tests and for studying schedules the closed forms cannot
-    express.
+    Closed-form and bucket-timeline scenarios go through the
+    scenario-axis batched kernel (:mod:`repro.core.batched`); the rest
+    through the event-driven simulator.  ``batched=False`` pins every
+    scenario to its per-scenario reference path instead — ``_fast_eval``
+    for closed forms (same rows to <= 1e-9 relative, property-tested),
+    the simulator for bucketed/priority policies (<= 1e-6).
+    ``force_simulator=True`` routes *all* scenarios through the
+    event-driven simulator — the agreement oracle, and the way to study
+    schedules neither batched form can express.
     """
     t0 = time.perf_counter()
     rows: list[dict] = []
@@ -298,17 +333,21 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
             rows.extend(part)
         return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
                            n_analytical=ev.n_fast,
-                           n_simulated=len(ev) - ev.n_fast)
-    n_fast = n_slow = 0
+                           n_timeline=ev.n_timeline,
+                           n_simulated=len(ev) - ev.n_fast - ev.n_timeline)
+    n_fast = n_tl = n_slow = 0
     for r in iter_rows(grid, force_simulator=force_simulator,
                        warm_iterations=warm_iterations, batched=batched):
         rows.append(r)
         if r["method"] == "analytical":
             n_fast += 1
+        elif r["method"] == "timeline":
+            n_tl += 1
         else:
             n_slow += 1
     return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
-                       n_analytical=n_fast, n_simulated=n_slow)
+                       n_analytical=n_fast, n_timeline=n_tl,
+                       n_simulated=n_slow)
 
 
 def stream(grid: ScenarioGrid | Iterable[Scenario], *,
@@ -328,7 +367,7 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
     if csv_path is None and json_path is None:
         raise ValueError("stream() needs csv_path and/or json_path")
     t0 = time.perf_counter()
-    n_fast = n_slow = 0
+    n_fast = n_tl = n_slow = 0
     csv_file = json_file = None
     try:
         if csv_path is not None:
@@ -351,20 +390,25 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
             first = False
             if r["method"] == "analytical":
                 n_fast += 1
+            elif r["method"] == "timeline":
+                n_tl += 1
             else:
                 n_slow += 1
         elapsed = time.perf_counter() - t0
         if json_file is not None:
             json_file.write(
                 '\n  ],\n  "n_scenarios": %d,\n  "elapsed_s": %s,\n'
-                '  "n_analytical": %d,\n  "n_simulated": %d\n}\n'
-                % (n_fast + n_slow, json.dumps(elapsed), n_fast, n_slow))
+                '  "n_analytical": %d,\n  "n_timeline": %d,\n'
+                '  "n_simulated": %d\n}\n'
+                % (n_fast + n_tl + n_slow, json.dumps(elapsed),
+                   n_fast, n_tl, n_slow))
     finally:
         for f in (csv_file, json_file):
             if f is not None:
                 f.close()
-    return {"n_scenarios": n_fast + n_slow, "elapsed_s": elapsed,
-            "n_analytical": n_fast, "n_simulated": n_slow}
+    return {"n_scenarios": n_fast + n_tl + n_slow, "elapsed_s": elapsed,
+            "n_analytical": n_fast, "n_timeline": n_tl,
+            "n_simulated": n_slow}
 
 
 def stream_csv(grid: ScenarioGrid | Iterable[Scenario], path,
@@ -381,8 +425,10 @@ def stream_json(grid: ScenarioGrid | Iterable[Scenario], path,
 
 def evaluate_scenario(s: Scenario, method: str = "auto",
                       warm_iterations: int = 6) -> dict:
-    """Evaluate one scenario; ``method`` is ``auto`` (fast path when
-    exact), ``analytical`` (raise if inexact) or ``simulator``."""
+    """Evaluate one scenario; ``method`` is ``auto`` (closed form when
+    exact, else the batched bucket-timeline kernel, else the
+    simulator), ``analytical`` (raise unless the per-layer closed form
+    applies) or ``simulator``."""
     s.validate()
     policy = resolve_policy(s)
     if method == "simulator":
@@ -395,4 +441,6 @@ def evaluate_scenario(s: Scenario, method: str = "auto",
         raise ValueError(f"unknown method {method!r}")
     if has_fast_path(policy):
         return _fast_eval(s)
+    if has_batched_path(policy):
+        return eval_scenarios([s])[0]
     return _sim_eval(s, warm_iterations)

@@ -20,10 +20,11 @@ Workloads resolve through the pluggable registry
 (``ib-100g@bw2@lat0.25``) and ``default`` (keep the cluster's own
 links).  The default grid is 540 scenarios on the batched analytical
 fast path (milliseconds end to end); ``--grid mixed`` spans all three
-providers (1620 scenarios); ``--grid frontier`` is the 25 920-scenario
-bandwidth x latency x bucket-fusion design-space study — pair it with
-``--stream`` to write CSV/JSON incrementally instead of buffering
-every row.
+providers (1620 scenarios); ``--grid frontier`` is the 51 840-scenario
+bandwidth x latency x bucket-size x priority design-space study
+(schedule-dependent policies ride the batched bucket-timeline path, so
+the whole grid evaluates in about a second) — pair it with ``--stream``
+to write CSV/JSON incrementally instead of buffering every row.
 """
 from __future__ import annotations
 
@@ -49,9 +50,9 @@ def build_parser() -> argparse.ArgumentParser:
                    default="default",
                    help="base grid: 'default' (paper CNNs, 540 scenarios), "
                         "'mixed' (cnn:/trace:/llm: providers, 1620) or "
-                        "'frontier' (bandwidth x latency x bucket-fusion "
-                        "what-ifs, 25920); other axis flags override any "
-                        "of them")
+                        "'frontier' (bandwidth x latency x bucket-size x "
+                        "priority what-ifs, 51840); other axis flags "
+                        "override any of them")
     p.add_argument("--workloads", type=_csv_list, default=None,
                    help="comma-separated workload names: bare CNNs "
                         "(alexnet,googlenet,resnet50), cnn:<name>, "
@@ -154,12 +155,14 @@ def main(argv: list[str] | None = None) -> int:
         print(f"streamed {summary['n_scenarios']} rows to {dests} "
               f"in {summary['elapsed_s']:.2f}s "
               f"({summary['n_analytical']} analytical, "
+              f"{summary['n_timeline']} timeline, "
               f"{summary['n_simulated']} simulated)")
         return 0
     result = sweep(grid, force_simulator=args.force_simulator,
                    batched=not args.per_scenario)
     print(f"evaluated in {result.elapsed_s:.2f}s "
           f"({result.n_analytical} analytical, "
+          f"{result.n_timeline} timeline, "
           f"{result.n_simulated} simulated)")
 
     rows = result.sorted_by(args.sort) if args.sort else result.rows

@@ -51,13 +51,27 @@ class TestBatchedAgreement:
         grid = frontier_grid()
         batched = sweep(grid)
         assert batched.n_simulated == 0
+        assert batched.n_timeline > 0          # bucket-size + priority axis
         scenarios = grid.expand()
         assert len(batched) == len(scenarios) >= 20_000
         # oracle every 37th scenario (coprime stride covers every axis
-        # value) — the full per-scenario pass is benchmarked, not tested
-        idx = range(0, len(scenarios), 37)
+        # value) — the full per-scenario pass is benchmarked, not
+        # tested.  Closed-form rows check against _fast_eval (<=1e-9);
+        # timeline rows against the event-driven simulator (<=1e-6),
+        # sampled sparser because each oracle call list-schedules a DAG.
+        idx = [i for i in range(0, len(scenarios), 37)
+               if batched.rows[i]["method"] == "analytical"]
+        assert idx
         assert_rows_agree([batched.rows[i] for i in idx],
                           [_fast_eval(scenarios[i]) for i in idx])
+        from repro.core.sweep import _sim_eval
+        tl_idx = [i for i in range(0, len(scenarios), 331)
+                  if batched.rows[i]["method"] == "timeline"]
+        assert tl_idx
+        for i in tl_idx:
+            assert batched.rows[i]["iteration_time_s"] == pytest.approx(
+                _sim_eval(scenarios[i])["iteration_time_s"], rel=1e-6), \
+                scenarios[i].label()
 
     def test_batched_false_uses_reference_path(self):
         grid = ScenarioGrid(workloads=("alexnet",), worker_counts=(4,),
@@ -75,21 +89,47 @@ class TestBatchedAgreement:
                     row["policy"], row["collective"]) == \
                 (s.workload, s.cluster, s.n_workers, s.policy, s.collective)
 
-    def test_simulator_rows_interleaved_in_order(self):
+    def test_timeline_rows_interleaved_in_order(self):
         grid = ScenarioGrid(workloads=("alexnet",),
                             clusters=("v100-nvlink-ib",), worker_counts=(4,),
                             policies=("caffe-mpi", "bucketed-25mb",
                                       "priority"))
         r = sweep(grid)
-        assert r.n_analytical == 1 and r.n_simulated == 2
+        assert r.n_analytical == 1 and r.n_timeline == 2 \
+            and r.n_simulated == 0
         assert [row["method"] for row in r.rows] == \
-            ["analytical", "simulated", "simulated"]
-        # the sim rows agree with evaluating the scenarios directly
+            ["analytical", "timeline", "timeline"]
+        # the timeline rows agree with the event-driven oracle
         from repro.core.sweep import _sim_eval
         for row, s in zip(r.rows, grid.expand()):
-            if row["method"] == "simulated":
+            if row["method"] == "timeline":
                 assert row["iteration_time_s"] == pytest.approx(
-                    _sim_eval(s)["iteration_time_s"])
+                    _sim_eval(s)["iteration_time_s"], rel=1e-6)
+
+    def test_simulator_rows_interleaved_in_order(self):
+        # policies with neither closed nor timeline form still fall
+        # back to the simulator, interleaved in grid order
+        from repro.core import policies as P
+        from repro.core.policies import Policy
+        weird = Policy("_unstudied", overlap_comm=True)   # no io overlap
+        P.ALL_POLICIES["_unstudied"] = weird
+        try:
+            grid = ScenarioGrid(workloads=("alexnet",),
+                                clusters=("v100-nvlink-ib",),
+                                worker_counts=(4,),
+                                policies=("caffe-mpi", "_unstudied"))
+            r = sweep(grid)
+            assert r.n_analytical == 1 and r.n_timeline == 0 \
+                and r.n_simulated == 1
+            assert [row["method"] for row in r.rows] == \
+                ["analytical", "simulated"]
+            from repro.core.sweep import _sim_eval
+            for row, s in zip(r.rows, grid.expand()):
+                if row["method"] == "simulated":
+                    assert row["iteration_time_s"] == pytest.approx(
+                        _sim_eval(s)["iteration_time_s"])
+        finally:
+            del P.ALL_POLICIES["_unstudied"]
 
     def test_eval_scenarios_list_front_end(self):
         scenarios = ScenarioGrid(workloads=("resnet50",),
@@ -98,10 +138,27 @@ class TestBatchedAgreement:
         assert_rows_agree(eval_scenarios(scenarios),
                           [_fast_eval(s) for s in scenarios])
 
-    def test_eval_scenarios_rejects_inexact_policies(self):
-        with pytest.raises(ValueError, match="closed form"):
-            eval_scenarios([Scenario("alexnet", "v100-nvlink-ib", 4,
-                                     "bucketed-25mb")])
+    def test_eval_scenarios_accepts_timeline_policies(self):
+        from repro.core.sweep import _sim_eval
+        scenarios = [Scenario("alexnet", "v100-nvlink-ib", 4,
+                              "bucketed-25mb"),
+                     Scenario("alexnet", "v100-nvlink-ib", 4, "priority")]
+        rows = eval_scenarios(scenarios)
+        assert [r["method"] for r in rows] == ["timeline", "timeline"]
+        for row, s in zip(rows, scenarios):
+            assert row["iteration_time_s"] == pytest.approx(
+                _sim_eval(s)["iteration_time_s"], rel=1e-6)
+
+    def test_eval_scenarios_rejects_unbatchable_policies(self):
+        from repro.core import policies as P
+        from repro.core.policies import Policy
+        P.ALL_POLICIES["_unstudied"] = Policy("_unstudied", h2d_early=True)
+        try:
+            with pytest.raises(ValueError, match="batched"):
+                eval_scenarios([Scenario("alexnet", "v100-nvlink-ib", 4,
+                                         "_unstudied")])
+        finally:
+            del P.ALL_POLICIES["_unstudied"]
 
     def test_empty_grid_and_empty_iterable(self):
         assert len(sweep(ScenarioGrid(workloads=()))) == 0
@@ -112,7 +169,12 @@ class TestBatchedAgreement:
                      Scenario("alexnet", "k80-pcie-10gbe", 8, "priority")]
         r = sweep(scenarios)
         assert [row["method"] for row in r.rows] == ["analytical",
-                                                     "simulated"]
+                                                     "timeline"]
+        assert r.n_analytical == 1 and r.n_timeline == 1
+        # batched=False pins the per-scenario reference paths instead
+        ref = sweep(scenarios, batched=False)
+        assert [row["method"] for row in ref.rows] == ["analytical",
+                                                       "simulated"]
 
     def test_batch_override_propagates(self):
         grid = ScenarioGrid(workloads=("resnet50",),

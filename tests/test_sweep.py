@@ -116,15 +116,30 @@ class TestAnalyticalSimulatorAgreement:
             expected = name in EXACT_POLICIES
             assert has_fast_path(pol) == expected, name
 
-    def test_bucketed_routes_through_simulator(self):
+    def test_bucketed_routes_through_timeline_path(self):
         g = ScenarioGrid(workloads=("alexnet",), clusters=("v100-nvlink-ib",),
                          worker_counts=(4,),
                          policies=("caffe-mpi", "bucketed-25mb"))
         r = sweep(g)
-        assert r.n_analytical == 1 and r.n_simulated == 1
+        assert r.n_analytical == 1 and r.n_timeline == 1 \
+            and r.n_simulated == 0
         methods = {row["policy"]: row["method"] for row in r.rows}
         assert methods == {"caffe-mpi": "analytical",
-                           "bucketed-25mb": "simulated"}
+                           "bucketed-25mb": "timeline"}
+
+    def test_force_simulator_still_pins_event_driven_path(self):
+        g = ScenarioGrid(workloads=("alexnet",), clusters=("v100-nvlink-ib",),
+                         worker_counts=(4,),
+                         policies=("caffe-mpi", "bucketed-25mb"))
+        r = sweep(g, force_simulator=True)
+        assert r.n_analytical == 0 and r.n_timeline == 0 \
+            and r.n_simulated == 2
+        assert {row["method"] for row in r.rows} == {"simulated"}
+        # and the oracle agrees with the batched rows
+        fast = sweep(g)
+        for a, b in zip(fast.rows, r.rows):
+            assert a["iteration_time_s"] == pytest.approx(
+                b["iteration_time_s"], rel=1e-6)
 
 
 class TestCollectiveAlgorithms:

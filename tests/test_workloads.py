@@ -231,11 +231,17 @@ class TestMixedSweep:
         with pytest.raises(ValueError, match="badbatch.trace"):
             read_trace(p)
 
-    def test_simulator_fallback_uses_registry_tables(self):
+    def test_timeline_path_uses_registry_tables(self):
         s = Scenario("llm:gemma3-1b", "tpu-v5e-pod", 8, "bucketed-25mb")
         row = evaluate_scenario(s)
-        assert row["method"] == "simulated"
+        assert row["method"] == "timeline"
         assert row["iteration_time_s"] > 0
+        # the event-driven oracle builds from the same registry table
+        # and agrees
+        sim = evaluate_scenario(s, method="simulator")
+        assert sim["method"] == "simulated"
+        assert row["iteration_time_s"] == pytest.approx(
+            sim["iteration_time_s"], rel=1e-6)
 
 
 class TestJSON:
@@ -294,11 +300,21 @@ class TestThroughputBenchmark:
         path = tmp_path / "BENCH_sweep.json"
         report = run(smoke=True, json_path=str(path))
         assert path.exists()
-        for key in ("default_grid", "mixed_grid", "frontier_grid"):
+        for key in ("default_grid", "mixed_grid", "frontier_grid",
+                    "bucketed_priority_grid"):
             assert report[key]["batched"]["scenarios_per_sec"] > 0
             assert report[key]["batched"]["n_simulated"] == 0
         # both paths timed (and the speedup ratio recorded) on the
-        # default and mixed grids even in smoke mode
-        for key in ("default_grid", "mixed_grid"):
+        # default, mixed and bucketed/priority grids even in smoke mode
+        for key in ("default_grid", "mixed_grid",
+                    "bucketed_priority_grid"):
             assert report[key]["per_scenario"]["scenarios_per_sec"] > 0
             assert report[key]["speedup"] > 1.0
+        # the bucketed/priority grid is where the simulated-path
+        # trajectory finally records non-zero rows: every scenario is
+        # schedule-dependent, so the batched side is all-timeline and
+        # the per-scenario side is all-simulator
+        tl = report["bucketed_priority_grid"]
+        assert tl["batched"]["n_timeline"] == tl["n_scenarios"]
+        assert tl["per_scenario"]["n_simulated"] == tl["n_scenarios"]
+        assert tl["speedup"] > 10.0
