@@ -10,7 +10,8 @@ import argparse
 import sys
 import traceback
 
-SUITES = ("fig2", "fig3", "fig4", "table6", "kernels", "roofline", "sweep")
+SUITES = ("fig2", "fig3", "fig4", "table6", "kernels", "roofline", "sweep",
+          "calibration")
 
 
 def main(argv=None) -> int:
@@ -40,6 +41,8 @@ def main(argv=None) -> int:
                 from benchmarks.bench_roofline import run
             elif name == "sweep":
                 from benchmarks.bench_sweep_throughput import run
+            elif name == "calibration":
+                from benchmarks.bench_model_vs_measured import run
             run()
         except Exception:  # noqa: BLE001
             failures += 1

@@ -39,7 +39,8 @@ def shard_map_compat(f, mesh, in_specs, out_specs):
 
 def make_ddp_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh: Mesh,
                         sync_policy: str = "wfbp", dp_axis: str = "data",
-                        bucket_bytes: float = 25e6, remat: bool = False):
+                        bucket_bytes: float = S.DEFAULT_BUCKET_BYTES,
+                        remat: bool = False):
     """Returns ``step(params, opt_state, batch) -> (params, opt_state,
     metrics)`` as a shard_map'd jitted function.
 

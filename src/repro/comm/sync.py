@@ -30,6 +30,12 @@ import jax.numpy as jnp
 
 SYNC_POLICIES = ("none", "at_end", "wfbp", "bucketed")
 
+#: Default gradient-bucket fusion threshold in bytes (DDP's 25 MB) —
+#: the one spelling shared by the executable step, the measurement
+#: harness and the model-vs-measured benchmark, so the modeled
+#: ``bucketed`` policy can never drift from the lowered one.
+DEFAULT_BUCKET_BYTES = 25e6
+
 
 # ----------------------------------------------------------------------
 # WFBP: psum-in-backward via custom_vjp
@@ -96,7 +102,7 @@ def pmean_at_end(grads: Any, axis_names: Sequence[str]) -> Any:
 # bucketed: flatten -> fixed-size buckets -> one collective per bucket
 # ----------------------------------------------------------------------
 def bucketed_pmean(grads: Any, axis_names: Sequence[str],
-                   bucket_bytes: float = 25e6) -> Any:
+                   bucket_bytes: float = DEFAULT_BUCKET_BYTES) -> Any:
     """Fuse gradient leaves into flat f32 buckets of >= ``bucket_bytes``
     **bytes** each, mean-reduce one collective per bucket, and scatter
     back — DDP/Horovod-style fusion, the §VII fix for the 9.6%
@@ -131,7 +137,7 @@ def bucketed_pmean(grads: Any, axis_names: Sequence[str],
 
 
 def sync_gradients(grads: Any, policy: str, axis_names: Sequence[str],
-                   bucket_bytes: float = 25e6) -> Any:
+                   bucket_bytes: float = DEFAULT_BUCKET_BYTES) -> Any:
     """Post-backward gradient sync dispatch; ``policy`` is one of
     :data:`SYNC_POLICIES` and ``bucket_bytes`` is the fusion threshold
     in **bytes** (only used by ``bucketed``).  ``wfbp`` grads are

@@ -3,17 +3,22 @@ cost-analysis) into iteration-time / speedup predictions via the DAG.
 
 This is the bridge the paper demonstrates in §V-D (Fig. 4): feed the
 measured layer-wise times into the DAG, list-schedule it, and compare
-against measurement.
+against measurement.  :func:`predict_sync_policy` is the
+measurement-loop entry: it maps this repo's *executable* gradient-sync
+policies (:data:`repro.comm.sync.SYNC_POLICIES`) onto the DAG policies
+whose schedule models them, so
+``benchmarks/bench_model_vs_measured.py`` can score the model against
+the repo's own instrumented runs.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from repro.core import analytical
 from repro.core.costmodel import comm_scale_fn
 from repro.core.dag import NET_CHANNEL, IterationCosts
 from repro.core.hardware import ClusterSpec
-from repro.core.policies import Policy
+from repro.core.policies import BUCKETED_25MB, CAFFE_MPI, Policy
 from repro.core.simulator import simulate_policy, simulate_steady
 from repro.core.workloads import resolve_workload
 
@@ -97,6 +102,55 @@ def predict_workload(
 
 #: Pre-registry name, kept for callers of the CNN-only era.
 predict_cnn = predict_workload
+
+
+#: Executable gradient-sync policy (``repro.comm.sync``) -> the DAG
+#: policy whose schedule models it.  ``at_end`` is one fused collective
+#: after backward: a single infinite bucket releases exactly when the
+#: whole backward pass has (its earliest layer's gradient ready) —
+#: fused comm-at-end, the degenerate bucket case the timeline tests
+#: pin.  ``wfbp`` is layer-wise comm inside backward (Caffe-MPI's
+#: schedule); ``bucketed`` is the DDP-default 25 MB fusion.
+SYNC_POLICY_MODELS: dict[str, Policy] = {
+    "at_end": Policy("at-end-fused", overlap_io=True, h2d_early=True,
+                     overlap_comm=True, bucket_bytes=float("inf")),
+    "wfbp": CAFFE_MPI,
+    "bucketed": BUCKETED_25MB,
+}
+
+
+def predict_sync_policy(
+    costs: IterationCosts,
+    n_workers: int,
+    sync_policy: str,
+    comm_scale=None,
+    bucket_bytes: float | None = None,
+    warm_iterations: int = 8,
+) -> float:
+    """Model-predicted steady iteration time (seconds) for an
+    *executable* sync policy — ``at_end`` / ``wfbp`` / ``bucketed`` —
+    over measured (or analytic) ``costs``.
+
+    ``comm_scale(total_bytes, naive_time) -> seconds`` prices fused
+    buckets (measured alpha-beta fit via
+    :func:`repro.measure.calibrate.comm_scale_from_fit`, or a
+    cluster-model closure via
+    :func:`repro.core.costmodel.comm_scale_fn`); without it, a fused
+    bucket costs the sum of its layers' ``t_c``.  ``bucket_bytes``
+    overrides the modeled fusion threshold for ``bucketed`` (to match
+    the threshold the step was actually lowered with).
+    """
+    try:
+        policy = SYNC_POLICY_MODELS[sync_policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown sync policy {sync_policy!r}; one of "
+            f"{sorted(SYNC_POLICY_MODELS)}") from None
+    if bucket_bytes is not None and sync_policy == "bucketed":
+        policy = replace(policy, bucket_bytes=bucket_bytes)
+    return simulate_steady(costs, n_workers, policy,
+                           n_iterations=warm_iterations,
+                           comm_scale=comm_scale)
 
 
 def scaling_curve(workload: str, cluster: ClusterSpec, policy: Policy,

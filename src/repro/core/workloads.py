@@ -25,6 +25,16 @@ Naming scheme (``scheme:spec``):
   :mod:`repro.configs` (``llm:gemma3-1b``, ``llm:qwen1.5-32b``, …),
   with bf16 gradient payloads and pattern-aware blocks, at the
   ``train_4k`` sequence length.
+* ``jax:<name-or-path>`` — **measured** per-layer costs harvested from
+  this repo's own executed jax train steps by the measurement harness
+  (``python -m repro.measure``, :mod:`repro.measure`).  Resolves trace
+  files from the measurement directory (``REPRO_MEASURE_DIR`` env var,
+  default ``results/measure/``) by stem, or any explicit path.  Same
+  measured-table semantics as ``trace:`` — compute times are the
+  instrumented ones, comm is re-derived from per-layer gradient bytes
+  — which is what closes the model↔measurement loop: a lowered,
+  executed model sweeps across clusters/workers/collectives like any
+  analytic table.
 
 Tables are memoized at module scope (:func:`resolve_workload`), so
 repeated ``sweep()`` / ``evaluate_scenario()`` calls never rebuild a
@@ -245,7 +255,9 @@ class TraceProvider:
         (:meth:`repro.traces.format.Trace.mean_compute_records` owns
         that convention).  A trace without a ``# batch:`` header gets a
         locked nominal batch of 1: its measured times stay usable but
-        cannot be rescaled to other batch sizes."""
+        cannot be rescaled to other batch sizes.  A trace with a
+        ``# bytes-per-sample:`` header carries its own input-byte
+        convention; otherwise the provider's default applies."""
         from repro.traces.format import US
 
         recs, t_io = trace.mean_compute_records()
@@ -254,12 +266,88 @@ class TraceProvider:
             name=name,
             grad_bytes=grad_bytes,
             batch_default=trace.batch_per_gpu or 1,
-            bytes_per_sample=self.bytes_per_sample,
+            bytes_per_sample=trace.bytes_per_sample or self.bytes_per_sample,
             param_bytes=float(grad_bytes.sum()),
             t_f=np.array([r.forward_us * US for r in recs], dtype=np.float64),
             t_b=np.array([r.backward_us * US for r in recs], dtype=np.float64),
             t_io_measured=t_io,
             batch_locked=not trace.batch_per_gpu)
+
+
+# ----------------------------------------------------------------------
+# jax: — measured traces harvested from this repo's own executed train
+# steps by the measurement harness (repro.measure).
+# ----------------------------------------------------------------------
+class JaxProvider(TraceProvider):
+    """Measured ``jax:`` workloads — the model↔measurement bridge.
+
+    The measurement harness (``python -m repro.measure --arch <id>``)
+    runs real :mod:`repro.comm.ddp` train steps on forced host devices,
+    segments per-layer forward/backward seconds out of the layer scan,
+    and writes a paper-format trace into the measurement directory.
+    This provider resolves ``jax:<stem>`` against that directory (or
+    ``jax:<path>`` for any explicit trace file), producing a *measured*
+    :class:`WorkloadTable` exactly like ``trace:`` does — so a lowered,
+    executed model sweeps through the batched engine, the predictor and
+    the simulator with no special casing anywhere downstream.
+    """
+
+    scheme = "jax"
+
+    #: Fallback input bytes/sample when the trace lacks a
+    #: ``# bytes-per-sample:`` header: int32 token ids + labels at the
+    #: ``llm:`` provider's sequence length.  The harness always writes
+    #: the header, so this only covers hand-made files.
+    bytes_per_sample = 2 * LLM_BYTES_PER_TOKEN * LLM_SEQ_LEN
+
+    @staticmethod
+    def measure_dir() -> str:
+        """Where measured traces live: ``$REPRO_MEASURE_DIR`` or the
+        repo-level ``results/measure/``."""
+        env = os.environ.get("REPRO_MEASURE_DIR")
+        if env:
+            return env
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        return os.path.join(root, "results", "measure")
+
+    def names(self) -> tuple[str, ...]:
+        d = self.measure_dir()
+        if not os.path.isdir(d):
+            return ()
+        return tuple(sorted(
+            f[:-len(".trace")] for f in os.listdir(d)
+            if f.endswith(".trace")))
+
+    def _resolve_path(self, spec: str) -> str | None:
+        if os.path.exists(spec):
+            return spec
+        cached = os.path.join(self.measure_dir(), spec + ".trace")
+        if os.path.exists(cached):
+            return cached
+        return None
+
+    def build(self, spec: str) -> WorkloadTable:
+        path = self._resolve_path(spec)
+        if path is None:
+            raise ValueError(
+                f"no measured trace for {spec!r}: not a file and nothing "
+                f"at {os.path.join(self.measure_dir(), spec + '.trace')!r} "
+                f"(measured: {list(self.names())}); run "
+                f"`python -m repro.measure --arch <id>` to measure it")
+        from repro.traces.format import read_trace
+
+        return self.table_from_trace(read_trace(path), f"jax:{spec}")
+
+    def cache_key(self, spec: str) -> str:
+        """Memoize by resolved absolute path + mtime (same contract as
+        ``trace:`` file specs): re-measuring an arch or pointing
+        ``REPRO_MEASURE_DIR`` elsewhere never serves a stale table."""
+        path = self._resolve_path(spec)
+        if path is None:
+            return spec
+        path = os.path.abspath(path)
+        return f"{path}@{os.stat(path).st_mtime_ns}"
 
 
 # ----------------------------------------------------------------------
@@ -310,6 +398,7 @@ def register_provider(provider: WorkloadProvider) -> None:
 register_provider(CNNProvider())
 register_provider(TraceProvider())
 register_provider(LLMProvider())
+register_provider(JaxProvider())
 
 
 def canonical_name(workload: str) -> str:
@@ -367,9 +456,12 @@ def known_workloads() -> list[str]:
 
 def describe_workloads() -> str:
     """One-line summary of the registry for error messages / --help."""
+    suffixes = {
+        "trace": " or a trace-file path",
+        "jax": " or a measured-trace path (python -m repro.measure)",
+    }
     parts = []
     for scheme in sorted(WORKLOAD_PROVIDERS):
         names = ", ".join(WORKLOAD_PROVIDERS[scheme].names())
-        suffix = " or a trace-file path" if scheme == "trace" else ""
-        parts.append(f"{scheme}: [{names}]{suffix}")
+        parts.append(f"{scheme}: [{names}]{suffixes.get(scheme, '')}")
     return "; ".join(parts)

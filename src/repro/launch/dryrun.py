@@ -2,12 +2,13 @@
 combination on placeholder devices and record memory / cost /
 collective analyses.
 
-MUST set the host-device flag before any other import (jax locks the
-device count on first init).
+MUST set the host-device flag before any jax import (jax locks the
+device count on first init); the shared helper appends to any
+user-provided ``XLA_FLAGS`` instead of clobbering them.
 """
-import os
+from repro.launch.hostdev import force_host_device_count
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+force_host_device_count(512)
 
 # ruff: noqa: E402
 import argparse

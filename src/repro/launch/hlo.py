@@ -22,6 +22,11 @@ _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16,
+    # fp8 families (HLO spells them f8e...): all one byte.  Without
+    # these, fp8 collectives/buffers silently drop out of
+    # ``collective_bytes`` — the parser skips unknown dtypes.
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
 }
 
 COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
@@ -91,15 +96,24 @@ def while_bodies(hlo: str) -> set[str]:
     return set(_BODY_RE.findall(hlo))
 
 
-_WHILE_RE = re.compile(r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*"
-                       r"body=%?([\w\.\-]+)")
+# The while operand may carry its full tuple type — optimized HLO
+# prints ``while((s32[], f32[...]{...}) %tuple.69), condition=...`` —
+# so the operand match must be non-greedy up to ", condition=", not
+# "anything but a paren".  The trailing group captures the rest of the
+# line (metadata / backend_config) for the trip-count annotation.
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*"
+                       r"body=%?([\w\.\-]+)(.*)")
 _CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_KNOWN_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
 
 
 def _trip_count(cond_body: str, default: int) -> int:
     """Scan-generated while conditions compare the induction variable
-    against a constant trip count; take the largest s32 constant."""
+    against a constant trip count; take the largest **positive** s32
+    constant (countdown loops compare against 0, which is never a trip
+    count)."""
     consts = [int(c) for c in _CONST_RE.findall(cond_body)]
+    consts = [c for c in consts if c > 0]
     return max(consts) if consts else default
 
 
@@ -115,9 +129,13 @@ def computation_multipliers(hlo: str, default_trip: int = 1) -> dict[str, int]:
         changed = False
         for name, body in comps.items():
             m = mult.get(name, 1)
-            # whiles inside this computation
-            for cond, wbody in _WHILE_RE.findall(body):
-                trip = _trip_count(comps.get(cond, ""), default_trip)
+            # whiles inside this computation; XLA's own
+            # ``known_trip_count`` annotation is authoritative when
+            # present, the condition's comparison constant otherwise
+            for cond, wbody, rest in _WHILE_RE.findall(body):
+                known = _KNOWN_TRIP_RE.search(rest)
+                trip = int(known.group(1)) if known \
+                    else _trip_count(comps.get(cond, ""), default_trip)
                 new = m * max(trip, 1)
                 if wbody in mult and new > mult[wbody]:
                     mult[wbody] = new

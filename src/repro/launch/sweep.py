@@ -13,7 +13,9 @@ emit a tidy results table.
 
 Workloads resolve through the pluggable registry
 (``repro.core.workloads``): bare paper CNN names or ``cnn:<name>``,
-``trace:<bundled-name-or-file-path>``, ``llm:<arch>`` — see
+``trace:<bundled-name-or-file-path>``, ``llm:<arch>``, and measured
+``jax:<name-or-path>`` workloads harvested from the repo's own
+executed train steps (``python -m repro.measure --arch <id>``) — see
 ``--list-workloads``.  Axis values are comma-separated;
 ``--interconnects`` accepts preset names from
 ``repro.core.hardware.INTERCONNECT_PRESETS``, scaled what-ifs
@@ -56,8 +58,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--workloads", type=_csv_list, default=None,
                    help="comma-separated workload names: bare CNNs "
                         "(alexnet,googlenet,resnet50), cnn:<name>, "
-                        "trace:<bundled-or-path>, llm:<arch> "
-                        "(see --list-workloads)")
+                        "trace:<bundled-or-path>, llm:<arch>, "
+                        "jax:<measured-name-or-path> "
+                        "(see --list-workloads; measure with "
+                        "`python -m repro.measure`)")
     p.add_argument("--list-workloads", action="store_true",
                    help="print every registered workload name and exit")
     p.add_argument("--clusters", type=_csv_list, default=None,

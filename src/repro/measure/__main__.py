@@ -1,0 +1,6 @@
+"""``python -m repro.measure`` — delegate to :mod:`repro.measure.run`."""
+import sys
+
+from repro.measure.run import main
+
+sys.exit(main())

@@ -1,0 +1,225 @@
+"""Measurement runner / CLI: ``python -m repro.measure --arch <id>``.
+
+jax locks the host device count at first backend init, so the
+measurement always executes in a **child process** whose environment
+carries ``--xla_force_host_platform_device_count`` (via the shared
+:mod:`repro.launch.hostdev` helper, which appends to — never clobbers
+— user ``XLA_FLAGS``).  Invoked without the child marker, :func:`main`
+re-spawns itself with the right environment; with it, it measures
+in-process and writes two artifacts into the measurement directory:
+
+* ``<arch>.trace`` — the paper-format per-layer trace the ``jax:``
+  workload provider serves (sweepable like any other workload);
+* ``<arch>.json`` — the full harvest: per-policy measured step times,
+  HLO collective bytes + cross-checks, the alpha-beta collective fit,
+  segmentation and geometry metadata.
+
+The measured model is a host-CPU-feasible ``reduced()`` variant of the
+named architecture (geometry on the CLI); the trace records the real
+geometry in its headers.  ``--smoke`` picks the tiny CI-sized preset.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.launch.hostdev import child_env
+
+_CHILD_MARKER = "REPRO_MEASURE_CHILD"
+
+#: Decoder-only archs the explicit-DP step can train as-is (the
+#: encoder-decoder and vision archs need extra batch inputs the ddp
+#: runtime doesn't carry).
+MEASURABLE_ARCHS = (
+    "gemma3-1b", "grok-1-314b", "internlm2-20b", "qwen1.5-32b",
+    "qwen1.5-4b", "qwen2-moe-a2.7b", "recurrentgemma-2b", "rwkv6-1.6b",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """Host-feasible model/measurement geometry."""
+
+    num_layers: int = 8
+    d_model: int = 256
+    num_heads: int = 4
+    d_ff: int = 512
+    vocab_size: int = 1024
+    seq_len: int = 64
+    batch_per_gpu: int = 4
+    n_devices: int = 2
+    repeats: int = 5
+    step_iters: int = 8
+
+
+SMOKE_GEOMETRY = Geometry(num_layers=4, d_model=128, d_ff=256,
+                          vocab_size=512, seq_len=32, batch_per_gpu=2,
+                          repeats=3, step_iters=4)
+
+
+def default_out_dir() -> str:
+    from repro.core.workloads import JaxProvider
+
+    return JaxProvider.measure_dir()
+
+
+def run_measurement(arch: str, out_dir: str | Path,
+                    geometry: Geometry,
+                    policies: tuple[str, ...] | None = None) -> dict:
+    """Measure ``arch`` in-process (device count must already be
+    forced), write ``<arch>.trace`` + ``<arch>.json`` into ``out_dir``,
+    and return the JSON document."""
+    from repro.configs import get_config
+    from repro.measure import calibrate
+    from repro.measure.harness import MEASURED_SYNC_POLICIES, measure_model
+    from repro.traces.format import write_trace
+
+    g = geometry
+    cfg = get_config(arch).reduced(
+        num_layers=g.num_layers, d_model=g.d_model, num_heads=g.num_heads,
+        d_ff=g.d_ff, vocab_size=g.vocab_size)
+    run = measure_model(
+        cfg, arch=arch, n_devices=g.n_devices,
+        batch_per_gpu=g.batch_per_gpu, seq_len=g.seq_len,
+        policies=policies or MEASURED_SYNC_POLICIES,
+        repeats=g.repeats, step_iters=g.step_iters)
+
+    out_dir = Path(out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    trace_path = out_dir / f"{arch}.trace"
+    write_trace(run.trace, trace_path)
+
+    latency, bandwidth = calibrate.fit_alpha_beta(run.allreduce_samples)
+    checks = calibrate.crosscheck_collective_bytes(cfg, run.collective_stats)
+    doc = dict(run.summary())
+    doc.update({
+        "workload": f"jax:{arch}",
+        "trace_path": str(trace_path),
+        "allreduce_fit": {"latency_s": latency,
+                          "bandwidth_bytes_per_s": bandwidth},
+        "bytes_crosscheck": {
+            pol: {"hlo_bytes": c.hlo_bytes,
+                  "expected_bytes": c.expected_bytes,
+                  "rel_err": c.rel_err}
+            for pol, c in checks.items()},
+    })
+    (out_dir / f"{arch}.json").write_text(json.dumps(doc, indent=2))
+    return doc
+
+
+#: Geometry field -> CLI flag; everything not listed here is the field
+#: name with underscores dashed (the one derivation shared by the
+#: parser and the subprocess command builder).
+_FLAG_OVERRIDES = {"n_devices": "--devices"}
+
+
+def _geometry_flag(field_name: str) -> str:
+    return _FLAG_OVERRIDES.get(field_name,
+                               "--" + field_name.replace("_", "-"))
+
+
+def _marked_child_env(n_devices: int) -> dict[str, str]:
+    """Environment for the measurement child: forced host devices, the
+    re-spawn marker, and this repo's ``src`` on PYTHONPATH so the child
+    resolves ``repro`` regardless of cwd."""
+    env = child_env(n_devices)
+    env[_CHILD_MARKER] = "1"
+    src = str(Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _spawn_child(child_argv: list[str], n_devices: int, *,
+                 capture: bool, timeout: float | None = None):
+    """The one spawn contract for measurement children — CLI re-spawn
+    and programmatic runs must never diverge."""
+    return subprocess.run(
+        [sys.executable, "-m", "repro.measure.run", *child_argv],
+        env=_marked_child_env(n_devices),
+        capture_output=capture, text=capture, timeout=timeout)
+
+
+def measure_in_subprocess(arch: str, *, out_dir: str | Path,
+                          geometry: Geometry = SMOKE_GEOMETRY,
+                          policies: tuple[str, ...] | None = None,
+                          timeout: float = 1800) -> dict:
+    """Spawn the measurement child for ``arch`` and return its JSON
+    document — the entry point for benchmarks/tests whose own process
+    must keep the single-device view."""
+    argv = ["--arch", arch, "--out-dir", str(out_dir)]
+    for f in dataclasses.fields(Geometry):
+        argv += [_geometry_flag(f.name), str(getattr(geometry, f.name))]
+    if policies:
+        argv += ["--policies", ",".join(policies)]
+    r = _spawn_child(argv, geometry.n_devices, capture=True,
+                     timeout=timeout)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"measurement subprocess for {arch!r} failed "
+            f"(rc={r.returncode}):\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}")
+    return json.loads(
+        (Path(out_dir) / f"{arch}.json").read_text())
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro.measure",
+        description="Measure a real jax train step into a sweepable "
+                    "jax: workload trace.")
+    p.add_argument("--arch", required=True, choices=MEASURABLE_ARCHS)
+    p.add_argument("--out-dir", default=None,
+                   help="measurement directory (default: "
+                        "$REPRO_MEASURE_DIR or results/measure/)")
+    # geometry flags default to None so "explicitly passed" is
+    # distinguishable from "follow the preset" (--smoke or full)
+    full, smoke = Geometry(), SMOKE_GEOMETRY
+    for f in dataclasses.fields(Geometry):
+        p.add_argument(_geometry_flag(f.name), type=int, default=None,
+                       dest=f.name,
+                       help=f"default {getattr(full, f.name)} "
+                            f"(--smoke: {getattr(smoke, f.name)})")
+    p.add_argument("--policies", default=None,
+                   help="comma-separated sync policies "
+                        "(default: at_end,wfbp,bucketed)")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CI-sized geometry preset (individual "
+                        "geometry flags still win)")
+    return p
+
+
+def _geometry_from_args(args: argparse.Namespace) -> Geometry:
+    base = SMOKE_GEOMETRY if args.smoke else Geometry()
+    return dataclasses.replace(base, **{
+        f.name: getattr(args, f.name) for f in dataclasses.fields(Geometry)
+        if getattr(args, f.name) is not None})
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    geometry = _geometry_from_args(args)
+    out_dir = args.out_dir or default_out_dir()
+    policies = tuple(t.strip() for t in args.policies.split(",")
+                     if t.strip()) if args.policies else None
+
+    if os.environ.get(_CHILD_MARKER) != "1":
+        # re-spawn with the forced-host-device environment
+        child_argv = sys.argv[1:] if argv is None else list(argv)
+        return _spawn_child(child_argv, geometry.n_devices,
+                            capture=False).returncode
+
+    doc = run_measurement(args.arch, out_dir, geometry, policies)
+    brief = {k: doc[k] for k in
+             ("workload", "trace_path", "n_devices", "policy_times_s",
+              "t_update_s", "allreduce_fit", "bytes_crosscheck",
+              "elapsed_s")}
+    print(json.dumps(brief, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

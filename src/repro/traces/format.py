@@ -50,6 +50,11 @@ class Trace:
     cluster: str
     iterations: tuple[tuple[LayerRecord, ...], ...]
     batch_per_gpu: int = 0
+    #: Input bytes read+copied per sample (``# bytes-per-sample:``
+    #: header; 0 = unrecorded — the workload provider then falls back
+    #: to its own default).  The measurement harness records the real
+    #: value (token-id bytes for LM steps) so t_io / t_h2d stay honest.
+    bytes_per_sample: float = 0.0
 
     def __post_init__(self):
         if not self.iterations:
@@ -134,6 +139,8 @@ def write_trace(trace: Trace, path: str | Path) -> None:
         f.write(f"# network: {trace.network}\n# cluster: {trace.cluster}\n")
         if trace.batch_per_gpu:
             f.write(f"# batch: {trace.batch_per_gpu}\n")
+        if trace.bytes_per_sample:
+            f.write(f"# bytes-per-sample: {trace.bytes_per_sample:.17g}\n")
         f.write("# Id\tName\tForward\tBackward\tComm.\tSize\n")
         for k, it in enumerate(trace.iterations):
             f.write(f"# iteration {k}\n")
@@ -148,6 +155,7 @@ def read_trace(path: str | Path, network: str = "", cluster: str = "") -> Trace:
     cur: list[LayerRecord] = []
     meta = {"network": network, "cluster": cluster}
     batch = 0
+    bytes_per_sample = 0.0
     with open(path) as f:
         for line in f:
             line = line.strip()
@@ -167,6 +175,15 @@ def read_trace(path: str | Path, network: str = "", cluster: str = "") -> Trace:
                         raise ValueError(
                             f"malformed trace file {path}: '# batch:' "
                             f"value {value!r} is not an integer") from None
+                elif body.startswith("bytes-per-sample:"):
+                    value = body.split(":", 1)[1].strip()
+                    try:
+                        bytes_per_sample = float(value)
+                    except ValueError:
+                        raise ValueError(
+                            f"malformed trace file {path}: "
+                            f"'# bytes-per-sample:' value {value!r} is not "
+                            f"a number") from None
                 elif body.startswith("iteration") and cur:
                     iterations.append(cur)
                     cur = []
@@ -186,15 +203,17 @@ def read_trace(path: str | Path, network: str = "", cluster: str = "") -> Trace:
     try:
         return Trace(meta["network"], meta["cluster"],
                      tuple(tuple(it) for it in iterations),
-                     batch_per_gpu=batch)
+                     batch_per_gpu=batch, bytes_per_sample=bytes_per_sample)
     except ValueError as e:
         raise ValueError(f"malformed trace file {path}: {e}") from None
 
 
 def make_trace(network: str, cluster: str, rows: Iterable[Sequence],
-               n_copies: int = 1, batch_per_gpu: int = 0) -> Trace:
+               n_copies: int = 1, batch_per_gpu: int = 0,
+               bytes_per_sample: float = 0.0) -> Trace:
     """Build a Trace from ``(id, name, fwd_us, bwd_us, comm_us, size)`` rows."""
     recs = tuple(LayerRecord(int(r[0]), str(r[1]), float(r[2]), float(r[3]),
                              float(r[4]), float(r[5])) for r in rows)
     return Trace(network, cluster, tuple(recs for _ in range(n_copies)),
-                 batch_per_gpu=batch_per_gpu)
+                 batch_per_gpu=batch_per_gpu,
+                 bytes_per_sample=bytes_per_sample)

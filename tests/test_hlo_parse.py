@@ -44,6 +44,76 @@ class TestShapeBytes:
     def test_scalar(self):
         assert hlo._shape_bytes("s32[]") == 4
 
+    def test_fp8_one_byte_each(self):
+        # fp8 buffers must not silently drop out of collective_bytes
+        for dt in ("f8e4m3fn", "f8e5m2", "f8e4m3fnuz", "f8e5m2fnuz",
+                   "f8e4m3b11fnuz", "f8e4m3", "f8e3m4"):
+            assert hlo._shape_bytes(f"{dt}[16,32]{{1,0}}") == 16 * 32, dt
+
+
+FP8_MODULE = """\
+HloModule fp8
+
+ENTRY %main (x: f8e4m3fn[64,128]) -> f8e4m3fn[64,128] {
+  %x = f8e4m3fn[64,128]{1,0} parameter(0)
+  %ag = f8e5m2[32,256]{1,0} all-gather(%y), dimensions={0}
+  ROOT %ar = f8e4m3fn[64,128]{1,0} all-reduce(%x), to_apply=%sum
+}
+"""
+
+
+# Optimized HLO prints the while operand with its full tuple type
+# (parens inside the operand!) and annotates the authoritative trip
+# count in backend_config — both must parse, and the countdown
+# condition's constant(0) must never be taken as a trip count.
+TYPED_WHILE_MODULE = """\
+HloModule typed
+
+%down_cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %z = s32[] constant(0)
+  ROOT %gt = pred[] compare(%i, %z), direction=GT
+}
+
+%down_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %ar = f32[8]{0} all-reduce(%g), to_apply=%sum
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+
+ENTRY %main (x: f32[8]) -> f32[8] {
+  %x = f32[8]{0} parameter(0)
+  %w = (s32[], f32[8]) while((s32[], f32[8]) %tuple.1), condition=%down_cond, body=%down_body, metadata={op_name="scan"}, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %r = f32[8]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestFp8Collectives:
+    def test_fp8_collective_bytes_counted(self):
+        stats = hlo.collective_stats(FP8_MODULE)
+        assert stats.bytes_by_op["all-reduce"] == 64 * 128
+        assert stats.bytes_by_op["all-gather"] == 32 * 256
+        assert stats.total_count == 2
+
+
+class TestTypedOperandWhile:
+    def test_known_trip_count_scales_typed_operand_while(self):
+        mults = hlo.computation_multipliers(TYPED_WHILE_MODULE)
+        assert mults["down_body"] == 5
+        stats = hlo.collective_stats(TYPED_WHILE_MODULE)
+        assert stats.count_by_op["all-reduce"] == 5
+        assert stats.bytes_by_op["all-reduce"] == 5 * 8 * 4
+
+    def test_countdown_constant_falls_back_to_default(self):
+        # strip the backend_config: the cond's constant(0) must not be
+        # taken as the trip count; the caller default applies
+        module = TYPED_WHILE_MODULE.replace(
+            ', backend_config={"known_trip_count":{"n":"5"}}', "")
+        stats = hlo.collective_stats(module, loop_trip_count=7)
+        assert stats.count_by_op["all-reduce"] == 7
+
 
 class TestCollectiveStats:
     def test_loop_scaling_from_parsed_trip_count(self):

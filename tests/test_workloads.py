@@ -31,7 +31,10 @@ class TestRegistry:
     def test_known_workloads_spans_all_schemes(self):
         names = W.known_workloads()
         schemes = {n.split(":", 1)[0] for n in names}
-        assert schemes == {"cnn", "trace", "llm"}
+        # jax: names appear only once something has been measured into
+        # the measurement directory (enumerable, not guaranteed)
+        assert {"cnn", "trace", "llm"} <= schemes <= {"cnn", "trace",
+                                                      "llm", "jax"}
         assert len([n for n in names if n.startswith("llm:")]) == len(ARCH_IDS)
 
     @pytest.mark.parametrize("bad", [
