@@ -16,9 +16,16 @@ acceptance gate is >= 25x on the default grid; the ISSUE-4 gate is
 builds and list-schedules a DAG per scenario, so ``n_simulated``
 finally records a non-zero simulated-path trajectory).  The frontier
 grid only times the batched side — its slow side would list-schedule
-~26k DAGs, the exact gap the timeline path closes.  ``--smoke`` does
-one timed repeat per grid and shrinks the bucketed/priority grid —
-the CI regression gate (pair with ``--assert-timeline-floor``).
+~26k DAGs, the exact gap the timeline path closes.
+
+Each grid also records the **jax backend** (ISSUE 6): end-to-end
+``sweep(backend="jax")`` throughput, kernel-only throughput for both
+backends (warmed, jit compilation excluded), their speedup ratio, and
+the max relative numeric disagreement — ``--assert-jax-floor`` gates
+CI on kernel speedup >= X on the frontier grid and agreement <= 1e-6
+everywhere.  ``--smoke`` does one timed repeat per grid and shrinks
+the bucketed/priority grid — the CI regression gate (pair with
+``--assert-timeline-floor`` / ``--assert-jax-floor``).
 """
 from __future__ import annotations
 
@@ -27,7 +34,11 @@ import json
 import sys
 import time
 
+import numpy as np
+
 from benchmarks.common import row
+from repro.core.batched import grid_evaluator
+from repro.core.batched_jax import jax_grid_evaluator
 from repro.core.hardware import COLLECTIVE_ALGORITHMS
 from repro.core.scenarios import (ScenarioGrid, default_grid, frontier_grid,
                                   mixed_grid)
@@ -53,18 +64,20 @@ def bucketed_priority_grid(smoke: bool = False) -> ScenarioGrid:
                                        "ib-100g-fused"), **kw)
 
 
-def _time_sweep(grid, repeats: int, batched: bool) -> dict:
+def _time_sweep(grid, repeats: int, batched: bool,
+                backend: str = "numpy") -> dict:
     n = len(grid)
     # Warm the memoized workload tables + prepared grid structure via
     # the batched path regardless of which side is being timed: the
     # per-scenario paths share the same table memo, and replaying the
     # full simulator sweep just to warm it would double the dominant
-    # cost of the bucketed/priority slow side.
-    sweep(grid, batched=True)
+    # cost of the bucketed/priority slow side.  (On the jax backend
+    # the warm-up run also pays the one-off jit compilation.)
+    sweep(grid, batched=True, backend=backend)
     elapsed = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        result = sweep(grid, batched=batched)
+        result = sweep(grid, batched=batched, backend=backend)
         elapsed.append(time.perf_counter() - t0)
     elapsed.sort()
     med = elapsed[len(elapsed) // 2]
@@ -76,6 +89,44 @@ def _time_sweep(grid, repeats: int, batched: bool) -> dict:
         "n_timeline": result.n_timeline,
         "n_simulated": result.n_simulated,
     }
+
+
+def _time_kernels(grid, repeats: int) -> dict:
+    """Kernel-only timings for both backends (tier-1 table + tier-2
+    policy select, no tidy-row materialization) plus their numeric
+    agreement — the backend-parity surface the ``--assert-jax-floor``
+    CI gate checks.  The jax side is warmed first, so jit compilation
+    is excluded (steady-state throughput, the number that matters for
+    repeated what-if evaluation)."""
+    n = len(grid)
+    ev = grid_evaluator(grid)
+    jev = jax_grid_evaluator(grid)
+
+    def np_kernel():
+        return ev.run().columns_slice(0, n)
+
+    def jax_kernel():
+        return jev.columns()
+
+    out: dict = {"n_scenarios": n}
+    for key, fn in (("numpy_kernel", np_kernel), ("jax_kernel", jax_kernel)):
+        cols = fn()                               # warm (jit compile on jax)
+        elapsed = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            cols = fn()
+            elapsed.append(time.perf_counter() - t0)
+        elapsed.sort()
+        med = elapsed[len(elapsed) // 2]
+        out[key] = {"elapsed_s": med, "scenarios_per_sec": n / med}
+        out[key]["iteration_time_s"] = cols["iteration_time_s"]
+    a = out["numpy_kernel"].pop("iteration_time_s")
+    b = out["jax_kernel"].pop("iteration_time_s")
+    out["agreement_max_rel"] = float(np.abs(b - a).max()
+                                     / np.abs(a).max()) if n else 0.0
+    out["jax_vs_numpy_kernel_speedup"] = (
+        out["numpy_kernel"]["elapsed_s"] / out["jax_kernel"]["elapsed_s"])
+    return out
 
 
 def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
@@ -90,6 +141,23 @@ def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
         row(f"sweep_{name}_batched", r["batched"]["elapsed_s"] * 1e6,
             f"{r['batched']['scenarios_per_sec']:.0f} scenarios/s "
             f"({len(grid)} scenarios)")
+        r["jax"] = _time_sweep(grid, repeats, batched=True, backend="jax")
+        row(f"sweep_{name}_jax", r["jax"]["elapsed_s"] * 1e6,
+            f"{r['jax']['scenarios_per_sec']:.0f} scenarios/s end to end")
+        kern = _time_kernels(grid, repeats)
+        r["numpy_kernel"] = kern["numpy_kernel"]
+        r["jax_kernel"] = kern["jax_kernel"]
+        r["jax_vs_numpy_kernel_speedup"] = kern["jax_vs_numpy_kernel_speedup"]
+        r["agreement_max_rel"] = kern["agreement_max_rel"]
+        row(f"sweep_{name}_numpy_kernel",
+            kern["numpy_kernel"]["elapsed_s"] * 1e6,
+            f"{kern['numpy_kernel']['scenarios_per_sec']:.0f} scenarios/s "
+            f"kernel only")
+        row(f"sweep_{name}_jax_kernel",
+            kern["jax_kernel"]["elapsed_s"] * 1e6,
+            f"{kern['jax_kernel']['scenarios_per_sec']:.0f} scenarios/s "
+            f"kernel only ({kern['jax_vs_numpy_kernel_speedup']:.1f}x numpy, "
+            f"max rel diff {kern['agreement_max_rel']:.1e})")
         # The per-scenario reference pass on the frontier grid is
         # skipped outright: half its 51 840 scenarios are
         # schedule-dependent, so the slow side would list-schedule
@@ -127,6 +195,15 @@ def main(argv=None) -> int:
                     help="exit non-zero unless the bucketed/priority "
                          "grid's batched-vs-simulator speedup is >= X "
                          "(the CI regression gate for the timeline path)")
+    ap.add_argument("--assert-jax-floor", type=float, default=None,
+                    metavar="X",
+                    help="exit non-zero unless the frontier grid's "
+                         "jax-vs-numpy kernel speedup is >= X AND the "
+                         "backends agree to <= 1e-6 max relative "
+                         "difference on every grid (the jax-backend CI "
+                         "gate; 1 on the single-core CI runner — XLA "
+                         "only pulls ahead of the BLAS-backed NumPy "
+                         "kernel with cores/devices to fan out over)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     report = run(smoke=args.smoke, json_path=args.json)
@@ -139,6 +216,22 @@ def main(argv=None) -> int:
             return 1
         print(f"# timeline speedup gate: {got:.1f}x >= "
               f"{args.assert_timeline_floor:g}x")
+    if args.assert_jax_floor is not None:
+        worst = max((report[g]["agreement_max_rel"] for g in report
+                     if isinstance(report[g], dict)
+                     and "agreement_max_rel" in report[g]), default=0.0)
+        if worst > 1e-6:
+            print(f"error: jax/numpy kernel disagreement {worst:.2e} "
+                  f"exceeds the 1e-6 gate", file=sys.stderr)
+            return 1
+        got = report["frontier_grid"]["jax_vs_numpy_kernel_speedup"]
+        if got < args.assert_jax_floor:
+            print(f"error: frontier-grid jax kernel speedup {got:.2f}x "
+                  f"below the {args.assert_jax_floor:g}x floor",
+                  file=sys.stderr)
+            return 1
+        print(f"# jax backend gate: {got:.2f}x >= "
+              f"{args.assert_jax_floor:g}x, max rel diff {worst:.1e}")
     return 0
 
 

@@ -76,13 +76,20 @@ def non_overlapped_comm_batch(t_b: np.ndarray, t_c: np.ndarray) -> np.ndarray:
     the batched evaluator share one padded matrix across workloads of
     different depths.
 
-    ``t_b`` / ``t_c`` are ``(S, L)`` in forward layer order (index 0 =
-    layer 1), matching :class:`~repro.core.dag.IterationCosts`; returns
-    the ``(S,)`` residual, elementwise identical (<= 1e-9 relative,
-    property-tested) to the scalar loop.
+    ``t_b`` / ``t_c`` are ``(..., L)`` in forward layer order (index 0
+    = layer 1), matching :class:`~repro.core.dag.IterationCosts`, with
+    the layer axis last — ``(S, L)`` matrices on the batched NumPy
+    path, single ``(L,)`` rows under the vmap of
+    :mod:`repro.core.batched_jax` (the function is dtype-polymorphic
+    over NumPy and ``jax.numpy``).  Returns the ``(...,)`` residual,
+    elementwise identical (<= 1e-9 relative, property-tested) to the
+    scalar loop.
     """
-    t_b = np.asarray(t_b, dtype=np.float64)
-    t_c = np.asarray(t_c, dtype=np.float64)
+    from repro.core.xputil import array_namespace
+
+    xp = array_namespace(t_b, t_c)
+    t_b = xp.asarray(t_b, dtype=xp.float64)
+    t_c = xp.asarray(t_c, dtype=xp.float64)
     if t_b.shape != t_c.shape:
         raise ValueError("length mismatch")
     # All passes run on the forward-order contiguous matrices:
@@ -90,13 +97,13 @@ def non_overlapped_comm_batch(t_b: np.ndarray, t_c: np.ndarray) -> np.ndarray:
     # reached l), the comm issued by then is the *prefix* sum of t_c
     # (layers >= l were all enqueued first), and mask-multiplication
     # (not np.where) zeroes the no-comm candidates.
-    prefix_b = np.cumsum(t_b, axis=1)
-    total_b = prefix_b[:, -1]
-    suffix_b = (total_b[:, None] - prefix_b) + t_b     # inclusive suffix
-    prefix_c = np.cumsum(t_c, axis=1)
+    prefix_b = xp.cumsum(t_b, axis=-1)
+    total_b = prefix_b[..., -1]
+    suffix_b = (total_b[..., None] - prefix_b) + t_b     # inclusive suffix
+    prefix_c = xp.cumsum(t_c, axis=-1)
     cand = (suffix_b + prefix_c) * (t_c > 0)
-    comm_finish = cand.max(axis=1, initial=0.0)
-    return np.maximum(comm_finish - total_b, 0.0)
+    comm_finish = cand.max(axis=-1, initial=0.0)
+    return xp.maximum(comm_finish - total_b, 0.0)
 
 
 def eq5_wfbp(costs: IterationCosts) -> float:

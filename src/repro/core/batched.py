@@ -582,6 +582,16 @@ class GridRun:
     def __len__(self) -> int:
         return self._ev.n_scenarios
 
+    def columns_slice(self, lo: int, hi: int) -> dict[str, np.ndarray]:
+        """Numeric result columns (plus ``method`` labels) for flat
+        scenario indices ``[lo, hi)`` — the policy-selected values
+        before tidy-row assembly.  The kernel-only surface the
+        throughput benchmark times and the jax backend's differential
+        gate compares against."""
+        ev = self._ev
+        codes = ev._scenario_codes(lo, hi)
+        return _policy_select(ev._pax, codes["pi"], self._kc, codes["kidx"])
+
     def rows_slice(self, lo: int, hi: int) -> list[dict | None]:
         """Batched rows for flat scenario indices ``[lo, hi)`` in grid
         order; entries whose policy needs the simulator come back as
@@ -633,17 +643,17 @@ def grid_evaluator(grid: ScenarioGrid) -> GridEvaluator:
 # ----------------------------------------------------------------------
 # Scenario-list front end (arbitrary iterables, already validated).
 # ----------------------------------------------------------------------
-def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
-    """Batched rows (input order) for a list of batched-path-eligible
-    scenarios (closed-form or bucket-timeline policies); one Python
-    pass to build code vectors, then the same two-tier kernel the grid
-    front end uses (with the identity scenario -> kernel-point map).
-
-    Raises ``ValueError`` if any scenario's policy has neither form —
-    callers (:func:`repro.core.sweep.sweep`) partition first.
+def scenario_axes(scenarios: Sequence[Scenario]):
+    """One Python pass over a scenario list: resolve the unique
+    workload/cluster-pair/policy axes and the per-scenario code
+    vectors.  Returns ``(wax, cax, pax, widx, cidx, polidx, coll, n,
+    batch)`` — the inputs of the two-tier kernel with the identity
+    scenario -> kernel-point map.  Shared by :func:`eval_scenarios`
+    and the jax backend's list front end
+    (:func:`repro.core.batched_jax.eval_scenarios_jax`), raising
+    ``ValueError`` if any scenario's policy has neither a closed nor a
+    bucket-timeline form.
     """
-    if not scenarios:
-        return []
     wl_key: dict[str, int] = {}
     pair_key: dict[tuple[str, str | None], int] = {}
     pol_key: dict[str, int] = {}
@@ -681,6 +691,22 @@ def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
         raise ValueError(f"policies with neither a closed form nor a "
                          f"bucket-timeline form cannot take the batched "
                          f"path: {bad}")
+    return wax, cax, pax, widx, cidx, polidx, coll, n, batch
+
+
+def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
+    """Batched rows (input order) for a list of batched-path-eligible
+    scenarios (closed-form or bucket-timeline policies); one Python
+    pass to build code vectors, then the same two-tier kernel the grid
+    front end uses (with the identity scenario -> kernel-point map).
+
+    Raises ``ValueError`` if any scenario's policy has neither form —
+    callers (:func:`repro.core.sweep.sweep`) partition first.
+    """
+    if not scenarios:
+        return []
+    wax, cax, pax, widx, cidx, polidx, coll, n, batch = \
+        scenario_axes(scenarios)
     kc = _kernel_cols(wax, cax, widx, cidx, coll, n, batch,
                       tl_specs=pax.tl_specs)
     cols = _policy_select(pax, polidx, kc, kidx=None)

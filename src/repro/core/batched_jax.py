@@ -1,0 +1,532 @@
+"""JAX-native batched sweep kernels: ``jit`` + ``vmap`` over scenarios.
+
+The NumPy engine (:mod:`repro.core.batched`) evaluates a grid in two
+tiers — a policy-independent ``(K, L)`` kernel grid reduced to ``(K,)``
+cost columns, then a cheap per-scenario policy select.  This module
+runs the *same* two tiers through XLA:
+
+* the per-point kernel (compute costs, collective dispatch, WFBP
+  prefix-max residual, bucket-timeline residuals) is written per
+  kernel point and ``vmap``-batched over the kernel axis;
+* the policy select is written per scenario and ``vmap``-batched over
+  the scenario axis;
+* the composition is one ``jit``-compiled function whose array inputs
+  (axis tables, code vectors) are ordinary pytree arguments — same
+  shapes, same compilation, fresh numbers every call.
+
+There is no parallel formula implementation to keep in lockstep: the
+collective models (:mod:`repro.core.hardware`), the WFBP residual
+(:func:`repro.core.analytical.non_overlapped_comm_batch`) and the
+bucket timeline (:func:`repro.core.bucketsim.timeline_residual`) are
+dtype-polymorphic (:mod:`repro.core.xputil`) and trace here on
+``jax.numpy`` rows exactly as they evaluate on NumPy matrices in the
+oracle engine.  Numerics run in float64 under a scoped
+``jax.experimental.enable_x64`` (never the global flag, which would
+leak into the repo's other jax code), which is what makes the <= 1e-6
+differential agreement against the NumPy oracle achievable; the
+differential suite (``tests/test_batched_jax.py``) pins it on every
+built-in grid.
+
+Scenario-axis sharding: with more than one device (or an explicit
+``mesh=``), the kernel and scenario code vectors are zero-padded to a
+device-count multiple and placed with a ``NamedSharding`` over the
+data axis of a :func:`repro.launch.mesh.make_dp_mesh` mesh — ``jit``
+then partitions both tiers across devices, and the padding rows are
+sliced off the gathered result.
+
+Differentiability: the continuous inputs — link bandwidths/latencies
+per ``(cluster, interconnect)`` pair and the bucket sizes — are
+exposed as a params dict (:func:`default_params`), and
+:func:`iteration_time_fn` returns a jit-compiled function of them
+suitable for ``jax.grad``.  Iteration time is *piecewise constant* in
+``bucket_bytes`` (the bucket size enters only through the partition
+boundaries, which are discrete), so its exact gradient is 0 almost
+everywhere — ``jax.grad`` returns exactly that 0, matching central
+finite differences on the NumPy path whenever the perturbation stays
+inside one partition cell.  :func:`numpy_iteration_times` is the
+NumPy twin over the same params (bucket partitions *rebuilt* from the
+perturbed sizes), which is what the finite-difference tests and the
+CI agreement gate evaluate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core import analytical, batched, bucketsim
+from repro.core.batched import grid_evaluator
+from repro.core.hardware import (hierarchical_allreduce_time,
+                                 ring_allreduce_time, tree_allreduce_time)
+from repro.core.scenarios import Scenario, ScenarioGrid, normalize_interconnect
+
+#: Continuous model inputs exposed to ``jax.grad`` — per
+#: ``(cluster, interconnect)`` pair link parameters plus the bucket
+#: sizes of the grid's timeline specs.
+PARAM_KEYS = ("intra_bw", "intra_lat", "inter_bw", "inter_lat",
+              "bucket_bytes")
+
+#: Numeric columns shared with the NumPy engine's policy select.
+_NUMERIC_COLS = ("batch", "iteration_time_s", "samples_per_sec",
+                 "speedup", "t_comm_s", "t_comp_s")
+
+
+# ----------------------------------------------------------------------
+# Structure extraction: axis tables -> one flat dict of arrays (a jit
+# pytree argument), bucket structure included.
+# ----------------------------------------------------------------------
+def _axes_tables(wax, cax, pax) -> tuple[dict, dict]:
+    """``(tables, pflags)`` array dicts from the NumPy engine's axis
+    dataclasses — the jit kernel's pytree inputs.  ``bucket_bytes``
+    rides along purely as a differentiation input: the partition
+    structure (``bt<i>_*``) is discrete and prebuilt, which is exactly
+    the piecewise-constant dependence documented in the module
+    docstring."""
+    tables = {
+        "flops": wax.flops, "tf_meas": wax.tf_meas, "tb_meas": wax.tb_meas,
+        "grad_bytes": wax.grad_bytes, "bwd_ratio": wax.bwd_ratio,
+        "batch_default": wax.batch_default,
+        "bytes_per_sample": wax.bytes_per_sample,
+        "param_bytes": wax.param_bytes, "t_io_meas": wax.t_io_meas,
+        "has_meas_io": wax.has_meas_io,
+        "intra_bw": cax.intra_bw, "intra_lat": cax.intra_lat,
+        "inter_bw": cax.inter_bw, "inter_lat": cax.inter_lat,
+        "gpn": cax.gpn, "disk_lat": cax.disk_lat, "disk_bw": cax.disk_bw,
+        "h2d_lat": cax.h2d_lat, "h2d_bw": cax.h2d_bw,
+        "rate": cax.rate, "hbm_bw": cax.hbm_bw,
+        "bucket_bytes": np.array([bb for bb, _ in pax.tl_specs],
+                                 dtype=np.float64),
+    }
+    for i, (bb, _) in enumerate(pax.tl_specs):
+        bt = bucketsim.bucket_table(wax.grad_bytes, bb)
+        tables[f"bt{i}_nbytes"] = bt.nbytes
+        tables[f"bt{i}_release"] = bt.release_layer
+        tables[f"bt{i}_mask"] = bt.mask
+    pflags = {"overlap_io": pax.overlap_io,
+              "overlap_comm": pax.overlap_comm,
+              "h2d_early": pax.h2d_early,
+              "tl_spec": pax.tl_spec}
+    return tables, pflags
+
+
+# ----------------------------------------------------------------------
+# Tier 1: one kernel point — vmapped over the kernel axis.
+# ----------------------------------------------------------------------
+def _point_kernel(tbl: dict, tl_overlaps: tuple, coll_codes: tuple,
+                  w, c, coll, n, batch):
+    """Policy-independent cost terms of one kernel point, traced on
+    the dtype-polymorphic models — the jax twin of one row of
+    :func:`repro.core.batched._kernel_cols`.  ``coll`` is traced, but
+    the set of collective codes present in the grid (``coll_codes``)
+    is static — only those models are evaluated and selected, the jax
+    counterpart of the NumPy kernel's host-side partition by
+    collective code (a single-collective grid pays for exactly one
+    model)."""
+    batch_f = jnp.where(batch > 0, batch,
+                        tbl["batch_default"][w]).astype(jnp.float64)
+    n_f = n.astype(jnp.float64)
+    tfa = tbl["flops"][w] * batch_f / tbl["rate"][c]
+    scale = batch_f / tbl["batch_default"][w]
+    t_f = tfa + tbl["tf_meas"][w] * scale          # measured rows: exact,
+    t_b = tbl["bwd_ratio"][w] * tfa + tbl["tb_meas"][w] * scale  # others +0.0
+    use_intra = n <= tbl["gpn"][c]
+    link_bw = jnp.where(use_intra, tbl["intra_bw"][c], tbl["inter_bw"][c])
+    link_lat = jnp.where(use_intra, tbl["intra_lat"][c], tbl["inter_lat"][c])
+
+    def _one_model(code: int, payload):
+        if code == 0:
+            return ring_allreduce_time(payload, n_f, link_bw, link_lat)
+        if code == 1:
+            return tree_allreduce_time(payload, n_f, link_bw, link_lat)
+        return hierarchical_allreduce_time(
+            payload, n, tbl["gpn"][c],
+            tbl["intra_bw"][c], tbl["intra_lat"][c],
+            tbl["inter_bw"][c], tbl["inter_lat"][c])
+
+    def comm(payload):
+        """(B,) payload bytes -> (B,) collective seconds; the same
+        payload-agnostic dispatch as the NumPy kernel's comm_matrix."""
+        t = _one_model(coll_codes[0], payload)
+        for code in coll_codes[1:]:
+            t = jnp.where(coll == code, _one_model(code, payload), t)
+        return t * (payload > 0)
+
+    t_c = comm(tbl["grad_bytes"][w])
+    nbytes_in = batch_f * tbl["bytes_per_sample"][w]
+    t_io = tbl["disk_lat"][c] + nbytes_in / tbl["disk_bw"][c]
+    t_io = jnp.where(tbl["has_meas_io"][w], tbl["t_io_meas"][w] * scale, t_io)
+    t_h2d = tbl["h2d_lat"][c] + nbytes_in / tbl["h2d_bw"][c]
+    out = {
+        "io_h2d": t_io + t_h2d,
+        "t_h2d": t_h2d,
+        "comp": t_f.sum() + t_b.sum(),
+        "sum_c": t_c.sum(),
+        "tc_no": analytical.non_overlapped_comm_batch(t_b, t_c),
+        "t_u": 3.0 * tbl["param_bytes"][w] / tbl["hbm_bw"][c],
+        "n_f": n_f,
+        "batch_f": batch_f,
+    }
+    for i, ov_comm in enumerate(tl_overlaps):
+        dur = comm(tbl[f"bt{i}_nbytes"][w])
+        out[f"tl{i}"] = bucketsim.timeline_residual(
+            t_b, dur, tbl[f"bt{i}_release"][w], tbl[f"bt{i}_mask"][w],
+            overlap_comm=ov_comm)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Tier 2: one scenario's policy select — vmapped over the scenario axis.
+# ----------------------------------------------------------------------
+def _point_select(pflags: dict, tl_overlaps: tuple, kc: dict, pi, kidx):
+    """The jax twin of one row of
+    :func:`repro.core.batched._policy_select` (same equations, same
+    zero-comm weak-scaling baseline); method labels are strings and
+    stay on the host side."""
+    def g(name):
+        return kc[name][kidx]
+
+    ov_io = pflags["overlap_io"][pi]
+    ov_comm = pflags["overlap_comm"][pi]
+    early = pflags["h2d_early"][pi]
+
+    comm_term = jnp.where(ov_comm, g("tc_no"), g("sum_c"))
+    spec_of = pflags["tl_spec"][pi]
+    for i, _ in enumerate(tl_overlaps):
+        comm_term = jnp.where(spec_of == i, g(f"tl{i}"), comm_term)
+    gpu_chain = g("comp") + comm_term + g("t_u")
+    io_h2d, t_h2d = g("io_h2d"), g("t_h2d")
+    eq2 = io_h2d + gpu_chain
+    eq_early = jnp.maximum(io_h2d, gpu_chain)
+    eq_late = jnp.maximum(io_h2d, t_h2d + gpu_chain)
+    t_iter = jnp.where(~ov_io, eq2, jnp.where(early, eq_early, eq_late))
+
+    base_chain = g("comp") + g("t_u")
+    t1 = jnp.where(~ov_io, io_h2d + base_chain,
+                   jnp.where(early, jnp.maximum(io_h2d, base_chain),
+                             jnp.maximum(io_h2d, t_h2d + base_chain)))
+    n_f, batch_f = g("n_f"), g("batch_f")
+    return {
+        "batch": batch_f,
+        "iteration_time_s": t_iter,
+        "samples_per_sec": n_f * batch_f / t_iter,
+        "speedup": n_f * t1 / t_iter,
+        "t_comm_s": g("sum_c"),
+        "t_comp_s": g("comp"),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("tl_overlaps", "coll_codes"))
+def _columns_jax(tables: dict, pflags: dict, kcodes: dict, scodes: dict,
+                 tl_overlaps: tuple, coll_codes: tuple) -> dict:
+    """The whole two-tier evaluation as one compiled function.
+    Compilation is keyed by array shapes/dtypes and the static
+    ``tl_overlaps``/``coll_codes`` tuples — re-running a grid (or any
+    same-shaped grid) with fresh numbers reuses the executable."""
+    kc = jax.vmap(
+        lambda w, c, coll, n, b:
+            _point_kernel(tables, tl_overlaps, coll_codes, w, c, coll, n, b)
+    )(kcodes["w"], kcodes["c"], kcodes["coll"], kcodes["n"], kcodes["batch"])
+    return jax.vmap(
+        lambda pi, kidx: _point_select(pflags, tl_overlaps, kc, pi, kidx)
+    )(scodes["pi"], scodes["kidx"])
+
+
+# ----------------------------------------------------------------------
+# Sharding: pad the batch axes to a device-count multiple and place
+# the code vectors over the mesh's data axis.
+# ----------------------------------------------------------------------
+#: Benign fill for padding rows (index 0 is always valid; n=1 is the
+#: zero-comm degenerate; batch=0 means "table default").
+_PAD_FILL = {"n": 1}
+
+
+def _shard_codes(codes: dict, mesh) -> dict:
+    ndev = math.prod(mesh.devices.shape)
+    axis = mesh.axis_names[0]
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(axis))
+    size = len(next(iter(codes.values())))
+    pad = (-size) % ndev
+    out = {}
+    for k, v in codes.items():
+        if pad:
+            fill = np.full(pad, _PAD_FILL.get(k, 0), dtype=v.dtype)
+            v = np.concatenate([v, fill])
+        out[k] = jax.device_put(v, sharding)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Grid front end.
+# ----------------------------------------------------------------------
+class JaxGridEvaluator:
+    """A :class:`ScenarioGrid` prepared for the jit/vmap kernels.
+
+    Reuses the NumPy engine's memoized structure (axis tables, code
+    vectors, label arrays) — only the numeric evaluation moves to XLA.
+    Raises ``ValueError`` for grids containing simulator-only policies:
+    unlike the NumPy engine there is no event-driven fallback to
+    interleave, and silently falling back would defeat the point of
+    selecting the backend explicitly.
+
+    ``mesh=None`` autoselects: a data-parallel mesh over all devices
+    when more than one is visible, unsharded otherwise.  Pass a mesh
+    (e.g. :func:`repro.launch.mesh.make_dp_mesh`) to force sharding —
+    a single-device mesh exercises the sharded path end to end.
+    """
+
+    def __init__(self, grid: ScenarioGrid, *, mesh=None):
+        ev = grid_evaluator(grid)
+        if not ev.all_batched:
+            bad = [name for name, f, t in zip(
+                ev._pax.names, ev._pax.has_fast, ev._pax.has_tl)
+                if not (bool(f) or bool(t))]
+            raise ValueError(
+                f"backend='jax' evaluates closed-form and bucket-timeline "
+                f"policies only; {bad} need the event-driven simulator. "
+                f"Use backend='numpy' for grids containing them.")
+        self.ev = ev
+        self._tables, self._pflags = _axes_tables(ev._wax, ev._cax, ev._pax)
+        self._tl_overlaps = tuple(bool(ov) for _, ov in ev._pax.tl_specs)
+        self._coll_codes = tuple(int(x) for x in np.unique(ev._kcoll)) or (0,)
+        kcodes = {"w": ev._kwidx, "c": ev._kcidx, "coll": ev._kcoll,
+                  "n": ev._kn, "batch": ev._kbatch}
+        S = len(ev)
+        if S:
+            sc = ev._scenario_codes(0, S)
+            scodes = {"pi": sc["pi"], "kidx": sc["kidx"]}
+        else:
+            scodes = {"pi": np.empty(0, dtype=np.int64),
+                      "kidx": np.empty(0, dtype=np.int64)}
+        if mesh is None and len(jax.devices()) > 1:
+            from repro.launch.mesh import make_dp_mesh
+            mesh = make_dp_mesh(len(jax.devices()))
+        self.mesh = mesh
+        if mesh is not None and S:
+            with enable_x64():
+                kcodes = _shard_codes(kcodes, mesh)
+                scodes = _shard_codes(scodes, mesh)
+        self._kcodes, self._scodes = kcodes, scodes
+
+    def __len__(self) -> int:
+        return len(self.ev)
+
+    def columns(self, params: dict | None = None) -> dict[str, np.ndarray]:
+        """All numeric result columns as host float64 ``(S,)`` arrays
+        (blocks on the device computation).  ``params`` optionally
+        overrides the :data:`PARAM_KEYS` entries."""
+        S = len(self.ev)
+        if S == 0:
+            return {k: np.empty(0) for k in _NUMERIC_COLS}
+        with enable_x64():
+            out = self._traced_columns(params)
+            return {k: np.asarray(v)[:S] for k, v in out.items()
+                    if k in _NUMERIC_COLS}
+
+    def _traced_columns(self, params: dict | None = None) -> dict:
+        """The jit call itself — kept separate so the differentiable
+        front end (:func:`iteration_time_fn`) can trace through it.
+        Callers are responsible for the ``enable_x64`` scope."""
+        tables = self._tables
+        if params:
+            unknown = set(params) - set(PARAM_KEYS)
+            if unknown:
+                raise ValueError(f"unknown param keys {sorted(unknown)}; "
+                                 f"differentiable params are {PARAM_KEYS}")
+            tables = {**tables, **params}
+        return _columns_jax(tables, self._pflags, self._kcodes,
+                            self._scodes, self._tl_overlaps,
+                            self._coll_codes)
+
+    def run(self, params: dict | None = None) -> "JaxGridRun":
+        return JaxGridRun(self, self.columns(params))
+
+    def method_labels(self, pi: np.ndarray) -> list[str]:
+        """Per-row evaluation-path labels (``all_batched`` holds, so
+        only the two batched labels occur)."""
+        return np.where(self.ev._pax.has_fast[pi],
+                        "analytical", "timeline").tolist()
+
+
+class JaxGridRun:
+    """One evaluation of a grid on the jax backend: host-side numeric
+    columns plus the shared structure, materializing tidy rows chunk by
+    chunk — the jax twin of :class:`repro.core.batched.GridRun` (no
+    ``None`` entries: simulator-only grids are rejected up front)."""
+
+    def __init__(self, jev: JaxGridEvaluator, cols: dict[str, np.ndarray]):
+        self._jev = jev
+        self._cols = cols
+
+    def __len__(self) -> int:
+        return len(self._jev)
+
+    def columns_slice(self, lo: int, hi: int) -> dict[str, np.ndarray]:
+        ev = self._jev.ev
+        out = {k: v[lo:hi] for k, v in self._cols.items()}
+        out["method"] = self._jev.method_labels(
+            ev._scenario_codes(lo, hi)["pi"])
+        return out
+
+    def rows_slice(self, lo: int, hi: int) -> list[dict]:
+        ev = self._jev.ev
+        codes = ev._scenario_codes(lo, hi)
+        cols = {k: v[lo:hi] for k, v in self._cols.items()}
+        cols["method"] = self._jev.method_labels(codes["pi"])
+        return batched._make_rows(
+            ev._wl_values[codes["wi"]].tolist(),
+            ev._cl_values[codes["ci"]].tolist(),
+            ev._n_values[codes["ki"]].tolist(),
+            ev._pol_values[codes["pi"]].tolist(),
+            ev._coll_values[codes["ai"]].tolist(),
+            ev._ic_values[codes["ii"]].tolist(), cols)
+
+
+#: Structure memo, mirroring :func:`repro.core.batched.grid_evaluator`
+#: (separate because the jax evaluator also holds device-side codes).
+_JAX_MEMO: dict = {}
+_MEMO_LIMIT = 64
+
+
+def jax_grid_evaluator(grid: ScenarioGrid, *, mesh=None) -> JaxGridEvaluator:
+    """Memoized :class:`JaxGridEvaluator` (unsharded/auto mesh only —
+    explicit meshes always build fresh)."""
+    if mesh is not None:
+        return JaxGridEvaluator(grid, mesh=mesh)
+    try:
+        from repro.core.workloads import resolve_workload
+        tables = tuple(resolve_workload(w) for w in grid.workloads)
+        key = (grid, tuple(id(t) for t in tables))
+        hash(key)
+    except TypeError:
+        return JaxGridEvaluator(grid)
+    hit = _JAX_MEMO.get(key)
+    if hit is not None:
+        return hit[0]
+    if len(_JAX_MEMO) >= _MEMO_LIMIT:
+        _JAX_MEMO.clear()
+    jev = JaxGridEvaluator(grid)
+    _JAX_MEMO[key] = (jev, tables)
+    return jev
+
+
+# ----------------------------------------------------------------------
+# Scenario-list front end — jax twin of batched.eval_scenarios.
+# ----------------------------------------------------------------------
+def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario]
+                       ) -> list[dict]:
+    """Batched rows (input order) for a list of batched-path-eligible
+    scenarios, evaluated by the jit/vmap kernels with the identity
+    scenario -> kernel-point map.  Raises ``ValueError`` (via
+    :func:`repro.core.batched.scenario_axes`) if any scenario's policy
+    has neither a closed nor a bucket-timeline form."""
+    scenarios = list(scenarios)
+    if not scenarios:
+        return []
+    wax, cax, pax, widx, cidx, polidx, coll, n, batch = \
+        batched.scenario_axes(scenarios)
+    tables, pflags = _axes_tables(wax, cax, pax)
+    tl_overlaps = tuple(bool(ov) for _, ov in pax.tl_specs)
+    S = len(scenarios)
+    kcodes = {"w": widx, "c": cidx, "coll": coll, "n": n, "batch": batch}
+    scodes = {"pi": polidx, "kidx": np.arange(S, dtype=np.int64)}
+    coll_codes = tuple(int(x) for x in np.unique(coll)) or (0,)
+    with enable_x64():
+        out = _columns_jax(tables, pflags, kcodes, scodes, tl_overlaps,
+                           coll_codes)
+        cols = {k: np.asarray(v) for k, v in out.items()
+                if k in _NUMERIC_COLS}
+    cols["method"] = np.where(pax.has_fast[polidx],
+                              "analytical", "timeline").tolist()
+    return batched._make_rows(
+        [s.workload for s in scenarios],
+        [s.cluster for s in scenarios],
+        [s.n_workers for s in scenarios],
+        [s.policy for s in scenarios],
+        [s.collective for s in scenarios],
+        [normalize_interconnect(s.interconnect) for s in scenarios],
+        cols)
+
+
+# ----------------------------------------------------------------------
+# Differentiable front end.
+# ----------------------------------------------------------------------
+def default_params(grid: ScenarioGrid) -> dict[str, np.ndarray]:
+    """The grid's resolved continuous inputs (:data:`PARAM_KEYS`):
+    per-pair link bandwidths/latencies and per-timeline-spec bucket
+    sizes — the point :func:`iteration_time_fn` differentiates
+    around."""
+    jev = jax_grid_evaluator(grid)
+    return {k: np.array(jev._tables[k], dtype=np.float64, copy=True)
+            for k in PARAM_KEYS}
+
+
+def iteration_time_fn(grid: ScenarioGrid):
+    """``(f, params0)``: ``f(params) -> (S,)`` iteration times, jit
+    compiled and differentiable w.r.t. every :data:`PARAM_KEYS` entry.
+    Call (and differentiate) ``f`` inside a
+    ``jax.experimental.enable_x64()`` scope, or use the
+    :func:`grad_iteration_time` convenience wrapper.
+
+    The gradient w.r.t. ``bucket_bytes`` is exactly 0: iteration time
+    is piecewise constant in the bucket size (see the module
+    docstring), and ``f`` holds the partition fixed at ``params0``'s
+    structure.  :func:`numpy_iteration_times` *rebuilds* the partition
+    per call, so central differences on it recover the same 0 inside a
+    partition cell."""
+    jev = jax_grid_evaluator(grid)
+    S = len(jev)
+
+    def f(params: dict):
+        return jev._traced_columns(params)["iteration_time_s"][:S]
+
+    return f, default_params(grid)
+
+
+def grad_iteration_time(grid: ScenarioGrid,
+                        params: dict | None = None) -> dict[str, np.ndarray]:
+    """``d(sum of iteration times)/d(params)`` as host arrays — the
+    end-to-end differentiability surface the gradient-correctness
+    tests pin against NumPy central differences."""
+    f, p0 = iteration_time_fn(grid)
+    if params:
+        p0 = {**p0, **params}
+    with enable_x64():
+        p = {k: jnp.asarray(v, dtype=jnp.float64) for k, v in p0.items()}
+        g = jax.grad(lambda q: f(q).sum())(p)
+        return {k: np.asarray(v) for k, v in g.items()}
+
+
+def numpy_iteration_times(grid: ScenarioGrid,
+                          params: dict | None = None) -> np.ndarray:
+    """The NumPy oracle over the same params surface: link overrides
+    swap into the cluster axis, bucket-size overrides *rebuild* the
+    bucket partitions.  This is the finite-difference reference for
+    :func:`grad_iteration_time` and the numeric side of the CI
+    agreement gate."""
+    ev = grid_evaluator(grid)
+    cax = ev._cax
+    tl_specs = list(ev._pax.tl_specs)
+    if params:
+        link = {k: np.asarray(params[k], dtype=np.float64)
+                for k in ("intra_bw", "intra_lat", "inter_bw", "inter_lat")
+                if k in params}
+        if link:
+            cax = dataclasses.replace(cax, **link)
+        if "bucket_bytes" in params:
+            bb = np.asarray(params["bucket_bytes"], dtype=np.float64)
+            tl_specs = [(float(bb[i]), ov)
+                        for i, (_, ov) in enumerate(tl_specs)]
+    kc = batched._kernel_cols(ev._wax, cax, ev._kwidx, ev._kcidx,
+                              ev._kcoll, ev._kn, ev._kbatch,
+                              tl_specs=tl_specs)
+    codes = ev._scenario_codes(0, len(ev))
+    return batched._policy_select(ev._pax, codes["pi"], kc,
+                                  codes["kidx"])["iteration_time_s"]

@@ -146,14 +146,18 @@ def timeline_residual(t_b: np.ndarray, durations: np.ndarray,
     """The communication residual of the bucket timeline, vectorized
     over ``(scenario, bucket)`` matrices.
 
-    ``t_b`` is ``(S, L)`` backward times in forward layer order (zero
+    ``t_b`` is ``(..., L)`` backward times in forward layer order (zero
     padding allowed); ``durations`` / ``release_layer`` / ``mask`` are
-    ``(S, B)`` bucket matrices in issue order.  With ``overlap_comm``
-    a bucket is released at the inclusive backward suffix sum of its
-    ``release_layer`` (WFBP); without it every bucket releases when the
-    whole backward pass finishes (comm-at-end).  Returns the ``(S,)``
-    residual ``max(makespan - sum(t_b), 0)`` that joins the GPU chain
-    in place of the per-layer WFBP term ``t_c^no``.
+    ``(..., B)`` bucket matrices in issue order, layer/bucket axes
+    last — ``(S, L)``/``(S, B)`` on the batched NumPy path, single
+    ``(L,)``/``(B,)`` rows under the vmap of
+    :mod:`repro.core.batched_jax` (dtype-polymorphic over NumPy and
+    ``jax.numpy``).  With ``overlap_comm`` a bucket is released at the
+    inclusive backward suffix sum of its ``release_layer`` (WFBP);
+    without it every bucket releases when the whole backward pass
+    finishes (comm-at-end).  Returns the ``(...,)`` residual
+    ``max(makespan - sum(t_b), 0)`` that joins the GPU chain in place
+    of the per-layer WFBP term ``t_c^no``.
 
     Degenerate shapes fall out of the formula: one giant bucket whose
     release layer is the first comm layer reproduces comm-at-end; one
@@ -161,19 +165,22 @@ def timeline_residual(t_b: np.ndarray, durations: np.ndarray,
     :func:`repro.core.analytical.non_overlapped_comm_batch` exactly
     (property-tested).
     """
-    t_b = np.asarray(t_b, dtype=np.float64)
-    durations = np.asarray(durations, dtype=np.float64) * mask
-    prefix_b = np.cumsum(t_b, axis=1)
-    total_b = prefix_b[:, -1]
+    from repro.core.xputil import array_namespace
+
+    xp = array_namespace(t_b, durations, release_layer)
+    t_b = xp.asarray(t_b, dtype=xp.float64)
+    durations = xp.asarray(durations, dtype=xp.float64) * mask
+    prefix_b = xp.cumsum(t_b, axis=-1)
+    total_b = prefix_b[..., -1]
     if overlap_comm:
-        suffix_b = (total_b[:, None] - prefix_b) + t_b    # inclusive suffix
-        release = np.take_along_axis(suffix_b, release_layer, axis=1)
+        suffix_b = (total_b[..., None] - prefix_b) + t_b  # inclusive suffix
+        release = xp.take_along_axis(suffix_b, release_layer, axis=-1)
     else:
-        release = np.broadcast_to(total_b[:, None], durations.shape)
+        release = xp.broadcast_to(total_b[..., None], durations.shape)
     # duration suffix sum over issue order: bucket j waits for nothing
     # issued after it, but everything issued at-or-after j must run
     # before the channel drains past j's contribution
-    sufdur = np.flip(np.cumsum(np.flip(durations, axis=1), axis=1), axis=1)
+    sufdur = xp.flip(xp.cumsum(xp.flip(durations, axis=-1), axis=-1), axis=-1)
     cand = (release + sufdur) * mask      # mask-multiply: padding -> 0
-    makespan = cand.max(axis=1, initial=0.0)
-    return np.maximum(makespan - total_b, 0.0)
+    makespan = cand.max(axis=-1, initial=0.0)
+    return xp.maximum(makespan - total_b, 0.0)

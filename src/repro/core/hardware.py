@@ -19,6 +19,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.xputil import array_namespace, is_jax_array
+
 GB = 1e9
 MB = 1e6
 US = 1e-6
@@ -84,26 +86,32 @@ def ring_allreduce_time(nbytes, n, bandwidth, latency):
     Bandwidth-optimal (each rank sends ``2 (n-1)/n`` of the payload)
     but latency grows linearly in ``n`` — the regime behind the 9.6%
     InfiniBand utilization the paper measured for layer-wise messages.
+
+    Dtype-polymorphic: jax inputs (arrays *or* tracers, e.g. under the
+    vmap of :mod:`repro.core.batched_jax`) take the array path on
+    ``jax.numpy``; the Python-scalar branch is reserved for genuine
+    host scalars because ``if n <= 1`` cannot be traced.
     """
-    if np.ndim(n) == 0:
+    if np.ndim(n) == 0 and not is_jax_array(n):
         if n <= 1:
             return nbytes * 0.0
         return 2.0 * (n - 1) / n * nbytes / bandwidth + 2.0 * (n - 1) * latency
     # Array path: zeroing the n <= 1 entries by mask *multiplication*
     # (0.0 * finite == 0.0 exactly) — np.where materializes both
     # branches and costs ~10x an elementwise multiply at sweep sizes.
-    n = np.asarray(n, dtype=np.float64)
-    safe_n = np.where(n > 1, n, 2.0)         # small: broadcast shape of n
+    xp = array_namespace(nbytes, n, bandwidth, latency)
+    n = xp.asarray(n, dtype=xp.float64)
+    safe_n = xp.where(n > 1, n, 2.0)         # small: broadcast shape of n
     t = 2.0 * (safe_n - 1) / safe_n * nbytes / bandwidth \
         + 2.0 * (safe_n - 1) * latency
     return t * (n > 1)
 
 
-def _ceil_log2(n):
+def _ceil_log2(n, xp=np):
     """Exact ``ceil(log2 n)`` for integer arrays ``n >= 1`` (frexp-based
     so powers of two never round up a notch)."""
-    m, e = np.frexp(np.asarray(n, dtype=np.float64))
-    return np.where(m == 0.5, e - 1, e).astype(np.float64)
+    m, e = xp.frexp(xp.asarray(n, dtype=xp.float64))
+    return xp.where(m == 0.5, e - 1, e).astype(xp.float64)
 
 
 def tree_allreduce_time(nbytes, n, bandwidth, latency):
@@ -114,13 +122,14 @@ def tree_allreduce_time(nbytes, n, bandwidth, latency):
     ``2 (n-1)/n M/B``) while latency grows only logarithmically —
     strictly better than ring for small messages on large clusters.
     """
-    if np.ndim(n) == 0:
+    if np.ndim(n) == 0 and not is_jax_array(n):
         if n <= 1:
             return nbytes * 0.0
         depth = math.ceil(math.log2(n))
         return 2.0 * nbytes / bandwidth + 2.0 * depth * latency
-    n = np.asarray(n)
-    depth = _ceil_log2(np.where(n > 1, n, 2))    # small: shape of n
+    xp = array_namespace(nbytes, n, bandwidth, latency)
+    n = xp.asarray(n)
+    depth = _ceil_log2(xp.where(n > 1, n, 2), xp)    # small: shape of n
     t = 2.0 * nbytes / bandwidth + 2.0 * depth * latency
     return t * (n > 1)
 
@@ -135,20 +144,23 @@ def hierarchical_allreduce_time(nbytes, n, gpus_per_node,
 
     Array-valued like the flat primitives: ``n`` / ``gpus_per_node`` /
     link parameters broadcast against ``nbytes``, which is how the
-    batched fast path costs every scenario of a grid at once.
+    batched fast path costs every scenario of a grid at once — and
+    dtype-polymorphic, so the jit/vmap kernels trace the same code.
     """
-    scalar = np.ndim(n) == 0 and np.ndim(gpus_per_node) == 0
-    n = np.asarray(n, dtype=np.int64)
-    gpn = np.asarray(gpus_per_node, dtype=np.int64)
-    g = np.minimum(n, gpn)
-    safe_g = np.maximum(g, 1)
+    xp = array_namespace(nbytes, n, gpus_per_node,
+                         intra_bandwidth, inter_bandwidth)
+    scalar = xp is np and np.ndim(n) == 0 and np.ndim(gpus_per_node) == 0
+    n = xp.asarray(n, dtype=xp.int64)
+    gpn = xp.asarray(gpus_per_node, dtype=xp.int64)
+    g = xp.minimum(n, gpn)
+    safe_g = xp.maximum(g, 1)
     nodes = (n + safe_g - 1) // safe_g          # exact ceil(n / g)
-    gf = safe_g.astype(np.float64)
+    gf = safe_g.astype(xp.float64)
     intra = 2.0 * ((gf - 1) / gf * nbytes / intra_bandwidth
                    + (gf - 1) * intra_latency)
     # ring_allreduce_time already mask-zeroes its nodes <= 1 entries
     t = intra * (g > 1) + ring_allreduce_time(
-        nbytes / gf, nodes.astype(np.float64),
+        nbytes / gf, nodes.astype(xp.float64),
         inter_bandwidth, inter_latency)
     if scalar and np.ndim(t) == 0:
         return float(t)

@@ -26,6 +26,15 @@ combinations — in one call, two ways:
   built and list-scheduled via
   :func:`repro.core.simulator.simulate_steady`.
 
+``backend="jax"`` swaps the batched engine for the jit/vmap-compiled
+kernels of :mod:`repro.core.batched_jax` (same two tiers through XLA,
+float64, <= 1e-6 agreement with the NumPy oracle, property-tested).
+NumPy stays the default and the reference: the jax backend never
+falls back silently — combinations that would need the per-scenario
+reference paths (``batched=False``), the event-driven simulator
+(``force_simulator=True``) or a grid with simulator-only policies
+raise ``ValueError`` instead.
+
 The property tests assert the analytical and simulator paths agree to
 <= 1e-6 relative on every policy with an exact closed form, and the
 timeline path to <= 1e-6 against the simulator on the bucketed and
@@ -152,6 +161,8 @@ class SweepResult:
     ``n_analytical`` counts closed-form batched rows, ``n_timeline``
     bucket-timeline batched rows, ``n_simulated`` event-driven
     fallback rows — the three evaluation paths of :func:`sweep`.
+    ``backend`` records which batched engine produced the rows
+    (``"numpy"`` or ``"jax"``).
     """
 
     rows: list[dict]
@@ -159,6 +170,7 @@ class SweepResult:
     n_analytical: int
     n_simulated: int
     n_timeline: int = 0
+    backend: str = "numpy"
 
     def __len__(self) -> int:
         return len(self.rows)
@@ -194,6 +206,7 @@ class SweepResult:
             "n_analytical": self.n_analytical,
             "n_timeline": self.n_timeline,
             "n_simulated": self.n_simulated,
+            "backend": self.backend,
             "rows": self.rows,
         }
         text = json.dumps(doc, indent=indent)
@@ -234,6 +247,42 @@ class SweepResult:
 #: measurably hurting throughput.
 DEFAULT_CHUNK = 8192
 
+#: Evaluation backends :func:`sweep` / :func:`iter_rows` / :func:`stream`
+#: accept: the NumPy engine (default, and the agreement oracle) and the
+#: jit/vmap-compiled jax kernels.
+BACKENDS = ("numpy", "jax")
+
+
+def _check_backend(backend: str, *, batched: bool,
+                   force_simulator: bool) -> None:
+    """Reject invalid ``backend`` combinations loudly — the jax
+    backend has no per-scenario reference path and no event-driven
+    fallback, and silently falling back to NumPy would defeat the
+    point of selecting it explicitly."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if backend == "jax" and not batched:
+        raise ValueError(
+            "backend='jax' IS the batched kernel; batched=False pins the "
+            "per-scenario NumPy reference paths, which have no jax "
+            "counterpart. Drop batched=False or use backend='numpy'.")
+    if backend == "jax" and force_simulator:
+        raise ValueError(
+            "force_simulator=True routes every scenario through the "
+            "event-driven NumPy simulator — there is no jax simulator to "
+            "force. Drop force_simulator or use backend='numpy'.")
+
+
+def _jax_grid_chunks(grid: ScenarioGrid, chunk: int) -> Iterator[list[dict]]:
+    """Grid rows through the jax backend, chunk by chunk.  Grids with
+    simulator-only policies raise (in ``JaxGridEvaluator``) before any
+    evaluation happens."""
+    from repro.core.batched_jax import jax_grid_evaluator
+
+    run = jax_grid_evaluator(grid).run()
+    for lo in range(0, len(run), chunk):
+        yield run.rows_slice(lo, min(lo + chunk, len(run)))
+
 
 def _grid_chunks(grid: ScenarioGrid, warm_iterations: int,
                  chunk: int) -> Iterator[list[dict]]:
@@ -256,6 +305,7 @@ def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
               force_simulator: bool = False,
               warm_iterations: int = 6,
               batched: bool = True,
+              backend: str = "numpy",
               chunk: int = DEFAULT_CHUNK) -> Iterator[dict]:
     """Yield tidy result rows in scenario order, lazily.
 
@@ -270,7 +320,27 @@ def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
     :func:`_fast_eval` for closed forms, the event-driven simulator
     for schedule-dependent policies — the agreement oracles and the
     slow side of the throughput benchmark.
+
+    ``backend="jax"`` evaluates through the jit/vmap kernels
+    (:mod:`repro.core.batched_jax`); incompatible with
+    ``batched=False`` / ``force_simulator=True`` and with
+    simulator-only policies (raises ``ValueError``, never a silent
+    fallback).
     """
+    _check_backend(backend, batched=batched, force_simulator=force_simulator)
+    if backend == "jax":
+        if isinstance(grid, ScenarioGrid):
+            for part in _jax_grid_chunks(grid, chunk):
+                yield from part
+        else:
+            from repro.core.batched_jax import eval_scenarios_jax
+
+            scenarios = list(grid)
+            for s in scenarios:
+                s.validate()
+            for lo in range(0, len(scenarios), chunk):
+                yield from eval_scenarios_jax(scenarios[lo:lo + chunk])
+        return
     if isinstance(grid, ScenarioGrid):
         if batched and not force_simulator:
             for part in _grid_chunks(grid, warm_iterations, chunk):
@@ -312,7 +382,8 @@ def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
 def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
           force_simulator: bool = False,
           warm_iterations: int = 6,
-          batched: bool = True) -> SweepResult:
+          batched: bool = True,
+          backend: str = "numpy") -> SweepResult:
     """Evaluate every scenario of ``grid`` and return the tidy table.
 
     Closed-form and bucket-timeline scenarios go through the
@@ -324,10 +395,28 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
     ``force_simulator=True`` routes *all* scenarios through the
     event-driven simulator — the agreement oracle, and the way to study
     schedules neither batched form can express.
+
+    ``backend="jax"`` routes batched evaluation through the jit/vmap
+    kernels (:mod:`repro.core.batched_jax`) instead of the NumPy
+    engine; rows agree with the NumPy oracle to <= 1e-6
+    (property-tested).  The jax backend has no reference or simulator
+    path, so ``batched=False`` / ``force_simulator=True`` / grids with
+    simulator-only policies raise ``ValueError`` rather than silently
+    falling back.
     """
+    _check_backend(backend, batched=batched, force_simulator=force_simulator)
     t0 = time.perf_counter()
     rows: list[dict] = []
-    if isinstance(grid, ScenarioGrid) and batched and not force_simulator:
+    if backend == "jax" and isinstance(grid, ScenarioGrid):
+        ev = grid_evaluator(grid)          # raises in _jax_grid_chunks if
+        for part in _jax_grid_chunks(grid, DEFAULT_CHUNK):  # not all batched
+            rows.extend(part)
+        return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
+                           n_analytical=ev.n_fast,
+                           n_timeline=ev.n_timeline,
+                           n_simulated=0, backend=backend)
+    if backend == "numpy" and isinstance(grid, ScenarioGrid) \
+            and batched and not force_simulator:
         ev = grid_evaluator(grid)
         for part in _grid_chunks(grid, warm_iterations, DEFAULT_CHUNK):
             rows.extend(part)
@@ -337,7 +426,8 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
                            n_simulated=len(ev) - ev.n_fast - ev.n_timeline)
     n_fast = n_tl = n_slow = 0
     for r in iter_rows(grid, force_simulator=force_simulator,
-                       warm_iterations=warm_iterations, batched=batched):
+                       warm_iterations=warm_iterations, batched=batched,
+                       backend=backend):
         rows.append(r)
         if r["method"] == "analytical":
             n_fast += 1
@@ -347,13 +437,14 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
             n_slow += 1
     return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
                        n_analytical=n_fast, n_timeline=n_tl,
-                       n_simulated=n_slow)
+                       n_simulated=n_slow, backend=backend)
 
 
 def stream(grid: ScenarioGrid | Iterable[Scenario], *,
            csv_path=None, json_path=None,
            force_simulator: bool = False, warm_iterations: int = 6,
-           batched: bool = True, chunk: int = DEFAULT_CHUNK) -> dict:
+           batched: bool = True, backend: str = "numpy",
+           chunk: int = DEFAULT_CHUNK) -> dict:
     """Evaluate ``grid`` **once** and write the tidy table to
     ``csv_path`` and/or ``json_path`` incrementally — one chunk of
     rows in memory at a time, both formats fed from the same pass.
@@ -366,6 +457,7 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
     """
     if csv_path is None and json_path is None:
         raise ValueError("stream() needs csv_path and/or json_path")
+    _check_backend(backend, batched=batched, force_simulator=force_simulator)
     t0 = time.perf_counter()
     n_fast = n_tl = n_slow = 0
     csv_file = json_file = None
@@ -381,7 +473,7 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
         first = True
         for r in iter_rows(grid, force_simulator=force_simulator,
                            warm_iterations=warm_iterations,
-                           batched=batched, chunk=chunk):
+                           batched=batched, backend=backend, chunk=chunk):
             if csv_file is not None:
                 writer.writerow(r)
             if json_file is not None:
@@ -399,16 +491,16 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
             json_file.write(
                 '\n  ],\n  "n_scenarios": %d,\n  "elapsed_s": %s,\n'
                 '  "n_analytical": %d,\n  "n_timeline": %d,\n'
-                '  "n_simulated": %d\n}\n'
+                '  "n_simulated": %d,\n  "backend": %s\n}\n'
                 % (n_fast + n_tl + n_slow, json.dumps(elapsed),
-                   n_fast, n_tl, n_slow))
+                   n_fast, n_tl, n_slow, json.dumps(backend)))
     finally:
         for f in (csv_file, json_file):
             if f is not None:
                 f.close()
     return {"n_scenarios": n_fast + n_tl + n_slow, "elapsed_s": elapsed,
             "n_analytical": n_fast, "n_timeline": n_tl,
-            "n_simulated": n_slow}
+            "n_simulated": n_slow, "backend": backend}
 
 
 def stream_csv(grid: ScenarioGrid | Iterable[Scenario], path,

@@ -1,0 +1,39 @@
+"""NumPy / jax.numpy namespace dispatch for the shared cost kernels.
+
+The dtype-polymorphic numerics — the collective models in
+:mod:`repro.core.hardware`, the WFBP prefix-max residual in
+:mod:`repro.core.analytical` and the bucket-timeline residual in
+:mod:`repro.core.bucketsim` — are written once against whichever array
+namespace their inputs live in: plain NumPy for the batched oracle
+engine (:mod:`repro.core.batched`) and ``jax.numpy`` for the
+jit/vmap-compiled kernels (:mod:`repro.core.batched_jax`), including
+under tracing (``jax.Array`` covers both concrete device arrays and
+the tracers ``vmap``/``grad``/``jit`` substitute).
+
+jax is resolved lazily through ``sys.modules`` so importing the NumPy
+engine never imports (or initializes) jax.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Any
+
+import numpy as np
+
+
+def is_jax_array(x: Any) -> bool:
+    """True when ``x`` is a jax array *or tracer* — without importing
+    jax if nothing has imported it yet (then nothing can be one)."""
+    jax = sys.modules.get("jax")
+    return jax is not None and isinstance(x, jax.Array)
+
+
+def array_namespace(*args: Any):
+    """``jax.numpy`` if any argument is a jax array/tracer, else
+    :mod:`numpy` — the single dispatch point of the polymorphic
+    kernels."""
+    for a in args:
+        if is_jax_array(a):
+            import jax.numpy as jnp
+            return jnp
+    return np

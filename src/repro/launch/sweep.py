@@ -85,6 +85,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="pin closed-form scenarios to the per-scenario "
                         "reference path instead of the batched kernel "
                         "(slow; the agreement oracle)")
+    p.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                   help="batched kernel backend: 'numpy' (default, the "
+                        "oracle) or 'jax' (jit+vmap kernels, sharded over "
+                        "available devices; incompatible with "
+                        "--per-scenario and --force-simulator)")
     p.add_argument("--stream", action="store_true",
                    help="stream rows straight to --csv/--json without "
                         "buffering the table (huge grids); skips the "
@@ -146,6 +151,16 @@ def main(argv: list[str] | None = None) -> int:
         print("error: --stream requires --csv and/or --json",
               file=sys.stderr)
         return 2
+    if args.backend == "jax" and args.per_scenario:
+        print("error: --backend jax is the batched kernel; --per-scenario "
+              "pins the per-scenario NumPy reference paths (drop one)",
+              file=sys.stderr)
+        return 2
+    if args.backend == "jax" and args.force_simulator:
+        print("error: --backend jax has no event-driven simulator; "
+              "--force-simulator needs --backend numpy",
+              file=sys.stderr)
+        return 2
     print(f"sweep: {len(grid)} scenarios "
           f"({len(grid.workloads)} workloads x {len(grid.clusters)} clusters "
           f"x {len(grid.worker_counts)} sizes x {len(grid.policies)} policies "
@@ -154,7 +169,8 @@ def main(argv: list[str] | None = None) -> int:
     if args.stream:
         summary = stream(grid, csv_path=args.csv, json_path=args.json,
                          force_simulator=args.force_simulator,
-                         batched=not args.per_scenario)
+                         batched=not args.per_scenario,
+                         backend=args.backend)
         dests = ", ".join(p for p in (args.csv, args.json) if p)
         print(f"streamed {summary['n_scenarios']} rows to {dests} "
               f"in {summary['elapsed_s']:.2f}s "
@@ -163,7 +179,7 @@ def main(argv: list[str] | None = None) -> int:
               f"{summary['n_simulated']} simulated)")
         return 0
     result = sweep(grid, force_simulator=args.force_simulator,
-                   batched=not args.per_scenario)
+                   batched=not args.per_scenario, backend=args.backend)
     print(f"evaluated in {result.elapsed_s:.2f}s "
           f"({result.n_analytical} analytical, "
           f"{result.n_timeline} timeline, "

@@ -1,0 +1,104 @@
+"""Shared `hypothesis` strategies for the batched-engine test suite.
+
+The random generators that used to live inline in ``test_batched.py``
+(the WFBP-residual rng loop) and ``test_bucketsim.py`` (``_rand_costs``)
+now live here as composite strategies so every property test draws from
+one vocabulary: random per-layer cost vectors, random gradient-payload
+rows, and random batched-eligible scenario grids (the NumPy ≡ JAX
+differential surface of ``test_batched_jax.py``).
+
+Works under both the real ``hypothesis`` package (CI installs it) and
+the deterministic mini-shim ``conftest.py`` substitutes locally — stick
+to the shim's API subset: ``integers`` / ``floats`` / ``booleans`` /
+``lists`` / ``sampled_from`` / ``composite`` with positional bounds.
+"""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import strategies as st
+
+from repro.core.dag import IterationCosts
+
+#: Bucket-size knobs the DAG builder and the timeline kernel must agree
+#: on: per-layer (None), degenerate-small, paper defaults, giant-fused.
+BUCKET_BYTES_CHOICES = (None, 1.0, 1e6, 25e6, 1e9)
+
+# Axis vocabularies for random scenario grids — every workload provider
+# (cnn:/trace:/llm:) and every built-in batched-eligible policy family.
+GRID_WORKLOADS = ("alexnet", "googlenet", "resnet50",
+                  "trace:alexnet-k80", "llm:gemma3-1b")
+GRID_CLUSTERS = ("k80-pcie-10gbe", "v100-nvlink-ib", "tpu-v5e-pod")
+GRID_WORKERS = (1, 2, 4, 8, 16, 32)
+GRID_POLICIES = ("naive", "cntk", "mxnet", "tensorflow", "caffe-mpi",
+                 "bucketed-1mb", "bucketed-4mb", "bucketed-25mb",
+                 "bucketed-100mb", "priority")
+GRID_COLLECTIVES = ("ring", "tree", "hierarchical")
+GRID_INTERCONNECTS = (None, "ib-100g", "10gbe@bw2@lat0.25",
+                      "nvlink@bw0.5@lat4")
+
+
+@st.composite
+def grad_bytes_row(draw, n_layers: int):
+    """Per-layer gradient payloads: ~half the layers carry a gradient
+    (the rest are parameterless, payload 0), at least one layer does."""
+    row = [draw(st.floats(1e5, 8e7)) if draw(st.booleans()) else 0.0
+           for _ in range(n_layers)]
+    if not any(row):
+        row[0] = 1e6
+    return row
+
+
+@st.composite
+def iteration_costs(draw, max_layers: int = 12, with_comm: bool = False):
+    """Random :class:`~repro.core.dag.IterationCosts` — the generator
+    behind the simulator-agreement and bucket-structure properties
+    (formerly ``test_bucketsim._rand_costs``).  ``with_comm`` fills
+    ``t_c`` on exactly the ``grad_bytes > 0`` layers, matching the
+    ``iteration_costs`` contract the DAG builder relies on."""
+    L = draw(st.integers(1, max_layers))
+    gb = draw(grad_bytes_row(L))
+    t_c = [draw(st.floats(0.01, 5.0)) if b > 0 else 0.0 for b in gb] \
+        if with_comm else [0.0] * L
+    return IterationCosts(
+        t_f=[draw(st.floats(1e-3, 5.0)) for _ in range(L)],
+        t_b=[draw(st.floats(1e-3, 5.0)) for _ in range(L)],
+        t_c=t_c, t_io=draw(st.floats(0.0, 8.0)),
+        t_h2d=draw(st.floats(0.0, 3.0)), t_u=draw(st.floats(0.0, 2.0)),
+        grad_bytes=gb)
+
+
+@st.composite
+def wfbp_layer_times(draw, max_layers: int = 13):
+    """``(t_b, t_c)`` per-layer rows for the WFBP residual property:
+    ~60% of layers communicate, the rest have ``t_c = 0`` (formerly the
+    inline rng loop of ``test_batched.TestVectorizedWfbpResidual``)."""
+    L = draw(st.integers(1, max_layers))
+    t_b = np.array([draw(st.floats(0.0, 5.0)) for _ in range(L)])
+    t_c = np.array([draw(st.floats(0.0, 5.0))
+                    if draw(st.integers(0, 9)) < 6 else 0.0
+                    for _ in range(L)])
+    return t_b, t_c
+
+
+def _axis(draw, choices, max_size):
+    """A sorted, de-duplicated random axis tuple (order-stable so grid
+    cache keys — and therefore drawn examples — are deterministic)."""
+    picked = draw(st.lists(st.sampled_from(choices),
+                           min_size=1, max_size=max_size))
+    return tuple(sorted(set(picked), key=lambda v: str(v)))
+
+
+@st.composite
+def scenario_grids(draw, max_per_axis: int = 2):
+    """Random batched-eligible :class:`~repro.core.scenarios.ScenarioGrid`
+    spanning every provider, policy family, collective and interconnect
+    preset — the NumPy ≡ JAX differential property's input space."""
+    from repro.core.scenarios import ScenarioGrid
+
+    return ScenarioGrid(
+        workloads=_axis(draw, GRID_WORKLOADS, max_per_axis),
+        clusters=_axis(draw, GRID_CLUSTERS, max_per_axis),
+        worker_counts=_axis(draw, GRID_WORKERS, max_per_axis),
+        policies=_axis(draw, GRID_POLICIES, max_per_axis),
+        collectives=_axis(draw, GRID_COLLECTIVES, max_per_axis),
+        interconnects=_axis(draw, GRID_INTERCONNECTS, max_per_axis))

@@ -7,6 +7,8 @@ import json
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from strategies import wfbp_layer_times
 
 from repro.core import analytical as A
 from repro.core import hardware as HW
@@ -236,16 +238,13 @@ class TestMeasuredComputeWithoutMeasuredIO:
 
 
 class TestVectorizedWfbpResidual:
-    def test_prefix_max_matches_scalar_loop(self):
-        rng = np.random.default_rng(11)
-        for _ in range(200):
-            L = int(rng.integers(1, 14))
-            t_b = rng.uniform(0.0, 5.0, L)
-            t_c = np.where(rng.random(L) > 0.4,
-                           rng.uniform(0.0, 5.0, L), 0.0)
-            got = A.non_overlapped_comm_batch(t_b[None, :], t_c[None, :])[0]
-            want = A.non_overlapped_comm(list(t_b), list(t_c))
-            assert got == pytest.approx(want, rel=1e-12, abs=1e-15)
+    @settings(max_examples=200, deadline=None)
+    @given(wfbp_layer_times())
+    def test_prefix_max_matches_scalar_loop(self, times):
+        t_b, t_c = times
+        got = A.non_overlapped_comm_batch(t_b[None, :], t_c[None, :])[0]
+        want = A.non_overlapped_comm(list(t_b), list(t_c))
+        assert got == pytest.approx(want, rel=1e-12, abs=1e-15)
 
     def test_zero_padding_is_neutral(self):
         t_b = np.array([[1.0, 2.0, 3.0]])

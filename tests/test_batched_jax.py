@@ -1,0 +1,308 @@
+"""JAX-native batched sweep kernels (ISSUE 6): differential agreement
+with the NumPy oracle on every built-in grid and on random grids,
+degenerate-scenario identities, gradient correctness against central
+finite differences, sharded-mesh equivalence, and the explicit backend
+routing errors."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from strategies import scenario_grids
+
+from repro.core import batched_jax as BJ
+from repro.core.batched import eval_scenarios, grid_evaluator
+from repro.core.policies import Policy
+from repro.core.scenarios import (Scenario, ScenarioGrid, default_grid,
+                                  frontier_grid, mixed_grid, resolve_cluster)
+from repro.core.sweep import BACKENDS, iter_rows, stream, sweep
+from repro.core.workloads import resolve_workload
+
+NUMERIC = ("iteration_time_s", "samples_per_sec", "speedup",
+           "t_comm_s", "t_comp_s")
+LABELS = ("workload", "cluster", "n_workers", "policy", "collective",
+          "interconnect", "batch_per_gpu", "method")
+
+TIMELINE_POLICIES = ("bucketed-1mb", "bucketed-4mb", "bucketed-25mb",
+                     "bucketed-100mb", "priority")
+
+
+def assert_rows_agree(jax_rows, np_rows, rel=1e-6):
+    """Vectorized column-wise agreement: exact labels, <= rel numerics."""
+    assert len(jax_rows) == len(np_rows) > 0
+    for key in LABELS:
+        assert [r[key] for r in jax_rows] == [r[key] for r in np_rows], key
+    for key in NUMERIC:
+        a = np.array([r[key] for r in jax_rows], dtype=np.float64)
+        b = np.array([r[key] for r in np_rows], dtype=np.float64)
+        np.testing.assert_allclose(a, b, rtol=rel, atol=1e-12, err_msg=key)
+
+
+def assert_grid_agrees(grid, rel=1e-6):
+    rj = sweep(grid, backend="jax")
+    rn = sweep(grid, backend="numpy")
+    assert rj.backend == "jax" and rj.n_simulated == 0
+    assert rj.n_analytical == rn.n_analytical
+    assert rj.n_timeline == rn.n_timeline
+    assert_rows_agree(rj.rows, rn.rows, rel=rel)
+
+
+class TestBuiltinGridAgreement:
+    """ISSUE-6 acceptance: the jit/vmap kernels agree with the NumPy
+    oracle to <= 1e-6 relative on every built-in grid (plus the
+    timeline-policy variants of default/mixed)."""
+
+    def test_default_grid(self):
+        assert_grid_agrees(default_grid())
+
+    def test_mixed_grid_spans_all_providers(self):
+        g = mixed_grid()
+        assert any(w.startswith("trace:") for w in g.workloads)
+        assert any(w.startswith("llm:") for w in g.workloads)
+        assert_grid_agrees(g)
+
+    def test_frontier_grid(self):
+        assert_grid_agrees(frontier_grid())
+
+    def test_default_grid_bucketed_priority(self):
+        assert_grid_agrees(dataclasses.replace(
+            default_grid(), policies=TIMELINE_POLICIES))
+
+    def test_eval_scenarios_jax_matches_numpy(self):
+        scenarios = [
+            Scenario("resnet50", "v100-nvlink-ib", 16, "caffe-mpi",
+                     collective=c, interconnect=ic)
+            for c in ("ring", "tree", "hierarchical")
+            for ic in (None, "ib-100g@bw2@lat0.25")
+        ] + [
+            Scenario("trace:alexnet-k80", "k80-pcie-10gbe", 8, p)
+            for p in ("naive", "bucketed-25mb", "priority")
+        ] + [
+            Scenario("llm:gemma3-1b", "tpu-v5e-pod", 4, "tensorflow",
+                     batch_per_gpu=8),
+        ]
+        assert_rows_agree(BJ.eval_scenarios_jax(scenarios),
+                          eval_scenarios(scenarios))
+
+
+class TestRandomGridProperty:
+    @settings(max_examples=10, deadline=None)
+    @given(scenario_grids())
+    def test_numpy_equals_jax_on_random_grids(self, grid):
+        assert_grid_agrees(grid)
+
+
+class TestDegenerateScenarios:
+    def test_single_worker_zero_comm(self):
+        """n_workers=1: no collective traffic on any backend/policy."""
+        grid = ScenarioGrid(workloads=("alexnet",),
+                            clusters=("k80-pcie-10gbe",), worker_counts=(1,),
+                            policies=TIMELINE_POLICIES + ("caffe-mpi",))
+        r = sweep(grid, backend="jax")
+        for row in r.rows:
+            assert row["t_comm_s"] == 0.0
+            assert row["speedup"] == pytest.approx(1.0)
+        times = {row["policy"]: row["iteration_time_s"] for row in r.rows}
+        for name in TIMELINE_POLICIES:
+            assert times[name] == pytest.approx(times["caffe-mpi"],
+                                                rel=1e-12)
+
+    def test_one_giant_bucket_equals_fused_comm_at_end(self):
+        """googlenet (~28 MB of gradients) under bucketed-100mb: one
+        bucket released by layer-1's backward, so the jax row must be
+        max(io+h2d, comp + fused_allreduce + t_u) exactly."""
+        s = Scenario("googlenet", "v100-nvlink-ib", 16, "bucketed-100mb")
+        tab = resolve_workload(s.workload)
+        assert float(tab.grad_bytes.sum()) < 100e6
+        cluster = resolve_cluster(s)
+        costs = tab.iteration_costs(cluster, tab.batch_default, 16)
+        dur = cluster.allreduce_time(float(tab.grad_bytes.sum()), 16)
+        want = max(costs.t_io + costs.t_h2d,
+                   float(np.sum(costs.t_f) + np.sum(costs.t_b))
+                   + dur + costs.t_u)
+        [row] = BJ.eval_scenarios_jax([s])
+        assert row["method"] == "timeline"
+        assert row["iteration_time_s"] == pytest.approx(want, rel=1e-9)
+
+    def test_one_byte_buckets_equal_per_layer_wfbp(self):
+        """bucket_bytes below every layer payload ≡ caffe-mpi's exact
+        per-layer closed form, on the jax backend too."""
+        from repro.core import policies as P
+        P.ALL_POLICIES["_bucket1b"] = Policy(
+            "_bucket1b", overlap_io=True, h2d_early=True, overlap_comm=True,
+            bucket_bytes=1.0)
+        try:
+            grid = ScenarioGrid(workloads=("alexnet", "resnet50"),
+                                clusters=("v100-nvlink-ib",),
+                                worker_counts=(4, 16),
+                                policies=("_bucket1b", "caffe-mpi"))
+            r = sweep(grid, backend="jax")
+            b1 = r.filter(policy="_bucket1b")
+            cm = r.filter(policy="caffe-mpi")
+            assert len(b1) == len(cm) > 0
+            for a, b in zip(b1, cm):
+                assert a["method"] == "timeline" and b["method"] == "analytical"
+                assert a["iteration_time_s"] == pytest.approx(
+                    b["iteration_time_s"], rel=1e-9)
+        finally:
+            del P.ALL_POLICIES["_bucket1b"]
+
+
+class TestGradientCorrectness:
+    """jax.grad through the full kernel vs central finite differences
+    on the NumPy oracle (which rebuilds bucket partitions per call)."""
+
+    @staticmethod
+    def _fd_grad(grid, p0, key, rel_eps=1e-5):
+        g = np.zeros_like(p0[key])
+        for i in range(g.size):
+            eps = abs(float(p0[key].ravel()[i])) * rel_eps or 1e-9
+            hi = {k: v.copy() for k, v in p0.items()}
+            lo = {k: v.copy() for k, v in p0.items()}
+            hi[key].ravel()[i] += eps
+            lo[key].ravel()[i] -= eps
+            g.ravel()[i] = (BJ.numpy_iteration_times(grid, hi).sum()
+                            - BJ.numpy_iteration_times(grid, lo).sum()) \
+                / (2 * eps)
+        return g
+
+    def _check_family(self, policies):
+        grid = ScenarioGrid(workloads=("resnet50",),
+                            clusters=("v100-nvlink-ib",), worker_counts=(16,),
+                            policies=policies,
+                            collectives=("ring", "hierarchical"))
+        p0 = BJ.default_params(grid)
+        got = BJ.grad_iteration_time(grid)
+        # sanity: the jax path itself matches the oracle at p0
+        np.testing.assert_allclose(
+            np.asarray(BJ.jax_grid_evaluator(grid)
+                       .columns()["iteration_time_s"]),
+            BJ.numpy_iteration_times(grid), rtol=1e-9)
+        for key in ("intra_bw", "intra_lat", "inter_bw", "inter_lat"):
+            want = self._fd_grad(grid, p0, key)
+            np.testing.assert_allclose(got[key], want, rtol=1e-3,
+                                       atol=1e-12, err_msg=key)
+        # at least one link parameter must actually matter
+        assert any(np.abs(got[k]).max() > 0
+                   for k in ("intra_bw", "inter_bw"))
+        return grid, p0, got
+
+    def test_closed_form_family(self):
+        self._check_family(("caffe-mpi", "mxnet", "naive"))
+
+    def test_timeline_family_and_flat_bucket_axis(self):
+        grid, p0, got = self._check_family(
+            ("bucketed-4mb", "bucketed-25mb", "priority"))
+        # iteration time is piecewise constant in bucket_bytes: the
+        # exact gradient is 0 a.e., and the FD twin (which *rebuilds*
+        # the partition) recovers the same 0 inside a partition cell
+        assert p0["bucket_bytes"].size > 0
+        want = self._fd_grad(grid, p0, "bucket_bytes")
+        np.testing.assert_allclose(got["bucket_bytes"], 0.0, atol=1e-12)
+        np.testing.assert_allclose(want, 0.0, atol=1e-12)
+
+    def test_unknown_param_key_rejected(self):
+        f, p0 = BJ.iteration_time_fn(default_grid())
+        with pytest.raises(ValueError, match="unknown param keys"):
+            f({**p0, "warp_drive": np.ones(3)})
+
+
+class TestShardedMesh:
+    def test_explicit_mesh_matches_unsharded(self):
+        import jax
+        from repro.launch.mesh import make_dp_mesh
+
+        grid = dataclasses.replace(default_grid(),
+                                   worker_counts=(2, 7, 16))  # odd S: pads
+        mesh = make_dp_mesh(len(jax.devices()))
+        sharded = BJ.JaxGridEvaluator(grid, mesh=mesh)
+        plain = BJ.JaxGridEvaluator(grid, mesh=None)
+        assert sharded.mesh is mesh and plain.mesh is None
+        a, b = sharded.columns(), plain.columns()
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+class TestBackendRouting:
+    """Satellite 4: invalid backend combinations raise loudly — the jax
+    backend never falls back to a NumPy path silently."""
+
+    def test_unknown_backend(self):
+        for fn in (lambda: sweep(default_grid(), backend="torch"),
+                   lambda: list(iter_rows(default_grid(), backend="torch"))):
+            with pytest.raises(ValueError, match="unknown backend"):
+                fn()
+        assert "jax" in BACKENDS and "numpy" in BACKENDS
+
+    def test_jax_rejects_batched_false(self):
+        with pytest.raises(ValueError, match="batched=False"):
+            sweep(default_grid(), backend="jax", batched=False)
+        with pytest.raises(ValueError, match="batched=False"):
+            list(iter_rows(default_grid(), backend="jax", batched=False))
+
+    def test_jax_rejects_force_simulator(self):
+        with pytest.raises(ValueError, match="force_simulator"):
+            sweep(default_grid(), backend="jax", force_simulator=True)
+        with pytest.raises(ValueError, match="force_simulator"):
+            stream(default_grid(), json_path="/dev/null", backend="jax",
+                   force_simulator=True)
+
+    def test_jax_rejects_simulator_only_policies(self):
+        from repro.core import policies as P
+        # unstudied flag combination: neither closed nor timeline form
+        P.ALL_POLICIES["_simonly"] = Policy(
+            "_simonly", overlap_io=False, overlap_comm=True,
+            bucket_bytes=25e6)
+        try:
+            grid = ScenarioGrid(workloads=("alexnet",),
+                                clusters=("v100-nvlink-ib",),
+                                worker_counts=(2,),
+                                policies=("caffe-mpi", "_simonly"))
+            with pytest.raises(ValueError, match="_simonly"):
+                sweep(grid, backend="jax")
+            with pytest.raises(ValueError, match="_simonly"):
+                BJ.eval_scenarios_jax(grid.expand())
+            # the NumPy backend happily interleaves the simulator
+            r = sweep(grid, backend="numpy")
+            assert r.n_simulated == 1 and r.backend == "numpy"
+        finally:
+            del P.ALL_POLICIES["_simonly"]
+
+    def test_stream_json_carries_backend(self, tmp_path):
+        path = tmp_path / "s.json"
+        summary = stream(ScenarioGrid(workloads=("alexnet",),
+                                      worker_counts=(2,)),
+                         json_path=str(path), backend="jax")
+        assert summary["backend"] == "jax"
+        doc = json.loads(path.read_text())
+        assert doc["backend"] == "jax"
+        assert doc["n_simulated"] == 0
+
+    def test_sweep_result_json_carries_backend(self, tmp_path):
+        r = sweep(ScenarioGrid(workloads=("alexnet",), worker_counts=(2,)),
+                  backend="jax")
+        path = tmp_path / "r.json"
+        r.to_json(str(path))
+        assert json.loads(path.read_text())["backend"] == "jax"
+
+
+class TestKernelSurface:
+    def test_columns_slice_matches_numpy_gridrun(self):
+        """The kernel-only surfaces the benchmark times are comparable:
+        jax JaxGridRun.columns_slice vs NumPy GridRun.columns_slice."""
+        grid = default_grid()
+        jr = BJ.jax_grid_evaluator(grid).run()
+        nr = grid_evaluator(grid).run()
+        a = jr.columns_slice(7, 203)
+        b = nr.columns_slice(7, 203)
+        for k in NUMERIC:
+            np.testing.assert_allclose(a[k], b[k], rtol=1e-6, err_msg=k)
+        assert a["method"] == ["analytical"] * (203 - 7)
+
+    def test_empty_grid_columns(self):
+        grid = dataclasses.replace(default_grid(), worker_counts=())
+        jev = BJ.JaxGridEvaluator(grid)
+        cols = jev.columns()
+        assert all(v.size == 0 for v in cols.values())

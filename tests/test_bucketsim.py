@@ -3,10 +3,11 @@ event-driven oracle on every built-in grid, degenerate bucket sizes,
 PRIORITY <= FIFO on the batched path, and the incremental / auto-steady
 simulator."""
 import dataclasses
-import random
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
+from strategies import BUCKET_BYTES_CHOICES, iteration_costs
 
 from repro.core import analytical as A
 from repro.core import bucketsim
@@ -25,36 +26,22 @@ TIMELINE_POLICIES = ("bucketed-1mb", "bucketed-4mb", "bucketed-25mb",
                      "bucketed-100mb", "priority")
 
 
-def _rand_costs(rng, L=None, max_layers=12):
-    L = L or rng.randint(1, max_layers)
-    gb = [rng.choice([0.0, rng.uniform(1e5, 8e7)]) for _ in range(L)]
-    if not any(gb):
-        gb[0] = 1e6
-    return IterationCosts(
-        t_f=[rng.uniform(1e-3, 5.0) for _ in range(L)],
-        t_b=[rng.uniform(1e-3, 5.0) for _ in range(L)],
-        t_c=[0.0] * L, t_io=rng.uniform(0, 8), t_h2d=rng.uniform(0, 3),
-        t_u=rng.uniform(0, 2), grad_bytes=gb)
-
-
 class TestBucketStructure:
-    def test_matches_dag_bucketize(self):
+    @settings(max_examples=100, deadline=None)
+    @given(iteration_costs(with_comm=True),
+           st.sampled_from(BUCKET_BYTES_CHOICES))
+    def test_matches_dag_bucketize(self, costs, beta):
         """bucket_layers mirrors the DAG builder's boundaries exactly:
-        same payload sums, same release (earliest-member) layers."""
-        rng = random.Random(5)
-        for _ in range(100):
-            costs = _rand_costs(rng)
-            # t_c > 0 exactly where grad_bytes > 0, as in iteration_costs
-            costs = dataclasses.replace(
-                costs, t_c=[1.0 if b > 0 else 0.0 for b in costs.grad_bytes])
-            beta = rng.choice([None, 1.0, 1e6, 25e6, 1e9])
-            pol = Policy("x", overlap_comm=True, bucket_bytes=beta)
-            want = [(sum(costs.grad_bytes[m] for m in members), members[-1])
-                    for _, members, _ in _bucketize(costs, pol, None)]
-            got = bucketsim.bucket_layers(costs.grad_bytes, beta)
-            assert len(got) == len(want)
-            for (gb, gl), (wb, wl) in zip(got, want):
-                assert gb == pytest.approx(wb) and gl == wl
+        same payload sums, same release (earliest-member) layers.
+        (with_comm puts t_c > 0 exactly where grad_bytes > 0, as in
+        iteration_costs.)"""
+        pol = Policy("x", overlap_comm=True, bucket_bytes=beta)
+        want = [(sum(costs.grad_bytes[m] for m in members), members[-1])
+                for _, members, _ in _bucketize(costs, pol, None)]
+        got = bucketsim.bucket_layers(costs.grad_bytes, beta)
+        assert len(got) == len(want)
+        for (gb, gl), (wb, wl) in zip(got, want):
+            assert gb == pytest.approx(wb) and gl == wl
 
     def test_table_pads_ragged_workloads(self):
         grad = np.array([[1e6, 0.0, 2e6], [5e6, 5e6, 5e6]])
@@ -70,23 +57,21 @@ class TestBucketStructure:
 
 
 class TestTimelineResidual:
-    def test_per_layer_buckets_reduce_to_wfbp_residual(self):
+    @settings(max_examples=100, deadline=None)
+    @given(iteration_costs(with_comm=True))
+    def test_per_layer_buckets_reduce_to_wfbp_residual(self, costs):
         """bucket_bytes smaller than every layer payload ≡ per-layer
         WFBP: the residual is exactly non_overlapped_comm_batch."""
-        rng = np.random.default_rng(7)
-        for _ in range(100):
-            L = int(rng.integers(1, 12))
-            t_b = rng.uniform(0.01, 5.0, (1, L))
-            grad = np.where(rng.random(L) > 0.3,
-                            rng.uniform(1e5, 1e8, L), 0.0)[None, :]
-            t_c = np.where(grad > 0, rng.uniform(0.01, 5.0, (1, L)), 0.0)
-            bt = bucketsim.bucket_table(grad, 1.0)   # 1 byte: never fuses
-            # gather this workload's per-layer comm times into bucket order
-            dur = np.where(bt.mask, t_c[0][bt.release_layer], 0.0)
-            got = bucketsim.timeline_residual(
-                t_b, dur, bt.release_layer, bt.mask)[0]
-            want = A.non_overlapped_comm_batch(t_b, t_c)[0]
-            assert got == pytest.approx(want, rel=1e-12, abs=1e-15)
+        t_b = np.asarray(costs.t_b)[None, :]
+        t_c = np.asarray(costs.t_c)[None, :]
+        grad = np.asarray(costs.grad_bytes)[None, :]
+        bt = bucketsim.bucket_table(grad, 1.0)       # 1 byte: never fuses
+        # gather this workload's per-layer comm times into bucket order
+        dur = np.where(bt.mask, t_c[0][bt.release_layer], 0.0)
+        got = bucketsim.timeline_residual(
+            t_b, dur, bt.release_layer, bt.mask)[0]
+        want = A.non_overlapped_comm_batch(t_b, t_c)[0]
+        assert got == pytest.approx(want, rel=1e-12, abs=1e-15)
 
     def test_single_bucket_with_layer1_comm_is_comm_at_end(self):
         """One giant bucket whose earliest member is layer 1 releases
@@ -259,24 +244,23 @@ class TestIncrementalSimulator:
     """Satellite: the heap-based scheduler and the one-iteration-at-a-
     time extension produce exactly the monolithic schedule."""
 
-    def test_incremental_matches_monolithic(self):
-        rng = random.Random(11)
-        for _ in range(40):
-            costs = _rand_costs(rng, max_layers=6)
-            n = rng.randint(1, 4)
-            pol = ALL_POLICIES[rng.choice(sorted(ALL_POLICIES))]
-            iters = rng.randint(1, 4)
-            g = build_ssgd_dag(costs, n, pol, n_iterations=iters)
-            prio = frozenset(["net"]) if pol.priority_comm else None
-            mono = simulate(g, prio)
-            inc = simulate_policy(costs, n, pol, n_iterations=iters)
-            assert len(mono.schedule) == len(inc.schedule)
-            for tid, s in mono.schedule.items():
-                assert inc.schedule[tid].start == s.start
-                assert inc.schedule[tid].finish == s.finish
+    @settings(max_examples=40, deadline=None)
+    @given(iteration_costs(max_layers=6), st.integers(1, 4),
+           st.sampled_from(sorted(ALL_POLICIES)), st.integers(1, 4))
+    def test_incremental_matches_monolithic(self, costs, n, pol_name, iters):
+        pol = ALL_POLICIES[pol_name]
+        g = build_ssgd_dag(costs, n, pol, n_iterations=iters)
+        prio = frozenset(["net"]) if pol.priority_comm else None
+        mono = simulate(g, prio)
+        inc = simulate_policy(costs, n, pol, n_iterations=iters)
+        assert len(mono.schedule) == len(inc.schedule)
+        for tid, s in mono.schedule.items():
+            assert inc.schedule[tid].start == s.start
+            assert inc.schedule[tid].finish == s.finish
 
-    def test_extend_requires_run_between_iterations(self):
-        costs = _rand_costs(random.Random(1), L=3)
+    @settings(max_examples=5, deadline=None)
+    @given(iteration_costs(max_layers=3))
+    def test_extend_requires_run_between_iterations(self, costs):
         b = SSGDDagBuilder(costs, 2, CAFFE_MPI)
         sim = Simulation(b.dag)
         b.add_iteration()
@@ -286,16 +270,15 @@ class TestIncrementalSimulator:
 
 
 class TestAutoSteady:
-    def test_auto_steady_matches_full_warmup(self):
-        rng = random.Random(23)
-        for _ in range(30):
-            costs = _rand_costs(rng, max_layers=8)
-            n = rng.randint(1, 4)
-            pol = ALL_POLICIES[rng.choice(sorted(ALL_POLICIES))]
-            full = simulate_policy(costs, n, pol, n_iterations=8) \
-                .steady_iteration_time()
-            auto = simulate_steady(costs, n, pol, n_iterations=8)
-            assert auto == pytest.approx(full, rel=1e-9)
+    @settings(max_examples=30, deadline=None)
+    @given(iteration_costs(max_layers=8), st.integers(1, 4),
+           st.sampled_from(sorted(ALL_POLICIES)))
+    def test_auto_steady_matches_full_warmup(self, costs, n, pol_name):
+        pol = ALL_POLICIES[pol_name]
+        full = simulate_policy(costs, n, pol, n_iterations=8) \
+            .steady_iteration_time()
+        auto = simulate_steady(costs, n, pol, n_iterations=8)
+        assert auto == pytest.approx(full, rel=1e-9)
 
     def test_n_iterations_used_exposed_and_capped(self):
         costs = IterationCosts(t_f=[1.0, 1.0], t_b=[1.0, 1.0],
@@ -310,9 +293,10 @@ class TestAutoSteady:
         assert auto.steady_iteration_time() == pytest.approx(
             full.steady_iteration_time(), rel=1e-9)
 
-    def test_cap_respected_when_not_converged(self):
+    @settings(max_examples=5, deadline=None)
+    @given(iteration_costs(max_layers=4))
+    def test_cap_respected_when_not_converged(self, costs):
         # io-bound pipeline with a long transient still stops at the cap
-        costs = _rand_costs(random.Random(3), L=4)
         res = simulate_policy(costs, 3, get_policy("mxnet"),
                               n_iterations=2, auto_steady=True)
         assert res.n_iterations_used <= 2
