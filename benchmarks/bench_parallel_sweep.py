@@ -1,0 +1,101 @@
+"""Sharded sweep execution: serial vs ``jobs=N`` process-pool
+throughput on the frontier grid, plus the exactness check that makes
+sharding safe to enable by default.
+
+    PYTHONPATH=src python -m benchmarks.bench_parallel_sweep
+    PYTHONPATH=src python -m benchmarks.bench_parallel_sweep --smoke
+
+Prints the shared ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_parallel.json``: per job count, steady-state ``sweep(jobs=N)``
+throughput (pool spawn and per-worker evaluator build are paid in the
+warm-up run) and the scaling ratio against serial.  Every parallel run
+is also compared against the serial result **bit for bit** — the
+chunk-sharded kernel is pure elementwise arithmetic per scenario
+point, so span boundaries cannot change any value, and this benchmark
+fails loudly if that ever stops being true.
+
+On a single-core runner (the CI box) the recorded "scaling" is the
+pool's overhead floor, not a speedup — which is exactly why the
+numbers are recorded per machine in the JSON rather than gated.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.resulttable import COLUMNS
+from repro.core.scenarios import default_grid, frontier_grid
+from repro.core.sweep import sweep
+
+
+def _tables_equal(a: dict, b: dict) -> bool:
+    return all(np.array_equal(a[k], b[k]) for k in COLUMNS)
+
+
+def _time_jobs(grid, jobs: int | None, repeats: int) -> dict:
+    n = len(grid)
+    sweep(grid, jobs=jobs)                 # warm pool + worker evaluators
+    elapsed = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = sweep(grid, jobs=jobs)
+        elapsed.append(time.perf_counter() - t0)
+    elapsed.sort()
+    med = elapsed[len(elapsed) // 2]
+    return {"n_scenarios": n, "elapsed_s": med,
+            "scenarios_per_sec": n / med, "columns": result.columns}
+
+
+def run(smoke: bool = False, json_path: str = "BENCH_parallel.json") -> dict:
+    repeats = 1 if smoke else 5
+    grid = default_grid() if smoke else frontier_grid()
+    cores = os.cpu_count() or 1
+    job_counts = sorted({2, cores} - {1})
+    report: dict = {"smoke": smoke, "repeats": repeats, "cores": cores,
+                    "n_scenarios": len(grid)}
+    serial = _time_jobs(grid, None, repeats)
+    serial_columns = serial.pop("columns")
+    report["serial"] = serial
+    row("parallel_sweep_serial", serial["elapsed_s"] * 1e6,
+        f"{serial['scenarios_per_sec']:.0f} scenarios/s "
+        f"({len(grid)} scenarios)")
+    for jobs in job_counts:
+        r = _time_jobs(grid, jobs, repeats)
+        if not _tables_equal(serial_columns, r.pop("columns")):
+            raise AssertionError(
+                f"jobs={jobs} result differs from serial — sharding "
+                f"changed the output")
+        r["scaling_vs_serial"] = serial["elapsed_s"] / r["elapsed_s"]
+        r["exact_match"] = True
+        report[f"jobs{jobs}"] = r
+        row(f"parallel_sweep_jobs{jobs}", r["elapsed_s"] * 1e6,
+            f"{r['scenarios_per_sec']:.0f} scenarios/s "
+            f"({r['scaling_vs_serial']:.2f}x serial, bit-identical)")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {json_path}", flush=True)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single repeat on the 540-scenario default "
+                         "grid (CI mode)")
+    ap.add_argument("--json", default="BENCH_parallel.json", metavar="PATH",
+                    help="output JSON path ('' to skip)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

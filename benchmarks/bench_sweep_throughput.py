@@ -23,9 +23,20 @@ Each grid also records the **jax backend** (ISSUE 6): end-to-end
 backends (warmed, jit compilation excluded), their speedup ratio, and
 the max relative numeric disagreement — ``--assert-jax-floor`` gates
 CI on kernel speedup >= X on the frontier grid and agreement <= 1e-6
-everywhere.  ``--smoke`` does one timed repeat per grid and shrinks
-the bucketed/priority grid — the CI regression gate (pair with
-``--assert-timeline-floor`` / ``--assert-jax-floor``).
+everywhere.
+
+The columnar-pipeline metrics (ISSUE 7): per grid, the
+``e2e_over_kernel`` gap ratio (how much of a full ``sweep()`` is not
+the kernel — tidy-table assembly used to cost more than the kernel
+itself; the columnar result path holds it near 1) and ``jobs2``
+process-pool throughput (recorded, not gated: one CI core has nothing
+to fan out over).  ``--assert-e2e-floor R`` gates the frontier grid's
+end-to-end throughput at >= R scenarios/s on both backends.
+
+``--smoke`` does one timed repeat per grid and shrinks the
+bucketed/priority grid — the CI regression gate (pair with
+``--assert-timeline-floor`` / ``--assert-jax-floor`` /
+``--assert-e2e-floor``).
 """
 from __future__ import annotations
 
@@ -36,7 +47,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import enable_jax_compilation_cache, row
 from repro.core.batched import grid_evaluator
 from repro.core.batched_jax import jax_grid_evaluator
 from repro.core.hardware import COLLECTIVE_ALGORITHMS
@@ -65,19 +76,21 @@ def bucketed_priority_grid(smoke: bool = False) -> ScenarioGrid:
 
 
 def _time_sweep(grid, repeats: int, batched: bool,
-                backend: str = "numpy") -> dict:
+                backend: str = "numpy", jobs: int | None = None) -> dict:
     n = len(grid)
     # Warm the memoized workload tables + prepared grid structure via
     # the batched path regardless of which side is being timed: the
     # per-scenario paths share the same table memo, and replaying the
     # full simulator sweep just to warm it would double the dominant
     # cost of the bucketed/priority slow side.  (On the jax backend
-    # the warm-up run also pays the one-off jit compilation.)
-    sweep(grid, batched=True, backend=backend)
+    # the warm-up run also pays the one-off jit compilation; under
+    # jobs>1 it also pays the one-off pool spawn + per-worker
+    # evaluator build, so the timed repeats see the steady state.)
+    sweep(grid, batched=True, backend=backend, jobs=jobs)
     elapsed = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        result = sweep(grid, batched=batched, backend=backend)
+        result = sweep(grid, batched=batched, backend=backend, jobs=jobs)
         elapsed.append(time.perf_counter() - t0)
     elapsed.sort()
     med = elapsed[len(elapsed) // 2]
@@ -130,6 +143,7 @@ def _time_kernels(grid, repeats: int) -> dict:
 
 
 def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
+    enable_jax_compilation_cache()
     repeats = 1 if smoke else 5
     grids = {"default_grid": default_grid(), "mixed_grid": mixed_grid(),
              "frontier_grid": frontier_grid(),
@@ -149,15 +163,34 @@ def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
         r["jax_kernel"] = kern["jax_kernel"]
         r["jax_vs_numpy_kernel_speedup"] = kern["jax_vs_numpy_kernel_speedup"]
         r["agreement_max_rel"] = kern["agreement_max_rel"]
+        # end-to-end / kernel-only gap: how much of a full sweep() is
+        # NOT the kernel (tidy-table assembly, counts, result object).
+        # The columnar pipeline exists to drive this toward 1.
+        r["e2e_over_kernel"] = {
+            "numpy": (r["batched"]["elapsed_s"]
+                      / kern["numpy_kernel"]["elapsed_s"]),
+            "jax": (r["jax"]["elapsed_s"]
+                    / kern["jax_kernel"]["elapsed_s"]),
+        }
         row(f"sweep_{name}_numpy_kernel",
             kern["numpy_kernel"]["elapsed_s"] * 1e6,
             f"{kern['numpy_kernel']['scenarios_per_sec']:.0f} scenarios/s "
-            f"kernel only")
+            f"kernel only (e2e gap "
+            f"{r['e2e_over_kernel']['numpy']:.2f}x)")
         row(f"sweep_{name}_jax_kernel",
             kern["jax_kernel"]["elapsed_s"] * 1e6,
             f"{kern['jax_kernel']['scenarios_per_sec']:.0f} scenarios/s "
             f"kernel only ({kern['jax_vs_numpy_kernel_speedup']:.1f}x numpy, "
-            f"max rel diff {kern['agreement_max_rel']:.1e})")
+            f"max rel diff {kern['agreement_max_rel']:.1e}, e2e gap "
+            f"{r['e2e_over_kernel']['jax']:.2f}x)")
+        # sharded execution: same grid through the process pool.  On a
+        # single-core runner this records the overhead floor rather
+        # than a speedup; the scaling story needs cores to fan out
+        # over, which is why it is recorded, not gated.
+        r["jobs2"] = _time_sweep(grid, repeats, batched=True, jobs=2)
+        row(f"sweep_{name}_jobs2", r["jobs2"]["elapsed_s"] * 1e6,
+            f"{r['jobs2']['scenarios_per_sec']:.0f} scenarios/s "
+            f"(2 worker processes)")
         # The per-scenario reference pass on the frontier grid is
         # skipped outright: half its 51 840 scenarios are
         # schedule-dependent, so the slow side would list-schedule
@@ -204,6 +237,13 @@ def main(argv=None) -> int:
                          "gate; 1 on the single-core CI runner — XLA "
                          "only pulls ahead of the BLAS-backed NumPy "
                          "kernel with cores/devices to fan out over)")
+    ap.add_argument("--assert-e2e-floor", type=float, default=None,
+                    metavar="R",
+                    help="exit non-zero unless the frontier grid's "
+                         "end-to-end batched sweep() throughput is >= R "
+                         "scenarios/s on BOTH backends (the columnar-"
+                         "pipeline CI gate: tidy-table assembly may not "
+                         "reopen the e2e/kernel gap)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     report = run(smoke=args.smoke, json_path=args.json)
@@ -232,6 +272,20 @@ def main(argv=None) -> int:
             return 1
         print(f"# jax backend gate: {got:.2f}x >= "
               f"{args.assert_jax_floor:g}x, max rel diff {worst:.1e}")
+    if args.assert_e2e_floor is not None:
+        fr = report["frontier_grid"]
+        for backend, key in (("numpy", "batched"), ("jax", "jax")):
+            got = fr[key]["scenarios_per_sec"]
+            if got < args.assert_e2e_floor:
+                print(f"error: frontier-grid {backend} end-to-end "
+                      f"throughput {got:,.0f}/s below the "
+                      f"{args.assert_e2e_floor:,.0f}/s floor",
+                      file=sys.stderr)
+                return 1
+        print(f"# e2e throughput gate: numpy "
+              f"{fr['batched']['scenarios_per_sec']:,.0f}/s, jax "
+              f"{fr['jax']['scenarios_per_sec']:,.0f}/s >= "
+              f"{args.assert_e2e_floor:,.0f}/s")
     return 0
 
 

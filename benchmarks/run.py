@@ -11,7 +11,7 @@ import sys
 import traceback
 
 SUITES = ("fig2", "fig3", "fig4", "table6", "kernels", "roofline", "sweep",
-          "calibration")
+          "parallel", "calibration")
 
 
 def main(argv=None) -> int:
@@ -41,6 +41,8 @@ def main(argv=None) -> int:
                 from benchmarks.bench_roofline import run
             elif name == "sweep":
                 from benchmarks.bench_sweep_throughput import run
+            elif name == "parallel":
+                from benchmarks.bench_parallel_sweep import run
             elif name == "calibration":
                 from benchmarks.bench_model_vs_measured import run
             run()

@@ -56,9 +56,11 @@ import numpy as np
 
 from repro.core import analytical, bucketsim
 from repro.core.hardware import (CLUSTERS, apply_interconnect_preset,
-                                 hierarchical_allreduce_time,
-                                 ring_allreduce_time, tree_allreduce_time)
+                                 hierarchical_allreduce_coeffs,
+                                 ring_allreduce_coeffs,
+                                 tree_allreduce_coeffs)
 from repro.core.policies import Policy, get_policy
+from repro.core.resulttable import METHOD_LABELS, rows_from_table
 from repro.core.scenarios import (Scenario, ScenarioGrid,
                                   normalize_interconnect)
 from repro.core.workloads import WorkloadTable, resolve_workload
@@ -201,6 +203,7 @@ class _PolicyAxis:
     h2d_early: np.ndarray
     has_fast: np.ndarray              # (P,) exact per-layer closed form
     has_tl: np.ndarray                # (P,) exact bucket-timeline form
+    tier: np.ndarray                  # (P,) METHOD_LABELS index
     tl_spec: np.ndarray               # (P,) index into tl_specs, -1 = none
     #: Unique ``(bucket_bytes, overlap_comm)`` pairs the kernel must
     #: compute a timeline-residual column for.  Priority-only policies
@@ -217,22 +220,78 @@ def _policy_axis(names: Sequence[str]) -> _PolicyAxis:
         if analytical.has_timeline_form(p) and p.bucket_bytes:
             key = (float(p.bucket_bytes), bool(p.overlap_comm))
             tl_spec[i] = specs.setdefault(key, len(specs))
+    has_fast = np.array([analytical.has_closed_form(p) for p in pols],
+                        dtype=bool)
+    has_tl = np.array([analytical.has_timeline_form(p) for p in pols],
+                      dtype=bool)
     return _PolicyAxis(
         names=list(names),
         overlap_io=np.array([p.overlap_io for p in pols], dtype=bool),
         overlap_comm=np.array([p.overlap_comm for p in pols], dtype=bool),
         h2d_early=np.array([p.h2d_early for p in pols], dtype=bool),
-        has_fast=np.array([analytical.has_closed_form(p) for p in pols],
-                          dtype=bool),
-        has_tl=np.array([analytical.has_timeline_form(p) for p in pols],
-                        dtype=bool),
+        has_fast=has_fast,
+        has_tl=has_tl,
+        tier=np.where(has_fast, 0, np.where(has_tl, 1, 2)).astype(np.int64),
         tl_spec=tl_spec,
         tl_specs=list(specs))
 
 
 # ----------------------------------------------------------------------
-# Tier 1: the (K, L) kernel — policy-independent cost terms.
+# Tier 1: the affine kernel — policy-independent cost terms.
 # ----------------------------------------------------------------------
+def _collective_coeffs(cax: _ClusterAxis, cidx: np.ndarray,
+                       coll: np.ndarray,
+                       n: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-point affine collective coefficients ``(per_byte,
+    per_message)``: every collective model is affine in the payload for
+    fixed ``(n, links)`` (see :mod:`repro.core.hardware`), and each
+    algorithm's coefficients are evaluated only on its own points (the
+    collective axis partitions the kernel grid)."""
+    n_f = n.astype(np.float64)
+    use_intra = n <= cax.gpn[cidx]
+    link_bw = np.where(use_intra, cax.intra_bw[cidx], cax.inter_bw[cidx])
+    link_lat = np.where(use_intra, cax.intra_lat[cidx],
+                        cax.inter_lat[cidx])
+    codes_present = np.unique(coll)
+    if len(codes_present) == 1:
+        sels: list = [slice(None)]
+    else:
+        sels = [np.nonzero(coll == code)[0] for code in codes_present]
+    per_byte = np.empty(len(cidx))
+    per_message = np.empty(len(cidx))
+    for code, sel in zip(codes_present, sels):
+        if code == 0:
+            a, b = ring_allreduce_coeffs(n_f[sel], link_bw[sel],
+                                         link_lat[sel])
+        elif code == 1:
+            a, b = tree_allreduce_coeffs(n[sel], link_bw[sel],
+                                         link_lat[sel])
+        else:
+            ci = cidx[sel]
+            a, b = hierarchical_allreduce_coeffs(
+                n[sel], cax.gpn[ci], cax.intra_bw[ci], cax.intra_lat[ci],
+                cax.inter_bw[ci], cax.inter_lat[ci])
+        per_byte[sel], per_message[sel] = a, b
+    return per_byte, per_message
+
+
+def _compute_row_map(wax: _WorkloadAxis, cax: _ClusterAxis,
+                     widx: np.ndarray, cidx: np.ndarray,
+                     batch: np.ndarray):
+    """``(uw, uc, ubatch, uk)``: the unique *compute rows* of a point
+    set and the point -> row map.  ``t_f``/``t_b`` (and everything
+    derived from them: prefix/suffix sums, ``comp``) depend only on
+    ``(workload, device rate, batch)`` — on a product grid that is a
+    tiny set (workloads x devices, not x interconnects x workers x
+    collectives), so the layer-axis matrices are built on ``U`` rows
+    and gathered per point instead of being recomputed ``K`` times."""
+    urate, rinv = np.unique(cax.rate[cidx], return_inverse=True)
+    ubv, binv = np.unique(batch, return_inverse=True)
+    key = (widx * len(ubv) + binv) * len(urate) + rinv
+    _, rep, uk = np.unique(key, return_index=True, return_inverse=True)
+    return widx[rep], cidx[rep], batch[rep], uk
+
+
 def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
                  widx: np.ndarray, cidx: np.ndarray, coll: np.ndarray,
                  n: np.ndarray, batch: np.ndarray,
@@ -241,24 +300,47 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
     """Policy-independent terms for every kernel point, reduced over
     the layer axis: ``(K,)`` vectors of ``io_h2d``, ``t_h2d``, ``comp``
     (= sum t_f + sum t_b), ``sum_c``, ``tc_no``, ``t_u``, plus the
-    resolved ``n_f``/``batch_f``.  The transient ``(K, L)`` matrices
-    are built ``chunk`` points at a time so huge grids stay in bounded
-    memory.
+    resolved ``n_f``/``batch_f``.
+
+    The evaluation is **cumsum-free over the point axis**: per-point
+    collective costs are affine in the payload (``per_byte * M +
+    per_message``, :func:`_collective_coeffs`), so every per-layer
+    prefix sum collapses to the workload-level cumulative tables
+    ``cumgrad``/``cumcount`` scaled by two per-point scalars, and
+    ``sum_c`` to ``per_byte * sum(grad) + per_message * n_comm``.  The
+    backward-time tables themselves are built once per unique
+    ``(workload, rate, batch)`` *compute row* (:func:`_compute_row_map`
+    — a handful of rows even on frontier-sized grids) and gathered per
+    point.  The surviving ``(k, L)`` work is a fused multiply-add +
+    masked max for the WFBP residual, built ``chunk`` points at a time
+    so huge grids stay in bounded memory.
 
     ``tl_specs`` (from :attr:`_PolicyAxis.tl_specs`) adds one
     bucket-timeline residual column ``tl<i>`` per unique
-    ``(bucket_bytes, overlap_comm)`` pair: bucket payloads from the
-    shared :func:`repro.core.bucketsim.bucket_table` structure, costed
-    through the *same* per-chunk collective dispatch as the per-layer
-    ``t_c`` (so fused buckets amortize latency exactly as
-    ``repro.core.costmodel.comm_scale_fn`` does), reduced by
-    :func:`repro.core.bucketsim.timeline_residual`.
+    ``(bucket_bytes, overlap_comm)`` pair, through the same affine
+    collapse: bucket structure from the shared
+    :func:`repro.core.bucketsim.bucket_table` boundaries, duration
+    suffix sums from :func:`repro.core.bucketsim.suffix_tables` (so
+    fused buckets amortize latency exactly as
+    ``repro.core.costmodel.comm_scale_fn`` does), release times
+    gathered from the per-row backward suffix — the exact
+    :func:`repro.core.bucketsim.timeline_residual` makespan, never
+    materializing a per-point duration matrix.
     """
     K = len(widx)
-    # Bucket structure depends only on (workload axis, bucket size) —
-    # built once per call, gathered per chunk.
-    btables = [bucketsim.bucket_table(wax.grad_bytes, bb)
-               for bb, _ in tl_specs]
+    # Per-workload layer tables: inclusive payload/count prefix sums
+    # (forward order) for the affine WFBP residual, plus the bucket
+    # structure + suffix tables per timeline spec — all O(W x L), built
+    # once per call, gathered per chunk.
+    grad = wax.grad_bytes
+    comm_mask = (grad > 0).astype(np.float64)
+    cumgrad = np.cumsum(grad, axis=1)
+    cumcount = np.cumsum(comm_mask, axis=1)
+    gradsum, ncomm = cumgrad[:, -1], cumcount[:, -1]
+    btables = []
+    for bb, _ in tl_specs:
+        bt = bucketsim.bucket_table(wax.grad_bytes, bb)
+        btables.append((bt,) + bucketsim.suffix_tables(bt))
     out = {name: np.empty(K) for name in
            ("io_h2d", "t_h2d", "comp", "sum_c", "tc_no", "t_u",
             "n_f", "batch_f")}
@@ -272,55 +354,25 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
                            wax.batch_default[w]).astype(np.float64)
         n_f = nn.astype(np.float64)
 
-        # compute costs: (k, L)
-        tfa = wax.flops[w] * batch_f[:, None] / cax.rate[c][:, None]
+        # compute costs: (U, L) on the unique compute rows only
+        uw, uc, ub, uk = _compute_row_map(wax, cax, w, c, batch[sl])
+        ubatch_f = np.where(ub > 0, ub,
+                            wax.batch_default[uw]).astype(np.float64)
+        tfa = wax.flops[uw] * ubatch_f[:, None] / cax.rate[uc][:, None]
         t_f = tfa
-        t_b = wax.bwd_ratio[w][:, None] * tfa
+        t_b = wax.bwd_ratio[uw][:, None] * tfa
         if wax.any_measured:          # adding literal 0.0 rows is exact,
-            scale = (batch_f / wax.batch_default[w])[:, None]
-            t_f = t_f + wax.tf_meas[w] * scale     # but skip it when the
-            t_b = t_b + wax.tb_meas[w] * scale     # batch has no traces
+            scale = (ubatch_f / wax.batch_default[uw])[:, None]
+            t_f = t_f + wax.tf_meas[uw] * scale    # but skip it when the
+            t_b = t_b + wax.tb_meas[uw] * scale    # batch has no traces
+        prefix_b = np.cumsum(t_b, axis=1)
+        total_b_u = prefix_b[:, -1]
+        suffix_b_u = (total_b_u[:, None] - prefix_b) + t_b   # inclusive
+        comp_u = t_f.sum(axis=1) + t_b.sum(axis=1)
+        total_b = total_b_u[uk]
 
-        # comm costs: array-valued collective models, each algorithm
-        # evaluated only on its own rows (the collective axis
-        # partitions the points; computing all three models on the
-        # full matrix would triple the dominant kernel cost).  The
-        # dispatch is payload-agnostic, so the same closure costs the
-        # per-layer gradients *and* the fused bucket payloads.
-        grad = wax.grad_bytes[w]
-        use_intra = nn <= cax.gpn[c]
-        link_bw = np.where(use_intra, cax.intra_bw[c], cax.inter_bw[c])
-        link_lat = np.where(use_intra, cax.intra_lat[c], cax.inter_lat[c])
-        codes_present = np.unique(cl)
-
-        def comm_rows(payload, sel, code: int) -> np.ndarray:
-            g, ns = payload[sel], nn[sel][:, None]
-            if code == 0:
-                return ring_allreduce_time(g, n_f[sel][:, None],
-                                           link_bw[sel][:, None],
-                                           link_lat[sel][:, None])
-            if code == 1:
-                return tree_allreduce_time(g, ns, link_bw[sel][:, None],
-                                           link_lat[sel][:, None])
-            ci = c[sel]
-            return hierarchical_allreduce_time(
-                g, ns, cax.gpn[ci][:, None],
-                cax.intra_bw[ci][:, None], cax.intra_lat[ci][:, None],
-                cax.inter_bw[ci][:, None], cax.inter_lat[ci][:, None])
-
-        def comm_matrix(payload: np.ndarray) -> np.ndarray:
-            """(k, B) payload bytes -> (k, B) collective seconds, with
-            zero-payload entries (padding, no-comm layers) zeroed."""
-            if len(codes_present) == 1:
-                t = comm_rows(payload, slice(None), int(codes_present[0]))
-            else:
-                t = np.empty_like(payload)
-                for code in codes_present:
-                    sel = np.nonzero(cl == code)[0]
-                    t[sel] = comm_rows(payload, sel, int(code))
-            return t * (payload > 0)
-
-        t_c = comm_matrix(grad)
+        # per-point affine collective coefficients
+        per_byte, per_message = _collective_coeffs(cax, c, cl, nn)
 
         # pipeline terms: (k,)
         nbytes_in = batch_f * wax.bytes_per_sample[w]
@@ -334,21 +386,42 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
 
         out["io_h2d"][sl] = t_io + t_h2d
         out["t_h2d"][sl] = t_h2d
-        out["comp"][sl] = t_f.sum(axis=1) + t_b.sum(axis=1)
-        out["sum_c"][sl] = t_c.sum(axis=1)
-        out["tc_no"][sl] = analytical.non_overlapped_comm_batch(t_b, t_c)
+        out["comp"][sl] = comp_u[uk]
+        out["sum_c"][sl] = per_byte * gradsum[w] + per_message * ncomm[w]
+        # WFBP residual (non_overlapped_comm_batch, affine form): the
+        # comm prefix sum at layer l is per_byte*cumgrad[l] +
+        # per_message*cumcount[l]; candidates masked to comm layers
+        # (t_c > 0 <=> grad > 0 when n > 1; when n <= 1 both
+        # coefficients are 0, every candidate is <= total_b and the
+        # clamp yields the same exact 0.0)
+        cand = suffix_b_u[uk]
+        cand += per_byte[:, None] * cumgrad[w]
+        cand += per_message[:, None] * cumcount[w]
+        cand *= comm_mask[w]
+        out["tc_no"][sl] = np.maximum(
+            cand.max(axis=1, initial=0.0) - total_b, 0.0)
         out["t_u"][sl] = 3.0 * wax.param_bytes[w] / cax.hbm_bw[c]
         out["n_f"][sl] = n_f
         out["batch_f"][sl] = batch_f
 
-        # bucket-timeline residuals: gather the (W, B) bucket structure
-        # to this chunk's rows, cost the fused payloads through the
-        # same collective dispatch, reduce over the bucket axis
-        for i, (bt, (_, ov_comm)) in enumerate(zip(btables, tl_specs)):
-            dur = comm_matrix(bt.nbytes[w])
-            out[f"tl{i}"][sl] = bucketsim.timeline_residual(
-                t_b, dur, bt.release_layer[w], bt.mask[w],
-                overlap_comm=ov_comm)
+        # bucket-timeline residuals: the timeline_residual makespan
+        # with the duration suffix sum in affine form — release times
+        # from the unique-row backward suffix, one fused multiply-add +
+        # masked max over the (k, B) bucket axis per spec
+        for i, ((bt, sufnb, sufcnt), (_, ov_comm)) in \
+                enumerate(zip(btables, tl_specs)):
+            if ov_comm:
+                release_u = np.take_along_axis(
+                    suffix_b_u, bt.release_layer[uw], axis=1)
+            else:
+                release_u = np.broadcast_to(
+                    total_b_u[:, None], (len(uw), bt.n_buckets))
+            cand = release_u[uk]
+            cand += per_byte[:, None] * sufnb[w]
+            cand += per_message[:, None] * sufcnt[w]
+            cand *= bt.mask[w]
+            out[f"tl{i}"][sl] = np.maximum(
+                cand.max(axis=1, initial=0.0) - total_b, 0.0)
     return out
 
 
@@ -396,14 +469,11 @@ def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
                   np.where(early, np.maximum(io_h2d, base_chain),
                            np.maximum(io_h2d, t_h2d + base_chain)))
 
-    # method labels: the per-row evaluation-path column ("analytical"
-    # for closed forms, "timeline" for the bucket-timeline form; rows
-    # matching neither are discarded by the caller for the simulator)
-    fast = pax.has_fast[polidx]
-    method = np.where(fast, "analytical",
-                      np.where(pax.has_tl[polidx], "timeline",
-                               "simulated")).tolist()
-
+    # method tier code: index into resulttable.METHOD_LABELS (0 =
+    # closed form, 1 = bucket timeline, 2 = simulator-only — the
+    # caller discards tier-2 rows for the simulator fallback).  Kept
+    # as an int column so the select stays label-free; the table
+    # assembly gathers the labels.
     return {
         "batch": batch_f,
         "iteration_time_s": t_iter,
@@ -411,33 +481,32 @@ def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
         "speedup": n_f * t1 / t_iter,
         "t_comm_s": sum_c,
         "t_comp_s": comp,
-        "method": method,
+        "method_code": pax.tier[polidx],
     }
 
 
-def _make_rows(workload: list, cluster: list, n_workers: list, policy: list,
-               collective: list, interconnect: list,
-               cols: dict[str, np.ndarray]) -> list[dict]:
-    """Tidy row dicts from label lists + numeric columns (``.tolist()``
-    converts whole columns to Python scalars in C, which is what keeps
-    row assembly off the throughput critical path)."""
-    return [
-        {
-            "workload": wl, "cluster": cl, "n_workers": nw, "policy": pol,
-            "collective": co, "interconnect": ic, "batch_per_gpu": b,
-            "iteration_time_s": it, "samples_per_sec": sps, "speedup": sp,
-            "t_comm_s": tcm, "t_comp_s": tcp, "method": meth,
-        }
-        for wl, cl, nw, pol, co, ic, b, it, sps, sp, tcm, tcp, meth in zip(
-            workload, cluster, n_workers, policy, collective, interconnect,
-            np.asarray(cols["batch"], dtype=np.int64).tolist(),
-            cols["iteration_time_s"].tolist(),
-            cols["samples_per_sec"].tolist(),
-            cols["speedup"].tolist(),
-            cols["t_comm_s"].tolist(),
-            cols["t_comp_s"].tolist(),
-            cols["method"])
-    ]
+def select_to_columns(cols: dict[str, np.ndarray],
+                      labels: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Assemble a tidy columnar table (:data:`repro.core.resulttable.COLUMNS`
+    order) from a :func:`_policy_select` output plus per-scenario label
+    columns (object arrays, already gathered).  Shared by both batched
+    backends — the NumPy grid/list front ends here and
+    :class:`repro.core.batched_jax.JaxGridRun`."""
+    return {
+        "workload": labels["workload"],
+        "cluster": labels["cluster"],
+        "n_workers": labels["n_workers"],
+        "policy": labels["policy"],
+        "collective": labels["collective"],
+        "interconnect": labels["interconnect"],
+        "batch_per_gpu": np.asarray(cols["batch"]).astype(np.int64),
+        "iteration_time_s": np.asarray(cols["iteration_time_s"]),
+        "samples_per_sec": np.asarray(cols["samples_per_sec"]),
+        "speedup": np.asarray(cols["speedup"]),
+        "t_comm_s": np.asarray(cols["t_comm_s"]),
+        "t_comp_s": np.asarray(cols["t_comp_s"]),
+        "method": METHOD_LABELS[np.asarray(cols["method_code"])],
+    }
 
 
 # ----------------------------------------------------------------------
@@ -545,35 +614,53 @@ class GridEvaluator:
                 "kidx": kidx,
                 "batched": self._pax.has_fast[pi] | self._pax.has_tl[pi]}
 
+    def _label_columns(self, codes: dict[str, np.ndarray]) -> dict:
+        return {
+            "workload": self._wl_values[codes["wi"]],
+            "cluster": self._cl_values[codes["ci"]],
+            "n_workers": self._n_values[codes["ki"]],
+            "policy": self._pol_values[codes["pi"]],
+            "collective": self._coll_values[codes["ai"]],
+            "interconnect": self._ic_values[codes["ii"]],
+        }
+
     def run(self) -> "GridRun":
         """Evaluate the kernel grid (fresh numbers every call) and
-        return the per-run row materializer."""
+        return the per-run table materializer."""
         return GridRun(self, _kernel_cols(
             self._wax, self._cax, self._kwidx, self._kcidx,
             self._kcoll, self._kn, self._kbatch,
             tl_specs=self._pax.tl_specs))
 
+    def run_span(self, lo: int, hi: int):
+        """Evaluate just the flat scenario indices ``[lo, hi)`` —
+        kernel restricted to the unique kernel points the span touches,
+        so a worker evaluating one shard never pays for the whole grid.
+        Returns ``(table, batched)``: the columnar result table and the
+        per-row batched mask (``False`` rows carry tier-2 placeholder
+        numbers the caller must overwrite with the simulator — see
+        :mod:`repro.core.parallel`)."""
+        codes = self._scenario_codes(lo, hi)
+        uk, inv = np.unique(codes["kidx"], return_inverse=True)
+        kc = _kernel_cols(
+            self._wax, self._cax, self._kwidx[uk], self._kcidx[uk],
+            self._kcoll[uk], self._kn[uk], self._kbatch[uk],
+            tl_specs=self._pax.tl_specs)
+        cols = _policy_select(self._pax, codes["pi"], kc, inv)
+        return (select_to_columns(cols, self._label_columns(codes)),
+                codes["batched"])
+
     def scenario_at(self, i: int) -> Scenario:
         """Materialize flat index ``i`` (used for simulator-fallback
         entries only)."""
-        g = self.grid
-        sizes = (len(g.workloads), len(g.clusters), len(g.worker_counts),
-                 len(g.policies), len(g.collectives), len(g.interconnects))
-        codes = []
-        for size in reversed(sizes):
-            i, c = divmod(i, size)
-            codes.append(c)
-        wi, ci, ki, pi, ai, ii = reversed(codes)
-        return Scenario(workload=g.workloads[wi], cluster=g.clusters[ci],
-                        n_workers=int(g.worker_counts[ki]),
-                        policy=g.policies[pi], collective=g.collectives[ai],
-                        interconnect=g.interconnects[ii],
-                        batch_per_gpu=g.batch_per_gpu)
+        return self.grid.scenario_at(i)
 
 
 class GridRun:
     """One evaluation of a grid: the ``(K,)`` kernel columns plus the
-    shared structure, materializing tidy rows chunk by chunk."""
+    shared structure, materializing columnar result tables chunk by
+    chunk (:meth:`table_slice` is the hot path; :meth:`rows_slice` is
+    the per-row compat view)."""
 
     def __init__(self, ev: GridEvaluator, kernel_cols: dict[str, np.ndarray]):
         self._ev = ev
@@ -583,31 +670,39 @@ class GridRun:
         return self._ev.n_scenarios
 
     def columns_slice(self, lo: int, hi: int) -> dict[str, np.ndarray]:
-        """Numeric result columns (plus ``method`` labels) for flat
-        scenario indices ``[lo, hi)`` — the policy-selected values
-        before tidy-row assembly.  The kernel-only surface the
-        throughput benchmark times and the jax backend's differential
-        gate compares against."""
+        """Numeric result columns (plus ``method`` labels as a Python
+        list) for flat scenario indices ``[lo, hi)`` — the
+        policy-selected values before tidy-table assembly.  The
+        kernel-only surface the throughput benchmark times and the jax
+        backend's differential gate compares against."""
         ev = self._ev
         codes = ev._scenario_codes(lo, hi)
-        return _policy_select(ev._pax, codes["pi"], self._kc, codes["kidx"])
+        cols = _policy_select(ev._pax, codes["pi"], self._kc, codes["kidx"])
+        cols["method"] = METHOD_LABELS[cols.pop("method_code")].tolist()
+        return cols
+
+    def table_slice(self, lo: int, hi: int):
+        """Columnar result table for flat scenario indices ``[lo, hi)``
+        in grid order — label columns gathered from the per-axis value
+        arrays, numeric columns straight from the policy select.
+        Returns ``(table, batched)`` where ``batched`` is the per-row
+        mask; ``False`` rows carry tier-2 placeholder numbers (their
+        policy needs the simulator) that the caller overwrites via
+        :func:`repro.core.resulttable.fill_rows`."""
+        ev = self._ev
+        codes = ev._scenario_codes(lo, hi)
+        cols = _policy_select(ev._pax, codes["pi"], self._kc, codes["kidx"])
+        return (select_to_columns(cols, ev._label_columns(codes)),
+                codes["batched"])
 
     def rows_slice(self, lo: int, hi: int) -> list[dict | None]:
         """Batched rows for flat scenario indices ``[lo, hi)`` in grid
         order; entries whose policy needs the simulator come back as
         ``None`` for the caller to fill."""
-        ev = self._ev
-        codes = ev._scenario_codes(lo, hi)
-        cols = _policy_select(ev._pax, codes["pi"], self._kc, codes["kidx"])
-        rows: list[dict | None] = _make_rows(
-            ev._wl_values[codes["wi"]].tolist(),
-            ev._cl_values[codes["ci"]].tolist(),
-            ev._n_values[codes["ki"]].tolist(),
-            ev._pol_values[codes["pi"]].tolist(),
-            ev._coll_values[codes["ai"]].tolist(),
-            ev._ic_values[codes["ii"]].tolist(), cols)
-        if not ev.all_batched:
-            for i in np.nonzero(~codes["batched"])[0].tolist():
+        table, batched = self.table_slice(lo, hi)
+        rows: list[dict | None] = rows_from_table(table)
+        if not self._ev.all_batched:
+            for i in np.nonzero(~batched)[0].tolist():
                 rows[i] = None                # selected a bogus equation
         return rows
 
@@ -694,27 +789,45 @@ def scenario_axes(scenarios: Sequence[Scenario]):
     return wax, cax, pax, widx, cidx, polidx, coll, n, batch
 
 
-def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
-    """Batched rows (input order) for a list of batched-path-eligible
-    scenarios (closed-form or bucket-timeline policies); one Python
-    pass to build code vectors, then the same two-tier kernel the grid
-    front end uses (with the identity scenario -> kernel-point map).
+def scenario_labels(scenarios: Sequence[Scenario]) -> dict[str, np.ndarray]:
+    """Per-scenario label columns (object arrays) for a scenario list —
+    the list front end's counterpart of the grid's per-axis value
+    arrays.  Shared with :func:`repro.core.batched_jax.eval_scenarios_jax`."""
+    return {
+        "workload": np.array([s.workload for s in scenarios], dtype=object),
+        "cluster": np.array([s.cluster for s in scenarios], dtype=object),
+        "n_workers": np.array([s.n_workers for s in scenarios],
+                              dtype=np.int64),
+        "policy": np.array([s.policy for s in scenarios], dtype=object),
+        "collective": np.array([s.collective for s in scenarios],
+                               dtype=object),
+        "interconnect": np.array(
+            [normalize_interconnect(s.interconnect) for s in scenarios],
+            dtype=object),
+    }
+
+
+def eval_scenarios_table(scenarios: Sequence[Scenario]) -> dict[str, np.ndarray]:
+    """Columnar result table (input order) for a list of
+    batched-path-eligible scenarios (closed-form or bucket-timeline
+    policies); one Python pass to build code vectors, then the same
+    two-tier kernel the grid front end uses (with the identity
+    scenario -> kernel-point map).
 
     Raises ``ValueError`` if any scenario's policy has neither form —
     callers (:func:`repro.core.sweep.sweep`) partition first.
     """
-    if not scenarios:
-        return []
     wax, cax, pax, widx, cidx, polidx, coll, n, batch = \
         scenario_axes(scenarios)
     kc = _kernel_cols(wax, cax, widx, cidx, coll, n, batch,
                       tl_specs=pax.tl_specs)
     cols = _policy_select(pax, polidx, kc, kidx=None)
-    return _make_rows(
-        [s.workload for s in scenarios],
-        [s.cluster for s in scenarios],
-        [s.n_workers for s in scenarios],
-        [s.policy for s in scenarios],
-        [s.collective for s in scenarios],
-        [normalize_interconnect(s.interconnect) for s in scenarios],
-        cols)
+    return select_to_columns(cols, scenario_labels(scenarios))
+
+
+def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
+    """Batched rows (input order) for a scenario list — the per-row
+    view of :func:`eval_scenarios_table`."""
+    if not scenarios:
+        return []
+    return rows_from_table(eval_scenarios_table(scenarios))

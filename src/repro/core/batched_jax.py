@@ -1,26 +1,31 @@
-"""JAX-native batched sweep kernels: ``jit`` + ``vmap`` over scenarios.
+"""JAX-native batched sweep kernels: one ``jit`` from codes to columns.
 
 The NumPy engine (:mod:`repro.core.batched`) evaluates a grid in two
-tiers — a policy-independent ``(K, L)`` kernel grid reduced to ``(K,)``
-cost columns, then a cheap per-scenario policy select.  This module
-runs the *same* two tiers through XLA:
+tiers — a policy-independent affine kernel reduced to ``(K,)`` cost
+columns, then a cheap per-scenario policy select.  This module runs
+the *same* two tiers through XLA as **one compiled function** over
+whole code vectors (no ``vmap`` round trip, no per-point closures):
 
-* the per-point kernel (compute costs, collective dispatch, WFBP
-  prefix-max residual, bucket-timeline residuals) is written per
-  kernel point and ``vmap``-batched over the kernel axis;
-* the policy select is written per scenario and ``vmap``-batched over
-  the scenario axis;
+* tier 1 mirrors :func:`repro.core.batched._kernel_cols` — the affine
+  collective coefficients (:mod:`repro.core.hardware` ``*_coeffs``),
+  the unique-compute-row backward tables (structure precomputed on the
+  host by :func:`repro.core.batched._compute_row_map`, gathered on
+  device) and the fused multiply-add + masked-max residuals;
+* tier 2 mirrors :func:`repro.core.batched._policy_select` — the same
+  ``where``/``maximum`` equation select over ``(S,)`` vectors;
 * the composition is one ``jit``-compiled function whose array inputs
   (axis tables, code vectors) are ordinary pytree arguments — same
-  shapes, same compilation, fresh numbers every call.
+  shapes, same compilation, fresh numbers every call — and whose
+  output is exactly the numeric result columns, so ``backend="jax"``
+  end-to-end cost is the kernel plus host label gathers.
 
 There is no parallel formula implementation to keep in lockstep: the
-collective models (:mod:`repro.core.hardware`), the WFBP residual
-(:func:`repro.core.analytical.non_overlapped_comm_batch`) and the
-bucket timeline (:func:`repro.core.bucketsim.timeline_residual`) are
-dtype-polymorphic (:mod:`repro.core.xputil`) and trace here on
-``jax.numpy`` rows exactly as they evaluate on NumPy matrices in the
-oracle engine.  Numerics run in float64 under a scoped
+affine coefficients come from the same dtype-polymorphic
+:mod:`repro.core.hardware` functions the NumPy kernel calls, and the
+per-workload prefix/suffix tables (``cumgrad``/``cumcount``, bucket
+suffix sums via :func:`repro.core.bucketsim.suffix_tables`) are the
+NumPy engine's own host-side arrays, shipped in as pytree inputs.
+Numerics run in float64 under a scoped
 ``jax.experimental.enable_x64`` (never the global flag, which would
 leak into the repo's other jax code), which is what makes the <= 1e-6
 differential agreement against the NumPy oracle achievable; the
@@ -32,7 +37,8 @@ Scenario-axis sharding: with more than one device (or an explicit
 device-count multiple and placed with a ``NamedSharding`` over the
 data axis of a :func:`repro.launch.mesh.make_dp_mesh` mesh — ``jit``
 then partitions both tiers across devices, and the padding rows are
-sliced off the gathered result.
+sliced off the gathered result.  The tiny unique-row tables stay
+replicated.
 
 Differentiability: the continuous inputs — link bandwidths/latencies
 per ``(cluster, interconnect)`` pair and the bucket sizes — are
@@ -61,11 +67,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from repro.core import analytical, batched, bucketsim
+from repro.core import batched, bucketsim
 from repro.core.batched import grid_evaluator
-from repro.core.hardware import (hierarchical_allreduce_time,
-                                 ring_allreduce_time, tree_allreduce_time)
-from repro.core.scenarios import Scenario, ScenarioGrid, normalize_interconnect
+from repro.core.hardware import (hierarchical_allreduce_coeffs,
+                                 ring_allreduce_coeffs,
+                                 tree_allreduce_coeffs)
+from repro.core.resulttable import METHOD_LABELS, rows_from_table
+from repro.core.scenarios import Scenario, ScenarioGrid
 
 #: Continuous model inputs exposed to ``jax.grad`` — per
 #: ``(cluster, interconnect)`` pair link parameters plus the bucket
@@ -80,22 +88,30 @@ _NUMERIC_COLS = ("batch", "iteration_time_s", "samples_per_sec",
 
 # ----------------------------------------------------------------------
 # Structure extraction: axis tables -> one flat dict of arrays (a jit
-# pytree argument), bucket structure included.
+# pytree argument), prefix/suffix and bucket structure included.
 # ----------------------------------------------------------------------
 def _axes_tables(wax, cax, pax) -> tuple[dict, dict]:
     """``(tables, pflags)`` array dicts from the NumPy engine's axis
-    dataclasses — the jit kernel's pytree inputs.  ``bucket_bytes``
-    rides along purely as a differentiation input: the partition
-    structure (``bt<i>_*``) is discrete and prebuilt, which is exactly
-    the piecewise-constant dependence documented in the module
-    docstring."""
+    dataclasses — the jit kernel's pytree inputs, including the
+    per-workload prefix tables the affine formulation gathers
+    (``cumgrad``/``cumcount`` and their totals) and the bucket suffix
+    tables per timeline spec.  ``bucket_bytes`` rides along purely as
+    a differentiation input: the partition structure (``bt<i>_*``) is
+    discrete and prebuilt, which is exactly the piecewise-constant
+    dependence documented in the module docstring."""
+    grad = wax.grad_bytes
+    comm_mask = (grad > 0).astype(np.float64)
+    cumgrad = np.cumsum(grad, axis=1)
+    cumcount = np.cumsum(comm_mask, axis=1)
     tables = {
         "flops": wax.flops, "tf_meas": wax.tf_meas, "tb_meas": wax.tb_meas,
-        "grad_bytes": wax.grad_bytes, "bwd_ratio": wax.bwd_ratio,
+        "bwd_ratio": wax.bwd_ratio,
         "batch_default": wax.batch_default,
         "bytes_per_sample": wax.bytes_per_sample,
         "param_bytes": wax.param_bytes, "t_io_meas": wax.t_io_meas,
         "has_meas_io": wax.has_meas_io,
+        "comm_mask": comm_mask, "cumgrad": cumgrad, "cumcount": cumcount,
+        "gradsum": cumgrad[:, -1], "ncomm": cumcount[:, -1],
         "intra_bw": cax.intra_bw, "intra_lat": cax.intra_lat,
         "inter_bw": cax.inter_bw, "inter_lat": cax.inter_lat,
         "gpn": cax.gpn, "disk_lat": cax.disk_lat, "disk_bw": cax.disk_bw,
@@ -106,9 +122,11 @@ def _axes_tables(wax, cax, pax) -> tuple[dict, dict]:
     }
     for i, (bb, _) in enumerate(pax.tl_specs):
         bt = bucketsim.bucket_table(wax.grad_bytes, bb)
-        tables[f"bt{i}_nbytes"] = bt.nbytes
+        sufnb, sufcnt = bucketsim.suffix_tables(bt)
         tables[f"bt{i}_release"] = bt.release_layer
-        tables[f"bt{i}_mask"] = bt.mask
+        tables[f"bt{i}_mask"] = bt.mask.astype(np.float64)
+        tables[f"bt{i}_sufnb"] = sufnb
+        tables[f"bt{i}_sufcnt"] = sufcnt
     pflags = {"overlap_io": pax.overlap_io,
               "overlap_comm": pax.overlap_comm,
               "h2d_early": pax.h2d_early,
@@ -117,78 +135,107 @@ def _axes_tables(wax, cax, pax) -> tuple[dict, dict]:
 
 
 # ----------------------------------------------------------------------
-# Tier 1: one kernel point — vmapped over the kernel axis.
+# Tier 1: the affine kernel over whole code vectors.
 # ----------------------------------------------------------------------
-def _point_kernel(tbl: dict, tl_overlaps: tuple, coll_codes: tuple,
-                  w, c, coll, n, batch):
-    """Policy-independent cost terms of one kernel point, traced on
-    the dtype-polymorphic models — the jax twin of one row of
-    :func:`repro.core.batched._kernel_cols`.  ``coll`` is traced, but
-    the set of collective codes present in the grid (``coll_codes``)
-    is static — only those models are evaluated and selected, the jax
-    counterpart of the NumPy kernel's host-side partition by
-    collective code (a single-collective grid pays for exactly one
-    model)."""
+def _kernel_cols_jax(tbl: dict, kcodes: dict, ucodes: dict,
+                     tl_overlaps: tuple, coll_codes: tuple) -> dict:
+    """Policy-independent ``(K,)`` cost columns, traced on whole code
+    vectors — the jax twin of :func:`repro.core.batched._kernel_cols`:
+    affine collective coefficients, unique-compute-row backward tables
+    gathered through the host-precomputed ``uk`` map, and the fused
+    multiply-add + masked-max residuals."""
+    w, c = kcodes["w"], kcodes["c"]
+    coll, n, batch, uk = kcodes["coll"], kcodes["n"], kcodes["batch"], \
+        kcodes["uk"]
+    uw, uc, ub = ucodes["w"], ucodes["c"], ucodes["batch"]
     batch_f = jnp.where(batch > 0, batch,
                         tbl["batch_default"][w]).astype(jnp.float64)
     n_f = n.astype(jnp.float64)
-    tfa = tbl["flops"][w] * batch_f / tbl["rate"][c]
-    scale = batch_f / tbl["batch_default"][w]
-    t_f = tfa + tbl["tf_meas"][w] * scale          # measured rows: exact,
-    t_b = tbl["bwd_ratio"][w] * tfa + tbl["tb_meas"][w] * scale  # others +0.0
+
+    # compute costs: (U, L) on the unique compute rows only
+    ubatch_f = jnp.where(ub > 0, ub,
+                         tbl["batch_default"][uw]).astype(jnp.float64)
+    tfa = tbl["flops"][uw] * ubatch_f[:, None] / tbl["rate"][uc][:, None]
+    scale = (ubatch_f / tbl["batch_default"][uw])[:, None]
+    t_f = tfa + tbl["tf_meas"][uw] * scale         # measured rows: exact,
+    t_b = tbl["bwd_ratio"][uw][:, None] * tfa \
+        + tbl["tb_meas"][uw] * scale               # others +0.0
+    prefix_b = jnp.cumsum(t_b, axis=1)
+    total_b_u = prefix_b[:, -1]
+    suffix_b_u = (total_b_u[:, None] - prefix_b) + t_b   # inclusive
+    comp_u = t_f.sum(axis=1) + t_b.sum(axis=1)
+    total_b = total_b_u[uk]
+
+    # per-point affine collective coefficients (coll is traced; the
+    # codes *present* are static, so only those models trace)
     use_intra = n <= tbl["gpn"][c]
     link_bw = jnp.where(use_intra, tbl["intra_bw"][c], tbl["inter_bw"][c])
     link_lat = jnp.where(use_intra, tbl["intra_lat"][c], tbl["inter_lat"][c])
 
-    def _one_model(code: int, payload):
+    def _model(code: int):
         if code == 0:
-            return ring_allreduce_time(payload, n_f, link_bw, link_lat)
+            return ring_allreduce_coeffs(n_f, link_bw, link_lat)
         if code == 1:
-            return tree_allreduce_time(payload, n_f, link_bw, link_lat)
-        return hierarchical_allreduce_time(
-            payload, n, tbl["gpn"][c],
-            tbl["intra_bw"][c], tbl["intra_lat"][c],
+            return tree_allreduce_coeffs(n, link_bw, link_lat)
+        return hierarchical_allreduce_coeffs(
+            n, tbl["gpn"][c], tbl["intra_bw"][c], tbl["intra_lat"][c],
             tbl["inter_bw"][c], tbl["inter_lat"][c])
 
-    def comm(payload):
-        """(B,) payload bytes -> (B,) collective seconds; the same
-        payload-agnostic dispatch as the NumPy kernel's comm_matrix."""
-        t = _one_model(coll_codes[0], payload)
-        for code in coll_codes[1:]:
-            t = jnp.where(coll == code, _one_model(code, payload), t)
-        return t * (payload > 0)
+    per_byte, per_message = _model(coll_codes[0])
+    for code in coll_codes[1:]:
+        a, b = _model(code)
+        sel = coll == code
+        per_byte = jnp.where(sel, a, per_byte)
+        per_message = jnp.where(sel, b, per_message)
 
-    t_c = comm(tbl["grad_bytes"][w])
+    # pipeline terms: (K,)
     nbytes_in = batch_f * tbl["bytes_per_sample"][w]
     t_io = tbl["disk_lat"][c] + nbytes_in / tbl["disk_bw"][c]
-    t_io = jnp.where(tbl["has_meas_io"][w], tbl["t_io_meas"][w] * scale, t_io)
+    t_io = jnp.where(tbl["has_meas_io"][w],
+                     tbl["t_io_meas"][w] * batch_f / tbl["batch_default"][w],
+                     t_io)
     t_h2d = tbl["h2d_lat"][c] + nbytes_in / tbl["h2d_bw"][c]
+
+    # WFBP residual (affine form — see the NumPy kernel's derivation)
+    cand = suffix_b_u[uk] \
+        + per_byte[:, None] * tbl["cumgrad"][w] \
+        + per_message[:, None] * tbl["cumcount"][w]
+    cand = cand * tbl["comm_mask"][w]
     out = {
         "io_h2d": t_io + t_h2d,
         "t_h2d": t_h2d,
-        "comp": t_f.sum() + t_b.sum(),
-        "sum_c": t_c.sum(),
-        "tc_no": analytical.non_overlapped_comm_batch(t_b, t_c),
+        "comp": comp_u[uk],
+        "sum_c": per_byte * tbl["gradsum"][w] + per_message * tbl["ncomm"][w],
+        "tc_no": jnp.maximum(cand.max(axis=1, initial=0.0) - total_b, 0.0),
         "t_u": 3.0 * tbl["param_bytes"][w] / tbl["hbm_bw"][c],
         "n_f": n_f,
         "batch_f": batch_f,
     }
     for i, ov_comm in enumerate(tl_overlaps):
-        dur = comm(tbl[f"bt{i}_nbytes"][w])
-        out[f"tl{i}"] = bucketsim.timeline_residual(
-            t_b, dur, tbl[f"bt{i}_release"][w], tbl[f"bt{i}_mask"][w],
-            overlap_comm=ov_comm)
+        if ov_comm:
+            release_u = jnp.take_along_axis(
+                suffix_b_u, tbl[f"bt{i}_release"][uw], axis=1)
+        else:
+            release_u = jnp.broadcast_to(
+                total_b_u[:, None],
+                (len(uw), tbl[f"bt{i}_release"].shape[1]))
+        cand = release_u[uk] \
+            + per_byte[:, None] * tbl[f"bt{i}_sufnb"][w] \
+            + per_message[:, None] * tbl[f"bt{i}_sufcnt"][w]
+        cand = cand * tbl[f"bt{i}_mask"][w]
+        out[f"tl{i}"] = jnp.maximum(
+            cand.max(axis=1, initial=0.0) - total_b, 0.0)
     return out
 
 
 # ----------------------------------------------------------------------
-# Tier 2: one scenario's policy select — vmapped over the scenario axis.
+# Tier 2: the policy select over whole scenario vectors.
 # ----------------------------------------------------------------------
-def _point_select(pflags: dict, tl_overlaps: tuple, kc: dict, pi, kidx):
-    """The jax twin of one row of
-    :func:`repro.core.batched._policy_select` (same equations, same
-    zero-comm weak-scaling baseline); method labels are strings and
-    stay on the host side."""
+def _select_jax(pflags: dict, tl_overlaps: tuple, kc: dict, pi, kidx):
+    """The jax twin of :func:`repro.core.batched._policy_select` (same
+    equations, same zero-comm weak-scaling baseline), over whole
+    ``(S,)`` vectors; method labels are strings and stay on the host
+    side."""
     def g(name):
         return kc[name][kidx]
 
@@ -224,18 +271,16 @@ def _point_select(pflags: dict, tl_overlaps: tuple, kc: dict, pi, kidx):
 
 @functools.partial(jax.jit, static_argnames=("tl_overlaps", "coll_codes"))
 def _columns_jax(tables: dict, pflags: dict, kcodes: dict, scodes: dict,
-                 tl_overlaps: tuple, coll_codes: tuple) -> dict:
-    """The whole two-tier evaluation as one compiled function.
-    Compilation is keyed by array shapes/dtypes and the static
-    ``tl_overlaps``/``coll_codes`` tuples — re-running a grid (or any
-    same-shaped grid) with fresh numbers reuses the executable."""
-    kc = jax.vmap(
-        lambda w, c, coll, n, b:
-            _point_kernel(tables, tl_overlaps, coll_codes, w, c, coll, n, b)
-    )(kcodes["w"], kcodes["c"], kcodes["coll"], kcodes["n"], kcodes["batch"])
-    return jax.vmap(
-        lambda pi, kidx: _point_select(pflags, tl_overlaps, kc, pi, kidx)
-    )(scodes["pi"], scodes["kidx"])
+                 ucodes: dict, tl_overlaps: tuple,
+                 coll_codes: tuple) -> dict:
+    """The whole two-tier evaluation — codes in, result columns out —
+    as one compiled function.  Compilation is keyed by array
+    shapes/dtypes and the static ``tl_overlaps``/``coll_codes``
+    tuples — re-running a grid (or any same-shaped grid) with fresh
+    numbers reuses the executable."""
+    kc = _kernel_cols_jax(tables, kcodes, ucodes, tl_overlaps, coll_codes)
+    return _select_jax(pflags, tl_overlaps, kc, scodes["pi"],
+                       scodes["kidx"])
 
 
 # ----------------------------------------------------------------------
@@ -267,14 +312,14 @@ def _shard_codes(codes: dict, mesh) -> dict:
 # Grid front end.
 # ----------------------------------------------------------------------
 class JaxGridEvaluator:
-    """A :class:`ScenarioGrid` prepared for the jit/vmap kernels.
+    """A :class:`ScenarioGrid` prepared for the fused jit kernel.
 
     Reuses the NumPy engine's memoized structure (axis tables, code
-    vectors, label arrays) — only the numeric evaluation moves to XLA.
-    Raises ``ValueError`` for grids containing simulator-only policies:
-    unlike the NumPy engine there is no event-driven fallback to
-    interleave, and silently falling back would defeat the point of
-    selecting the backend explicitly.
+    vectors, label arrays, unique-compute-row map) — only the numeric
+    evaluation moves to XLA.  Raises ``ValueError`` for grids
+    containing simulator-only policies: unlike the NumPy engine there
+    is no event-driven fallback to interleave, and silently falling
+    back would defeat the point of selecting the backend explicitly.
 
     ``mesh=None`` autoselects: a data-parallel mesh over all devices
     when more than one is visible, unsharded otherwise.  Pass a mesh
@@ -296,8 +341,11 @@ class JaxGridEvaluator:
         self._tables, self._pflags = _axes_tables(ev._wax, ev._cax, ev._pax)
         self._tl_overlaps = tuple(bool(ov) for _, ov in ev._pax.tl_specs)
         self._coll_codes = tuple(int(x) for x in np.unique(ev._kcoll)) or (0,)
+        uw, uc, ub, uk = batched._compute_row_map(
+            ev._wax, ev._cax, ev._kwidx, ev._kcidx, ev._kbatch)
         kcodes = {"w": ev._kwidx, "c": ev._kcidx, "coll": ev._kcoll,
-                  "n": ev._kn, "batch": ev._kbatch}
+                  "n": ev._kn, "batch": ev._kbatch, "uk": uk}
+        self._ucodes = {"w": uw, "c": uc, "batch": ub}
         S = len(ev)
         if S:
             sc = ev._scenario_codes(0, S)
@@ -342,7 +390,7 @@ class JaxGridEvaluator:
                                  f"differentiable params are {PARAM_KEYS}")
             tables = {**tables, **params}
         return _columns_jax(tables, self._pflags, self._kcodes,
-                            self._scodes, self._tl_overlaps,
+                            self._scodes, self._ucodes, self._tl_overlaps,
                             self._coll_codes)
 
     def run(self, params: dict | None = None) -> "JaxGridRun":
@@ -351,15 +399,15 @@ class JaxGridEvaluator:
     def method_labels(self, pi: np.ndarray) -> list[str]:
         """Per-row evaluation-path labels (``all_batched`` holds, so
         only the two batched labels occur)."""
-        return np.where(self.ev._pax.has_fast[pi],
-                        "analytical", "timeline").tolist()
+        return METHOD_LABELS[self.ev._pax.tier[pi]].tolist()
 
 
 class JaxGridRun:
     """One evaluation of a grid on the jax backend: host-side numeric
-    columns plus the shared structure, materializing tidy rows chunk by
-    chunk — the jax twin of :class:`repro.core.batched.GridRun` (no
-    ``None`` entries: simulator-only grids are rejected up front)."""
+    columns plus the shared structure, materializing columnar result
+    tables chunk by chunk — the jax twin of
+    :class:`repro.core.batched.GridRun` (no simulator rows:
+    simulator-only grids are rejected up front)."""
 
     def __init__(self, jev: JaxGridEvaluator, cols: dict[str, np.ndarray]):
         self._jev = jev
@@ -375,18 +423,21 @@ class JaxGridRun:
             ev._scenario_codes(lo, hi)["pi"])
         return out
 
-    def rows_slice(self, lo: int, hi: int) -> list[dict]:
+    def table_slice(self, lo: int, hi: int):
+        """Columnar result table for flat scenario indices ``[lo, hi)``
+        in grid order — the jax twin of
+        :meth:`repro.core.batched.GridRun.table_slice` (the ``batched``
+        mask is all-true by construction)."""
         ev = self._jev.ev
         codes = ev._scenario_codes(lo, hi)
         cols = {k: v[lo:hi] for k, v in self._cols.items()}
-        cols["method"] = self._jev.method_labels(codes["pi"])
-        return batched._make_rows(
-            ev._wl_values[codes["wi"]].tolist(),
-            ev._cl_values[codes["ci"]].tolist(),
-            ev._n_values[codes["ki"]].tolist(),
-            ev._pol_values[codes["pi"]].tolist(),
-            ev._coll_values[codes["ai"]].tolist(),
-            ev._ic_values[codes["ii"]].tolist(), cols)
+        cols["method_code"] = ev._pax.tier[codes["pi"]]
+        return (batched.select_to_columns(cols, ev._label_columns(codes)),
+                codes["batched"])
+
+    def rows_slice(self, lo: int, hi: int) -> list[dict]:
+        table, _ = self.table_slice(lo, hi)
+        return rows_from_table(table)
 
 
 #: Structure memo, mirroring :func:`repro.core.batched.grid_evaluator`
@@ -423,7 +474,7 @@ def jax_grid_evaluator(grid: ScenarioGrid, *, mesh=None) -> JaxGridEvaluator:
 def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario]
                        ) -> list[dict]:
     """Batched rows (input order) for a list of batched-path-eligible
-    scenarios, evaluated by the jit/vmap kernels with the identity
+    scenarios, evaluated by the fused jit kernel with the identity
     scenario -> kernel-point map.  Raises ``ValueError`` (via
     :func:`repro.core.batched.scenario_axes`) if any scenario's policy
     has neither a closed nor a bucket-timeline form."""
@@ -435,24 +486,20 @@ def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario]
     tables, pflags = _axes_tables(wax, cax, pax)
     tl_overlaps = tuple(bool(ov) for _, ov in pax.tl_specs)
     S = len(scenarios)
-    kcodes = {"w": widx, "c": cidx, "coll": coll, "n": n, "batch": batch}
+    uw, uc, ub, uk = batched._compute_row_map(wax, cax, widx, cidx, batch)
+    kcodes = {"w": widx, "c": cidx, "coll": coll, "n": n, "batch": batch,
+              "uk": uk}
+    ucodes = {"w": uw, "c": uc, "batch": ub}
     scodes = {"pi": polidx, "kidx": np.arange(S, dtype=np.int64)}
     coll_codes = tuple(int(x) for x in np.unique(coll)) or (0,)
     with enable_x64():
-        out = _columns_jax(tables, pflags, kcodes, scodes, tl_overlaps,
-                           coll_codes)
+        out = _columns_jax(tables, pflags, kcodes, scodes, ucodes,
+                           tl_overlaps, coll_codes)
         cols = {k: np.asarray(v) for k, v in out.items()
                 if k in _NUMERIC_COLS}
-    cols["method"] = np.where(pax.has_fast[polidx],
-                              "analytical", "timeline").tolist()
-    return batched._make_rows(
-        [s.workload for s in scenarios],
-        [s.cluster for s in scenarios],
-        [s.n_workers for s in scenarios],
-        [s.policy for s in scenarios],
-        [s.collective for s in scenarios],
-        [normalize_interconnect(s.interconnect) for s in scenarios],
-        cols)
+    cols["method_code"] = pax.tier[polidx]
+    return rows_from_table(batched.select_to_columns(
+        cols, batched.scenario_labels(scenarios)))
 
 
 # ----------------------------------------------------------------------

@@ -140,6 +140,23 @@ def bucket_table(grad_bytes: np.ndarray, bucket_bytes: float | None) -> BucketTa
     return BucketTable(nbytes=nbytes, release_layer=release, mask=mask)
 
 
+def suffix_tables(bt: BucketTable) -> tuple[np.ndarray, np.ndarray]:
+    """``(suffix_nbytes, suffix_count)``: inclusive suffix sums over
+    issue order of bucket payload bytes and live-bucket counts, both
+    ``(W, B)`` float64.
+
+    With an affine collective model ``d_j = per_byte * nbytes_j +
+    per_message`` (zero on padding), the duration suffix sum inside
+    :func:`timeline_residual` collapses to ``per_byte * suffix_nbytes +
+    per_message * suffix_count`` — no per-point ``(S, B)`` duration
+    matrix, no cumsum.  Shared by both batched backends
+    (:mod:`repro.core.batched`, :mod:`repro.core.batched_jax`)."""
+    sufnb = np.flip(np.cumsum(np.flip(bt.nbytes, -1), -1), -1)
+    sufcnt = np.flip(np.cumsum(np.flip(
+        bt.mask.astype(np.float64), -1), -1), -1)
+    return sufnb, sufcnt
+
+
 def timeline_residual(t_b: np.ndarray, durations: np.ndarray,
                       release_layer: np.ndarray, mask: np.ndarray,
                       overlap_comm: bool = True) -> np.ndarray:

@@ -167,6 +167,67 @@ def hierarchical_allreduce_time(nbytes, n, gpus_per_node,
     return t
 
 
+# ----------------------------------------------------------------------
+# Affine collective coefficients.
+#
+# Every collective model above is *affine in the payload* for fixed
+# ``(n, links)``: ``time(M) = per_byte * M + per_message`` whenever
+# ``M > 0`` (callers mask zero payloads, exactly as the batched comm
+# matrices do).  Factoring the coefficients out lets the batched
+# kernels cost a whole layer/bucket table against one kernel point with
+# a single multiply-add — prefix/suffix sums of ``time`` collapse to
+# ``per_byte * (payload sums) + per_message * (payload counts)``, which
+# is the cumsum-free formulation :mod:`repro.core.batched` evaluates.
+# Each function folds the ``n <= 1`` zeroing in (both coefficients are
+# exactly 0.0 there) and is dtype-polymorphic like the time models.
+# ----------------------------------------------------------------------
+def ring_allreduce_coeffs(n, bandwidth, latency):
+    """``(per_byte, per_message)`` of :func:`ring_allreduce_time`:
+    ``2 (n-1)/n / B`` and ``2 (n-1) alpha``, zeroed where ``n <= 1``."""
+    xp = array_namespace(n, bandwidth, latency)
+    n = xp.asarray(n, dtype=xp.float64)
+    live = n > 1
+    safe_n = xp.where(live, n, 2.0)
+    per_byte = 2.0 * (safe_n - 1) / safe_n / bandwidth * live
+    per_message = 2.0 * (safe_n - 1) * latency * live
+    return per_byte, per_message
+
+
+def tree_allreduce_coeffs(n, bandwidth, latency):
+    """``(per_byte, per_message)`` of :func:`tree_allreduce_time`:
+    ``2 / B`` and ``2 ceil(log2 n) alpha``, zeroed where ``n <= 1``."""
+    xp = array_namespace(n, bandwidth, latency)
+    n = xp.asarray(n)
+    live = n > 1
+    depth = _ceil_log2(xp.where(live, n, 2), xp)
+    per_byte = 2.0 / bandwidth * live
+    per_message = 2.0 * depth * latency * live
+    return per_byte, per_message
+
+
+def hierarchical_allreduce_coeffs(n, gpus_per_node,
+                                  intra_bandwidth, intra_latency,
+                                  inter_bandwidth, inter_latency):
+    """``(per_byte, per_message)`` of
+    :func:`hierarchical_allreduce_time`: the intra-node term (live when
+    ``g > 1``) plus the inter-node ring over the ``1/g`` shard (live
+    when ``nodes > 1``), each contributing its own affine piece."""
+    xp = array_namespace(n, gpus_per_node, intra_bandwidth,
+                         inter_bandwidth)
+    n = xp.asarray(n, dtype=xp.int64)
+    gpn = xp.asarray(gpus_per_node, dtype=xp.int64)
+    g = xp.minimum(n, gpn)
+    safe_g = xp.maximum(g, 1)
+    nodes = (n + safe_g - 1) // safe_g          # exact ceil(n / g)
+    gf = safe_g.astype(xp.float64)
+    intra_live = g > 1
+    per_byte = 2.0 * (gf - 1) / gf / intra_bandwidth * intra_live
+    per_message = 2.0 * (gf - 1) * intra_latency * intra_live
+    ring_byte, ring_message = ring_allreduce_coeffs(
+        nodes.astype(xp.float64), inter_bandwidth, inter_latency)
+    return per_byte + ring_byte / gf, per_message + ring_message
+
+
 @dataclass(frozen=True)
 class DeviceSpec:
     name: str

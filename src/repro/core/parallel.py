@@ -1,0 +1,160 @@
+"""Sharded sweep execution: grid chunks across a worker pool.
+
+The batched kernel already evaluates tens of thousands of scenarios per
+core-millisecond, so the parallel layer's job is **not** to make one
+chunk faster — it is to let a grid sweep use more than one core without
+changing a single output bit.  The design that makes that trivial:
+
+* A :class:`~repro.core.scenarios.ScenarioGrid` is a tiny frozen
+  value object, and every per-scenario quantity is *derived* from the
+  flat index (rightmost axis fastest).  A unit of work is therefore
+  just ``(grid, lo, hi)`` — no arrays cross the process boundary on
+  the way in, and the grid pickles in microseconds.
+* :meth:`repro.core.batched.GridEvaluator.run_span` restricts the
+  kernel to the unique kernel points a span touches, so a worker
+  evaluating 1/Nth of the grid does ~1/Nth of the kernel work — the
+  memoized evaluator (grid structure, workload tables, bucket tables)
+  is built once per worker process and shared by all its spans.
+* Workers return columnar tables (:mod:`repro.core.resulttable`):
+  one pickled NumPy array per column, not N dicts.
+* Chunking is deterministic and results are yielded **in submission
+  order**, so ``jobs=N`` output is bit-identical to serial — the
+  kernel is pure elementwise arithmetic per scenario point, and
+  chunk boundaries cannot change any value
+  (``tests/test_parallel.py`` pins exact equality).
+
+``pool="process"`` (default) uses a spawn-context
+``ProcessPoolExecutor`` — fork is unsafe with threaded BLAS and any
+jax runtime in the parent.  ``pool="thread"`` runs the spans on
+threads instead: zero startup cost and useful concurrency because the
+kernel spends its time inside NumPy (GIL released), but processes are
+the honest default for CPU-bound sharding.  Pools are cached per
+``(kind, jobs)`` and shut down at interpreter exit.
+
+The jax backend does **not** use this module: sharding there happens
+on the device mesh inside the jit kernel
+(:mod:`repro.core.batched_jax`), where a host pool would only fight
+XLA for the same devices.
+"""
+from __future__ import annotations
+
+import atexit
+import os
+import sys
+from concurrent.futures import Executor, ProcessPoolExecutor, \
+    ThreadPoolExecutor
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.scenarios import ScenarioGrid
+
+#: ``sys.path`` entry the workers need to import :mod:`repro` — spawned
+#: interpreters inherit neither ``PYTHONPATH`` mutations made after
+#: startup nor the parent's ``sys.path``.
+_SRC_PATH = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+POOL_KINDS = ("process", "thread")
+
+
+def resolve_jobs(jobs: int | None) -> int:
+    """Worker count for a ``jobs`` argument: ``None``/``0``/``1`` mean
+    serial, a negative value means one worker per available core."""
+    if not jobs or jobs == 1:
+        return 1
+    if jobs < 0:
+        return os.cpu_count() or 1
+    return int(jobs)
+
+
+def span_plan(n: int, jobs: int, chunk: int) -> list[tuple[int, int]]:
+    """Contiguous ``(lo, hi)`` spans covering ``[0, n)``: at least
+    ``chunk`` scenarios each (a span below kernel-chunk size wastes the
+    fixed per-call cost), at most ``4 * jobs`` spans total (enough
+    slack to even out simulator-fallback stragglers without drowning
+    in per-span overhead)."""
+    if n == 0:
+        return []
+    span = max(chunk, -(-n // (jobs * 4)))
+    return [(lo, min(lo + span, n)) for lo in range(0, n, span)]
+
+
+def _init_worker(src_path: str) -> None:
+    if src_path not in sys.path:
+        sys.path.insert(0, src_path)
+
+
+def _eval_span(grid: ScenarioGrid, lo: int, hi: int,
+               warm_iterations: int) -> dict:
+    """One unit of work: evaluate flat scenario indices ``[lo, hi)``
+    and return the finished columnar table.  Runs in the worker; the
+    evaluator memo (:func:`repro.core.batched.grid_evaluator`) makes
+    every span after a worker's first reuse the prepared structure."""
+    from repro.core.batched import grid_evaluator
+
+    ev = grid_evaluator(grid)
+    table, batched = ev.run_span(lo, hi)
+    if not bool(batched.all()):
+        # simulator-fallback rows are filled where they are computed,
+        # so the parent never re-derives which rows a span left bogus
+        from repro.core.resulttable import fill_rows
+        from repro.core.sweep import _sim_eval
+
+        idx = np.nonzero(~batched)[0]
+        fill_rows(table, idx,
+                  [_sim_eval(ev.scenario_at(lo + int(i)), warm_iterations)
+                   for i in idx])
+    return table
+
+
+_POOLS: dict[tuple[str, int], Executor] = {}
+
+
+def _get_pool(kind: str, jobs: int) -> Executor:
+    if kind not in POOL_KINDS:
+        raise ValueError(f"unknown pool {kind!r}; one of {POOL_KINDS}")
+    key = (kind, jobs)
+    pool = _POOLS.get(key)
+    if pool is None:
+        if kind == "process":
+            import multiprocessing as mp
+
+            pool = ProcessPoolExecutor(
+                max_workers=jobs, mp_context=mp.get_context("spawn"),
+                initializer=_init_worker, initargs=(_SRC_PATH,))
+        else:
+            pool = ThreadPoolExecutor(max_workers=jobs)
+        _POOLS[key] = pool
+    return pool
+
+
+@atexit.register
+def _shutdown_pools() -> None:
+    for pool in _POOLS.values():
+        pool.shutdown(wait=False, cancel_futures=True)
+    _POOLS.clear()
+
+
+def parallel_tables(grid: ScenarioGrid, *, jobs: int,
+                    chunk: int, warm_iterations: int = 6,
+                    pool: str | Executor = "process") -> Iterator[dict]:
+    """Evaluate ``grid`` sharded across ``jobs`` workers, yielding
+    finished columnar tables **in grid order** (submission order; all
+    spans are in flight at once, results are consumed as each earliest
+    outstanding span completes).  ``pool`` is ``"process"`` /
+    ``"thread"`` or any ``concurrent.futures.Executor`` to reuse."""
+    jobs = resolve_jobs(jobs)
+    n = len(grid)
+    spans = span_plan(n, jobs, chunk)
+    if not spans:
+        return
+    if jobs == 1:
+        for lo, hi in spans:
+            yield _eval_span(grid, lo, hi, warm_iterations)
+        return
+    ex = pool if isinstance(pool, Executor) else _get_pool(pool, jobs)
+    futures = [ex.submit(_eval_span, grid, lo, hi, warm_iterations)
+               for lo, hi in spans]
+    for fut in futures:
+        yield fut.result()

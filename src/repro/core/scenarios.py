@@ -171,6 +171,25 @@ class ScenarioGrid:
                     self.workloads, self.clusters, self.worker_counts,
                     self.policies, self.collectives, self.interconnects)]
 
+    def scenario_at(self, i: int) -> Scenario:
+        """Materialize the scenario at flat ``expand()`` index ``i``
+        (rightmost axis fastest) without expanding the grid — how the
+        batched/parallel paths recover the few simulator-fallback
+        scenarios of an otherwise fully batched grid."""
+        codes = []
+        for axis in (self.interconnects, self.collectives, self.policies,
+                     self.worker_counts, self.clusters, self.workloads):
+            i, c = divmod(i, len(axis))
+            codes.append(c)
+        ii, ai, pi, ki, ci, wi = codes
+        return Scenario(workload=self.workloads[wi],
+                        cluster=self.clusters[ci],
+                        n_workers=int(self.worker_counts[ki]),
+                        policy=self.policies[pi],
+                        collective=self.collectives[ai],
+                        interconnect=self.interconnects[ii],
+                        batch_per_gpu=self.batch_per_gpu)
+
 def default_grid() -> ScenarioGrid:
     """The out-of-the-box study: every paper workload and cluster, six
     cluster sizes, the five exactly-solvable policies, and all three
@@ -226,7 +245,7 @@ def frontier_grid() -> ScenarioGrid:
     This is exactly the what-if study the paper's future-work section
     asks for (which bucket size rescues InfiniBand utilization, and at
     what link speed does fusion stop mattering?); the batched evaluator
-    answers it in about a second."""
+    answers it in tens of milliseconds."""
     interconnects = tuple(
         f"{base}@bw{bw:g}@lat{lat:g}"
         for base in FRONTIER_LINK_BASES

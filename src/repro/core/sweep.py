@@ -11,7 +11,7 @@ combinations — in one call, two ways:
   grid as ``(scenario x layer)`` matrices (workload tables resolved
   through the pluggable registry of :mod:`repro.core.workloads` —
   ``cnn:``/``trace:``/``llm:`` — and memoized at module scope);
-  hundreds of thousands of scenarios per second.  The per-scenario
+  millions of scenarios per second.  The per-scenario
   :func:`_fast_eval` stays as the reference implementation — the two
   agree to <= 1e-9 relative (property-tested), and ``batched=False``
   pins a sweep to it.
@@ -26,14 +26,26 @@ combinations — in one call, two ways:
   built and list-scheduled via
   :func:`repro.core.simulator.simulate_steady`.
 
-``backend="jax"`` swaps the batched engine for the jit/vmap-compiled
-kernels of :mod:`repro.core.batched_jax` (same two tiers through XLA,
-float64, <= 1e-6 agreement with the NumPy oracle, property-tested).
-NumPy stays the default and the reference: the jax backend never
-falls back silently — combinations that would need the per-scenario
-reference paths (``batched=False``), the event-driven simulator
+Results are **columnar end-to-end**: the batched kernels emit tables
+(one NumPy array per :data:`COLUMNS` key, schema in
+:mod:`repro.core.resulttable`), :func:`iter_tables` streams them chunk
+by chunk, and :class:`SweepResult` stores the column arrays — per-row
+dicts are a lazy compat view (:attr:`SweepResult.rows`), never built
+on the hot path.  ``jobs=N`` shards the chunks of a grid sweep across
+a process (or thread) pool (:mod:`repro.core.parallel`), preserving
+grid order exactly.
+
+``backend="jax"`` swaps the batched engine for the fused jit kernel
+of :mod:`repro.core.batched_jax` (same two tiers through XLA, float64,
+<= 1e-6 agreement with the NumPy oracle, property-tested).  NumPy
+stays the default and the reference: the jax backend never falls back
+silently — combinations that would need the per-scenario reference
+paths (``batched=False``), the event-driven simulator
 (``force_simulator=True``) or a grid with simulator-only policies
-raise ``ValueError`` instead.
+raise ``ValueError`` instead.  Under ``jobs>1`` the jax backend
+shards over its device mesh when more than one device is visible (a
+host pool would fight XLA for the devices), and is a documented no-op
+on one device.
 
 The property tests assert the analytical and simulator paths agree to
 <= 1e-6 relative on every policy with an exact closed form, and the
@@ -47,26 +59,24 @@ from __future__ import annotations
 import csv
 import json
 import time
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from typing import Iterable, Iterator, Sequence
 
 import numpy as np
 
 from repro.core import analytical
-from repro.core.batched import eval_scenarios, grid_evaluator
+from repro.core.batched import grid_evaluator
+from repro.core.batched import eval_scenarios  # noqa: F401  (re-export)
 from repro.core.costmodel import comm_scale_fn
 from repro.core.policies import Policy
+from repro.core.resulttable import (COLUMNS, concat_tables, method_counts,
+                                    rows_from_table, table_from_rows,
+                                    table_len)
 from repro.core.scenarios import (Scenario, ScenarioGrid,
                                   normalize_interconnect, resolve_cluster,
                                   resolve_policy)
 from repro.core.simulator import simulate_steady
 from repro.core.workloads import WorkloadTable, resolve_workload
-
-#: Column order of the tidy results table.
-COLUMNS = ("workload", "cluster", "n_workers", "policy", "collective",
-           "interconnect", "batch_per_gpu", "iteration_time_s",
-           "samples_per_sec", "speedup", "t_comm_s", "t_comp_s",
-           "method")
 
 
 def has_fast_path(policy: Policy) -> bool:
@@ -156,7 +166,13 @@ def _row(s: Scenario, batch: int, t_iter: float, t1: float, t_comm: float,
 
 @dataclass
 class SweepResult:
-    """Tidy results table: one dict per scenario, :data:`COLUMNS` keys.
+    """Tidy results table, stored **columnar**: ``columns`` maps each
+    :data:`COLUMNS` key to one ``(n,)`` NumPy array (the schema of
+    :mod:`repro.core.resulttable`).  :attr:`rows` is the lazy per-row
+    compat view — a ``list[dict]`` built (and cached) on first access,
+    so code that iterates rows keeps working while the hot path
+    (:func:`sweep` -> CSV/JSON/DataFrame/filter/sort) never touches
+    per-row Python objects.
 
     ``n_analytical`` counts closed-form batched rows, ``n_timeline``
     bucket-timeline batched rows, ``n_simulated`` event-driven
@@ -165,21 +181,46 @@ class SweepResult:
     (``"numpy"`` or ``"jax"``).
     """
 
-    rows: list[dict]
+    columns: dict[str, np.ndarray]
     elapsed_s: float
     n_analytical: int
     n_simulated: int
     n_timeline: int = 0
     backend: str = "numpy"
+    _rows: list | None = field(default=None, repr=False, compare=False)
+
+    @property
+    def rows(self) -> list[dict]:
+        """Per-row dict view of :attr:`columns` (cached)."""
+        if self._rows is None:
+            self._rows = rows_from_table(self.columns)
+        return self._rows
 
     def __len__(self) -> int:
-        return len(self.rows)
+        return table_len(self.columns)
+
+    @property
+    def scenarios_per_sec(self) -> float:
+        return len(self) / self.elapsed_s if self.elapsed_s else 0.0
 
     def sorted_by(self, column: str, reverse: bool = True) -> list[dict]:
-        return sorted(self.rows, key=lambda r: r[column], reverse=reverse)
+        """Rows ordered by ``column`` — a stable argsort over the
+        column array (ties keep grid order, exactly like
+        ``sorted(rows, ...)`` did on the per-row path)."""
+        col = self.columns[column]
+        if reverse:
+            # stable *descending*: stable-argsort the reversed column,
+            # map indices back, reverse — equal keys keep ascending
+            # original order, matching sorted(reverse=True)
+            n = len(col)
+            idx = (n - 1 - np.argsort(col[::-1], kind="stable"))[::-1]
+        else:
+            idx = np.argsort(col, kind="stable")
+        return rows_from_table(self.columns, idx)
 
     def filter(self, **eq) -> list[dict]:
-        """Rows matching all ``column=value`` pairs.
+        """Rows matching all ``column=value`` pairs — one vectorized
+        equality mask per pair, no per-row Python comparisons.
 
         ``interconnect`` accepts both spellings of "cluster default":
         ``None`` and ``"default"`` (rows always store the normalized
@@ -187,22 +228,25 @@ class SweepResult:
         """
         if "interconnect" in eq:
             eq["interconnect"] = normalize_interconnect(eq["interconnect"])
-        return [r for r in self.rows
-                if all(r[k] == v for k, v in eq.items())]
+        mask = np.ones(len(self), dtype=bool)
+        for k, v in eq.items():
+            mask &= self.columns[k] == v
+        return rows_from_table(self.columns, np.nonzero(mask)[0])
 
     def to_csv(self, path) -> None:
         with open(path, "w", newline="") as f:
-            w = csv.DictWriter(f, fieldnames=COLUMNS)
-            w.writeheader()
-            w.writerows(self.rows)
+            w = csv.writer(f)
+            w.writerow(COLUMNS)
+            w.writerows(zip(*(self.columns[k].tolist() for k in COLUMNS)))
 
     def to_json(self, path=None, indent: int | None = 2) -> str:
         """The full result as a JSON document (and optionally write it
         to ``path``): sweep metadata plus the tidy rows."""
         doc = {
             "columns": list(COLUMNS),
-            "n_scenarios": len(self.rows),
+            "n_scenarios": len(self),
             "elapsed_s": self.elapsed_s,
+            "scenarios_per_sec": self.scenarios_per_sec,
             "n_analytical": self.n_analytical,
             "n_timeline": self.n_timeline,
             "n_simulated": self.n_simulated,
@@ -216,16 +260,23 @@ class SweepResult:
         return text
 
     def to_dataframe(self):
-        """Results as a pandas DataFrame (pandas is optional)."""
+        """Results as a pandas DataFrame (pandas is optional) — built
+        column-wise from the arrays, no row dicts."""
         import pandas as pd
 
-        return pd.DataFrame(self.rows, columns=COLUMNS)
+        return pd.DataFrame({k: self.columns[k] for k in COLUMNS},
+                            columns=list(COLUMNS))
 
     def format_table(self, rows: Sequence[dict] | None = None,
                      limit: int | None = None) -> str:
-        rows = self.rows if rows is None else list(rows)
-        if limit is not None:
-            rows = rows[:limit]
+        if rows is None:
+            # only materialize the rows actually printed
+            n = len(self) if limit is None else min(limit, len(self))
+            rows = rows_from_table(self.columns, np.arange(n))
+        else:
+            rows = list(rows)
+            if limit is not None:
+                rows = rows[:limit]
         # wide enough for provider-prefixed names (llm:qwen2-moe-a2.7b)
         header = (f"{'workload':22s} {'cluster':16s} {'wk':>3s} "
                   f"{'policy':13s} {'coll':12s} {'interconn':12s} "
@@ -249,7 +300,7 @@ DEFAULT_CHUNK = 8192
 
 #: Evaluation backends :func:`sweep` / :func:`iter_rows` / :func:`stream`
 #: accept: the NumPy engine (default, and the agreement oracle) and the
-#: jit/vmap-compiled jax kernels.
+#: fused jit jax kernel.
 BACKENDS = ("numpy", "jax")
 
 
@@ -273,84 +324,26 @@ def _check_backend(backend: str, *, batched: bool,
             "force. Drop force_simulator or use backend='numpy'.")
 
 
-def _jax_grid_chunks(grid: ScenarioGrid, chunk: int) -> Iterator[list[dict]]:
-    """Grid rows through the jax backend, chunk by chunk.  Grids with
-    simulator-only policies raise (in ``JaxGridEvaluator``) before any
-    evaluation happens."""
-    from repro.core.batched_jax import jax_grid_evaluator
+def _fill_simulated(table: dict, batched_mask: np.ndarray, ev, lo: int,
+                    warm_iterations: int) -> None:
+    """Overwrite the tier-2 placeholder rows of a chunk table with
+    event-driven simulator results, in place."""
+    from repro.core.resulttable import fill_rows
 
-    run = jax_grid_evaluator(grid).run()
-    for lo in range(0, len(run), chunk):
-        yield run.rows_slice(lo, min(lo + chunk, len(run)))
-
-
-def _grid_chunks(grid: ScenarioGrid, warm_iterations: int,
-                 chunk: int) -> Iterator[list[dict]]:
-    """Evaluate a grid through the batched kernel chunk by chunk,
-    filling simulator-fallback entries in place — the one copy of the
-    interleave logic shared by :func:`sweep` and :func:`iter_rows`."""
-    ev = grid_evaluator(grid)
-    run = ev.run()
-    for lo in range(0, len(run), chunk):
-        part = run.rows_slice(lo, min(lo + chunk, len(run)))
-        if not ev.all_batched:
-            for i, r in enumerate(part):
-                if r is None:
-                    part[i] = _sim_eval(ev.scenario_at(lo + i),
-                                        warm_iterations)
-        yield part
+    idx = np.nonzero(~batched_mask)[0]
+    if len(idx):
+        fill_rows(table, idx,
+                  [_sim_eval(ev.scenario_at(lo + int(i)), warm_iterations)
+                   for i in idx])
 
 
-def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
-              force_simulator: bool = False,
-              warm_iterations: int = 6,
-              batched: bool = True,
-              backend: str = "numpy",
-              chunk: int = DEFAULT_CHUNK) -> Iterator[dict]:
-    """Yield tidy result rows in scenario order, lazily.
-
-    The streaming core behind :func:`sweep` and :func:`stream`:
-    closed-form and bucket-timeline scenarios are evaluated by the
-    scenario-axis batched kernel ``chunk`` at a time, simulator
-    fallbacks are interleaved in place, and no more than one chunk of
-    rows is ever buffered — which is what lets frontier-sized grids
-    (tens of thousands of scenarios) stream straight to disk.
-
-    ``batched=False`` forces the per-scenario reference paths —
-    :func:`_fast_eval` for closed forms, the event-driven simulator
-    for schedule-dependent policies — the agreement oracles and the
-    slow side of the throughput benchmark.
-
-    ``backend="jax"`` evaluates through the jit/vmap kernels
-    (:mod:`repro.core.batched_jax`); incompatible with
-    ``batched=False`` / ``force_simulator=True`` and with
-    simulator-only policies (raises ``ValueError``, never a silent
-    fallback).
-    """
-    _check_backend(backend, batched=batched, force_simulator=force_simulator)
-    if backend == "jax":
-        if isinstance(grid, ScenarioGrid):
-            for part in _jax_grid_chunks(grid, chunk):
-                yield from part
-        else:
-            from repro.core.batched_jax import eval_scenarios_jax
-
-            scenarios = list(grid)
-            for s in scenarios:
-                s.validate()
-            for lo in range(0, len(scenarios), chunk):
-                yield from eval_scenarios_jax(scenarios[lo:lo + chunk])
-        return
-    if isinstance(grid, ScenarioGrid):
-        if batched and not force_simulator:
-            for part in _grid_chunks(grid, warm_iterations, chunk):
-                yield from part
-            return
-        scenarios = grid.expand()          # validates the axes
-    else:
-        scenarios = list(grid)
-        for s in scenarios:
-            s.validate()
+def _reference_rows(scenarios: Sequence[Scenario], *,
+                    force_simulator: bool, warm_iterations: int,
+                    batched: bool, chunk: int) -> Iterator[list[dict]]:
+    """The per-scenario reference paths, chunk by chunk:
+    :func:`_fast_eval` for closed forms (or the batched list kernel
+    when ``batched``), the event-driven simulator for the rest — the
+    agreement oracles and the slow side of the throughput benchmark."""
     # per-policy evaluation tier: 2 = closed form, 1 = bucket-timeline
     # form (batched kernel only), 0 = simulator-only
     tier_of: dict[str, int] = {}
@@ -374,16 +367,113 @@ def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
         else:
             fast_rows = iter([_fast_eval(part[i]) for i in fast])
         fast_set = set(fast)
-        for i, s in enumerate(part):
-            yield next(fast_rows) if i in fast_set \
-                else _sim_eval(s, warm_iterations)
+        yield [next(fast_rows) if i in fast_set
+               else _sim_eval(s, warm_iterations)
+               for i, s in enumerate(part)]
+
+
+def iter_tables(grid: ScenarioGrid | Iterable[Scenario], *,
+                force_simulator: bool = False,
+                warm_iterations: int = 6,
+                batched: bool = True,
+                backend: str = "numpy",
+                chunk: int = DEFAULT_CHUNK,
+                jobs: int | None = None,
+                pool: str = "process") -> Iterator[dict]:
+    """Yield columnar result tables in scenario order, lazily — the
+    single evaluation core behind :func:`sweep`, :func:`iter_rows` and
+    :func:`stream`.  Each yielded table maps every :data:`COLUMNS` key
+    to one NumPy array of ``<= chunk`` rows (exactly ``chunk`` except
+    the last), so no more than one chunk is ever buffered.
+
+    Routing: a :class:`ScenarioGrid` on the default arguments goes
+    straight through the batched grid kernel
+    (:meth:`repro.core.batched.GridRun.table_slice`), with
+    simulator-fallback rows overwritten in place; ``jobs > 1`` shards
+    the grid's chunks across a worker pool
+    (:func:`repro.core.parallel.parallel_tables` — order-preserving,
+    bit-identical to serial); ``backend="jax"`` evaluates through the
+    fused jit kernel (sharding over the device mesh when ``jobs > 1``
+    and more than one device is visible).  Scenario lists and the
+    reference paths (``batched=False`` / ``force_simulator=True``)
+    produce per-row dicts and are wrapped into tables chunk by chunk.
+    """
+    _check_backend(backend, batched=batched, force_simulator=force_simulator)
+    if backend == "jax":
+        if isinstance(grid, ScenarioGrid):
+            from repro.core.batched_jax import jax_grid_evaluator
+
+            mesh = None
+            if jobs is not None and jobs > 1:
+                import jax as _jax
+                if len(_jax.devices()) > 1:
+                    from repro.launch.mesh import make_dp_mesh
+                    mesh = make_dp_mesh(min(jobs, len(_jax.devices())))
+            run = jax_grid_evaluator(grid, mesh=mesh).run()
+            for lo in range(0, len(run), chunk):
+                yield run.table_slice(lo, min(lo + chunk, len(run)))[0]
+        else:
+            from repro.core.batched_jax import eval_scenarios_jax
+
+            scenarios = list(grid)
+            for s in scenarios:
+                s.validate()
+            for lo in range(0, len(scenarios), chunk):
+                yield table_from_rows(
+                    eval_scenarios_jax(scenarios[lo:lo + chunk]))
+        return
+    if isinstance(grid, ScenarioGrid) and batched and not force_simulator:
+        if jobs is not None and jobs > 1:
+            from repro.core.parallel import parallel_tables
+
+            yield from parallel_tables(grid, jobs=jobs, chunk=chunk,
+                                       warm_iterations=warm_iterations,
+                                       pool=pool)
+            return
+        ev = grid_evaluator(grid)
+        run = ev.run()
+        for lo in range(0, len(run), chunk):
+            table, mask = run.table_slice(lo, min(lo + chunk, len(run)))
+            if not ev.all_batched:
+                _fill_simulated(table, mask, ev, lo, warm_iterations)
+            yield table
+        return
+    if isinstance(grid, ScenarioGrid):
+        scenarios = grid.expand()          # validates the axes
+    else:
+        scenarios = list(grid)
+        for s in scenarios:
+            s.validate()
+    for part in _reference_rows(scenarios, force_simulator=force_simulator,
+                                warm_iterations=warm_iterations,
+                                batched=batched, chunk=chunk):
+        yield table_from_rows(part)
+
+
+def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
+              force_simulator: bool = False,
+              warm_iterations: int = 6,
+              batched: bool = True,
+              backend: str = "numpy",
+              chunk: int = DEFAULT_CHUNK,
+              jobs: int | None = None) -> Iterator[dict]:
+    """Yield tidy result rows in scenario order, lazily — the per-row
+    view of :func:`iter_tables` (one chunk of rows is materialized at
+    a time; for columnar access use :func:`iter_tables` directly)."""
+    for table in iter_tables(grid, force_simulator=force_simulator,
+                             warm_iterations=warm_iterations,
+                             batched=batched, backend=backend,
+                             chunk=chunk, jobs=jobs):
+        yield from rows_from_table(table)
 
 
 def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
           force_simulator: bool = False,
           warm_iterations: int = 6,
           batched: bool = True,
-          backend: str = "numpy") -> SweepResult:
+          backend: str = "numpy",
+          jobs: int | None = None,
+          chunk: int | None = None) -> SweepResult:
     """Evaluate every scenario of ``grid`` and return the tidy table.
 
     Closed-form and bucket-timeline scenarios go through the
@@ -396,46 +486,42 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
     event-driven simulator — the agreement oracle, and the way to study
     schedules neither batched form can express.
 
-    ``backend="jax"`` routes batched evaluation through the jit/vmap
-    kernels (:mod:`repro.core.batched_jax`) instead of the NumPy
+    ``backend="jax"`` routes batched evaluation through the fused jit
+    kernel (:mod:`repro.core.batched_jax`) instead of the NumPy
     engine; rows agree with the NumPy oracle to <= 1e-6
     (property-tested).  The jax backend has no reference or simulator
     path, so ``batched=False`` / ``force_simulator=True`` / grids with
     simulator-only policies raise ``ValueError`` rather than silently
     falling back.
+
+    ``jobs=N`` (grid sweeps) shards chunks across ``N`` worker
+    processes (:mod:`repro.core.parallel`) — output is bit-identical
+    to serial, in the same order.  On the jax backend it shards over
+    the device mesh instead (no-op on a single device).
     """
     _check_backend(backend, batched=batched, force_simulator=force_simulator)
     t0 = time.perf_counter()
-    rows: list[dict] = []
-    if backend == "jax" and isinstance(grid, ScenarioGrid):
-        ev = grid_evaluator(grid)          # raises in _jax_grid_chunks if
-        for part in _jax_grid_chunks(grid, DEFAULT_CHUNK):  # not all batched
-            rows.extend(part)
-        return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
-                           n_analytical=ev.n_fast,
-                           n_timeline=ev.n_timeline,
-                           n_simulated=0, backend=backend)
-    if backend == "numpy" and isinstance(grid, ScenarioGrid) \
-            and batched and not force_simulator:
-        ev = grid_evaluator(grid)
-        for part in _grid_chunks(grid, warm_iterations, DEFAULT_CHUNK):
-            rows.extend(part)
-        return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
-                           n_analytical=ev.n_fast,
-                           n_timeline=ev.n_timeline,
-                           n_simulated=len(ev) - ev.n_fast - ev.n_timeline)
-    n_fast = n_tl = n_slow = 0
-    for r in iter_rows(grid, force_simulator=force_simulator,
-                       warm_iterations=warm_iterations, batched=batched,
-                       backend=backend):
-        rows.append(r)
-        if r["method"] == "analytical":
-            n_fast += 1
-        elif r["method"] == "timeline":
-            n_tl += 1
+    grid_batched = isinstance(grid, ScenarioGrid) and batched \
+        and not force_simulator
+    if chunk is None:
+        if grid_batched and (jobs is None or jobs <= 1):
+            # one whole-grid chunk: a single table, no concat
+            chunk = max(len(grid), 1)
         else:
-            n_slow += 1
-    return SweepResult(rows=rows, elapsed_s=time.perf_counter() - t0,
+            chunk = DEFAULT_CHUNK
+    columns = concat_tables(list(iter_tables(
+        grid, force_simulator=force_simulator,
+        warm_iterations=warm_iterations, batched=batched,
+        backend=backend, chunk=chunk, jobs=jobs)))
+    elapsed = time.perf_counter() - t0
+    if grid_batched:
+        # static counts from the grid structure — no label scan
+        ev = grid_evaluator(grid)
+        n_fast, n_tl = ev.n_fast, ev.n_timeline
+        n_slow = 0 if backend == "jax" else len(ev) - n_fast - n_tl
+    else:
+        n_fast, n_tl, n_slow = method_counts(columns)
+    return SweepResult(columns=columns, elapsed_s=elapsed,
                        n_analytical=n_fast, n_timeline=n_tl,
                        n_simulated=n_slow, backend=backend)
 
@@ -444,16 +530,16 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
            csv_path=None, json_path=None,
            force_simulator: bool = False, warm_iterations: int = 6,
            batched: bool = True, backend: str = "numpy",
-           chunk: int = DEFAULT_CHUNK) -> dict:
+           chunk: int = DEFAULT_CHUNK, jobs: int | None = None) -> dict:
     """Evaluate ``grid`` **once** and write the tidy table to
     ``csv_path`` and/or ``json_path`` incrementally — one chunk of
     rows in memory at a time, both formats fed from the same pass.
     Returns summary metadata (``n_scenarios`` / ``elapsed_s`` /
-    ``n_analytical`` / ``n_simulated``).
+    ``scenarios_per_sec`` / ``n_analytical`` / ``n_simulated``).
 
     The JSON document has the :meth:`SweepResult.to_json` shape (same
-    keys; ``rows`` first so the array can stream, counts in the
-    trailer).
+    keys; ``rows`` first so the array can stream, counts and timing in
+    the trailer).
     """
     if csv_path is None and json_path is None:
         raise ValueError("stream() needs csv_path and/or json_path")
@@ -464,41 +550,46 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
     try:
         if csv_path is not None:
             csv_file = open(csv_path, "w", newline="")
-            writer = csv.DictWriter(csv_file, fieldnames=COLUMNS)
-            writer.writeheader()
+            writer = csv.writer(csv_file)
+            writer.writerow(COLUMNS)
         if json_path is not None:
             json_file = open(json_path, "w")
             json_file.write('{\n  "columns": %s,\n  "rows": ['
                             % json.dumps(list(COLUMNS)))
         first = True
-        for r in iter_rows(grid, force_simulator=force_simulator,
-                           warm_iterations=warm_iterations,
-                           batched=batched, backend=backend, chunk=chunk):
+        for table in iter_tables(grid, force_simulator=force_simulator,
+                                 warm_iterations=warm_iterations,
+                                 batched=batched, backend=backend,
+                                 chunk=chunk, jobs=jobs):
             if csv_file is not None:
-                writer.writerow(r)
+                writer.writerows(
+                    zip(*(table[k].tolist() for k in COLUMNS)))
             if json_file is not None:
-                json_file.write(("\n    " if first else ",\n    ")
-                                + json.dumps(r))
-            first = False
-            if r["method"] == "analytical":
-                n_fast += 1
-            elif r["method"] == "timeline":
-                n_tl += 1
-            else:
-                n_slow += 1
+                for r in rows_from_table(table):
+                    json_file.write(("\n    " if first else ",\n    ")
+                                    + json.dumps(r))
+                    first = False
+            f, tl, _ = method_counts(table)
+            n_fast += f
+            n_tl += tl
+            n_slow += table_len(table) - f - tl
         elapsed = time.perf_counter() - t0
+        n = n_fast + n_tl + n_slow
+        rate = n / elapsed if elapsed else 0.0
         if json_file is not None:
             json_file.write(
                 '\n  ],\n  "n_scenarios": %d,\n  "elapsed_s": %s,\n'
+                '  "scenarios_per_sec": %s,\n'
                 '  "n_analytical": %d,\n  "n_timeline": %d,\n'
                 '  "n_simulated": %d,\n  "backend": %s\n}\n'
-                % (n_fast + n_tl + n_slow, json.dumps(elapsed),
+                % (n, json.dumps(elapsed), json.dumps(rate),
                    n_fast, n_tl, n_slow, json.dumps(backend)))
     finally:
         for f in (csv_file, json_file):
             if f is not None:
                 f.close()
-    return {"n_scenarios": n_fast + n_tl + n_slow, "elapsed_s": elapsed,
+    return {"n_scenarios": n, "elapsed_s": elapsed,
+            "scenarios_per_sec": rate,
             "n_analytical": n_fast, "n_timeline": n_tl,
             "n_simulated": n_slow, "backend": backend}
 

@@ -25,7 +25,8 @@ fast path (milliseconds end to end); ``--grid mixed`` spans all three
 providers (1620 scenarios); ``--grid frontier`` is the 51 840-scenario
 bandwidth x latency x bucket-size x priority design-space study
 (schedule-dependent policies ride the batched bucket-timeline path, so
-the whole grid evaluates in about a second) — pair it with ``--stream``
+the whole grid evaluates in tens of milliseconds) — pair it with
+``--stream``
 to write CSV/JSON incrementally instead of buffering every row.
 """
 from __future__ import annotations
@@ -36,7 +37,7 @@ import sys
 
 from repro.core.hardware import COLLECTIVE_ALGORITHMS, INTERCONNECT_PRESETS
 from repro.core.scenarios import default_grid, frontier_grid, mixed_grid
-from repro.core.sweep import COLUMNS, stream, sweep
+from repro.core.sweep import COLUMNS, DEFAULT_CHUNK, stream, sweep
 from repro.core.workloads import known_workloads
 
 
@@ -90,6 +91,15 @@ def build_parser() -> argparse.ArgumentParser:
                         "oracle) or 'jax' (jit+vmap kernels, sharded over "
                         "available devices; incompatible with "
                         "--per-scenario and --force-simulator)")
+    p.add_argument("--jobs", type=int, default=None, metavar="N",
+                   help="shard a grid sweep across N worker processes "
+                        "(-1 = one per core; output is bit-identical to "
+                        "serial, in the same order); with --backend jax "
+                        "shards over the device mesh instead")
+    p.add_argument("--chunk", type=int, default=None, metavar="N",
+                   help="scenarios per evaluation chunk (default "
+                        f"{DEFAULT_CHUNK}): the streaming buffer unit, "
+                        "and the minimum shard size under --jobs")
     p.add_argument("--stream", action="store_true",
                    help="stream rows straight to --csv/--json without "
                         "buffering the table (huge grids); skips the "
@@ -170,18 +180,22 @@ def main(argv: list[str] | None = None) -> int:
         summary = stream(grid, csv_path=args.csv, json_path=args.json,
                          force_simulator=args.force_simulator,
                          batched=not args.per_scenario,
-                         backend=args.backend)
+                         backend=args.backend, jobs=args.jobs,
+                         chunk=args.chunk or DEFAULT_CHUNK)
         dests = ", ".join(p for p in (args.csv, args.json) if p)
         print(f"streamed {summary['n_scenarios']} rows to {dests} "
               f"in {summary['elapsed_s']:.2f}s "
-              f"({summary['n_analytical']} analytical, "
+              f"({summary['scenarios_per_sec']:,.0f}/s; "
+              f"{summary['n_analytical']} analytical, "
               f"{summary['n_timeline']} timeline, "
               f"{summary['n_simulated']} simulated)")
         return 0
     result = sweep(grid, force_simulator=args.force_simulator,
-                   batched=not args.per_scenario, backend=args.backend)
+                   batched=not args.per_scenario, backend=args.backend,
+                   jobs=args.jobs, chunk=args.chunk)
     print(f"evaluated in {result.elapsed_s:.2f}s "
-          f"({result.n_analytical} analytical, "
+          f"({result.scenarios_per_sec:,.0f}/s; "
+          f"{result.n_analytical} analytical, "
           f"{result.n_timeline} timeline, "
           f"{result.n_simulated} simulated)")
 

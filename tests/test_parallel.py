@@ -1,0 +1,271 @@
+"""Columnar sweep pipeline + sharded execution.
+
+Pins the PR-7 contracts:
+
+* The columnar :class:`~repro.core.sweep.SweepResult` is
+  row-for-row equivalent to the per-scenario evaluation path on random
+  grids, on both backends (the "did the refactor change any number"
+  property).
+* ``jobs>1`` sharded execution is **bit-identical** to serial, in the
+  same order — chunk boundaries are invisible in the output.
+* The vectorized ``filter`` / ``sorted_by`` and the columnar
+  ``to_csv`` / ``to_json`` / ``format_table`` match their documented
+  per-row semantics exactly (including ``sorted`` tie stability).
+* The streamed JSON trailer round-trips the new throughput metadata
+  (``elapsed_s`` / ``scenarios_per_sec``) with the same key set as the
+  buffered document.
+"""
+from __future__ import annotations
+
+import csv
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from strategies import scenario_grids
+from repro.core.parallel import (parallel_tables, resolve_jobs, span_plan)
+from repro.core.resulttable import COLUMNS, concat_tables, table_from_rows
+from repro.core.scenarios import Scenario, ScenarioGrid, default_grid
+from repro.core.sweep import (DEFAULT_CHUNK, SweepResult, evaluate_scenario,
+                              iter_tables, stream, sweep)
+
+NUMERIC = ("iteration_time_s", "samples_per_sec", "speedup",
+           "t_comm_s", "t_comp_s")
+LABELS = tuple(k for k in COLUMNS if k not in NUMERIC)
+
+
+def assert_tables_identical(a: dict, b: dict):
+    for k in COLUMNS:
+        assert np.array_equal(a[k], b[k]), k
+
+
+def assert_rows_agree(got, want, rel=1e-9):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        for k in LABELS:
+            assert g[k] == w[k], k
+        for k in NUMERIC:
+            assert g[k] == pytest.approx(w[k], rel=rel, abs=1e-15), k
+
+
+def small_grid() -> ScenarioGrid:
+    return ScenarioGrid(workloads=("alexnet", "resnet50"),
+                        clusters=("v100-nvlink-ib",),
+                        worker_counts=(1, 4),
+                        policies=("tensorflow", "bucketed-4mb", "priority"),
+                        collectives=("ring", "hierarchical"))
+
+
+class TestColumnarEquivalence:
+    @settings(max_examples=10, deadline=None)
+    @given(scenario_grids())
+    def test_columnar_rows_match_per_scenario_path_on_random_grids(
+            self, grid):
+        r = sweep(grid)
+        assert_rows_agree(r.rows, [evaluate_scenario(s)
+                                   for s in grid.expand()])
+        rj = sweep(grid, backend="jax")
+        assert_rows_agree(rj.rows, r.rows, rel=1e-6)
+
+    def test_rows_view_is_cached_and_list_of_dicts(self):
+        r = sweep(small_grid())
+        rows = r.rows
+        assert isinstance(rows, list) and isinstance(rows[0], dict)
+        assert set(rows[0]) == set(COLUMNS)
+        assert r.rows is rows
+        # plain Python scalars — json-serializable without converters
+        json.dumps(rows[0])
+
+    def test_iter_tables_chunking_invisible(self):
+        grid = small_grid()
+        whole = concat_tables(list(iter_tables(grid)))
+        chunked = concat_tables(list(iter_tables(grid, chunk=5)))
+        assert_tables_identical(whole, chunked)
+
+
+class TestShardedExecution:
+    def test_jobs2_process_pool_bit_identical(self):
+        grid = default_grid()
+        serial = sweep(grid)
+        parallel = sweep(grid, jobs=2)
+        assert_tables_identical(serial.columns, parallel.columns)
+        assert (parallel.n_analytical, parallel.n_timeline,
+                parallel.n_simulated) == \
+            (serial.n_analytical, serial.n_timeline, serial.n_simulated)
+
+    def test_thread_pool_tiny_spans_preserve_order(self):
+        grid = small_grid()
+        serial = sweep(grid)
+        sharded = concat_tables(list(parallel_tables(
+            grid, jobs=3, chunk=1, pool="thread")))
+        assert_tables_identical(serial.columns, sharded)
+
+    def test_simulator_fallback_rows_filled_in_shards(self):
+        from repro.core import policies as P
+        from repro.core.policies import Policy
+        P.ALL_POLICIES["_unstudied"] = Policy("_unstudied",
+                                              overlap_comm=True)
+        try:
+            grid = ScenarioGrid(workloads=("alexnet",),
+                                clusters=("v100-nvlink-ib",),
+                                worker_counts=(2, 4),
+                                policies=("caffe-mpi", "_unstudied"))
+            serial = sweep(grid)
+            assert serial.n_simulated == 2
+            # thread pool: shares the (test-local) policy registry
+            sharded = concat_tables(list(parallel_tables(
+                grid, jobs=2, chunk=1, pool="thread")))
+            assert_tables_identical(serial.columns, sharded)
+        finally:
+            del P.ALL_POLICIES["_unstudied"]
+
+    def test_span_plan_covers_exactly(self):
+        assert span_plan(0, 4, 10) == []
+        for n, jobs, chunk in ((1, 2, 10), (100, 4, 8), (51840, 2, 8192)):
+            spans = span_plan(n, jobs, chunk)
+            assert spans[0][0] == 0 and spans[-1][1] == n
+            assert all(a[1] == b[0] for a, b in zip(spans, spans[1:]))
+            assert all(hi - lo >= min(chunk, n) for lo, hi in spans[:-1])
+            assert len(spans) <= 4 * jobs
+
+    def test_resolve_jobs(self):
+        import os
+        assert resolve_jobs(None) == resolve_jobs(0) == resolve_jobs(1) == 1
+        assert resolve_jobs(3) == 3
+        assert resolve_jobs(-1) == (os.cpu_count() or 1)
+
+    def test_unknown_pool_kind_rejected(self):
+        with pytest.raises(ValueError, match="pool"):
+            list(parallel_tables(default_grid(), jobs=2, chunk=1,
+                                 pool="fiber"))
+
+
+class TestColumnarResultMethods:
+    @pytest.fixture(scope="class")
+    def result(self):
+        return sweep(small_grid())
+
+    def test_filter_matches_per_row_scan(self, result):
+        got = result.filter(policy="bucketed-4mb", n_workers=4)
+        want = [r for r in result.rows
+                if r["policy"] == "bucketed-4mb" and r["n_workers"] == 4]
+        assert got == want and len(got) == 4
+        assert result.filter(workload="nope") == []
+
+    def test_filter_normalizes_interconnect(self, result):
+        assert result.filter(interconnect=None) == \
+            result.filter(interconnect="default") == result.rows
+
+    def test_sorted_by_matches_python_sorted_with_tie_stability(
+            self, result):
+        for col in ("speedup", "workload", "n_workers"):
+            for rev in (True, False):
+                assert result.sorted_by(col, reverse=rev) == \
+                    sorted(result.rows, key=lambda r: r[col], reverse=rev)
+
+    def test_to_csv_round_trips(self, result, tmp_path):
+        path = tmp_path / "r.csv"
+        result.to_csv(path)
+        with open(path) as f:
+            rows = list(csv.DictReader(f))
+        assert len(rows) == len(result)
+        for got, want in zip(rows, result.rows):
+            assert set(got) == set(COLUMNS)
+            assert got["workload"] == want["workload"]
+            assert int(got["n_workers"]) == want["n_workers"]
+            assert float(got["iteration_time_s"]) == \
+                want["iteration_time_s"]
+
+    def test_to_json_document(self, result):
+        doc = json.loads(result.to_json())
+        assert doc["rows"] == result.rows
+        assert doc["n_scenarios"] == len(result)
+        assert doc["scenarios_per_sec"] == pytest.approx(
+            len(result) / doc["elapsed_s"])
+
+    def test_format_table_limit(self, result):
+        text = result.format_table(limit=3)
+        assert len(text.splitlines()) == 5           # header + rule + 3
+        assert result.format_table() == \
+            result.format_table(result.rows)
+
+    def test_empty_result(self):
+        r = sweep(ScenarioGrid(workloads=()))
+        assert len(r) == 0 and r.rows == []
+        assert r.filter(policy="naive") == []
+        assert r.sorted_by("speedup") == []
+        assert json.loads(r.to_json())["rows"] == []
+
+
+class TestStreamMetadata:
+    def test_stream_trailer_round_trips_throughput(self, tmp_path):
+        grid = small_grid()
+        path = tmp_path / "s.json"
+        summary = stream(grid, json_path=path)
+        doc = json.loads(path.read_text())
+        buffered = json.loads(sweep(grid).to_json())
+        assert set(doc) == set(buffered)
+        for key in ("n_scenarios", "elapsed_s", "scenarios_per_sec",
+                    "n_analytical", "n_timeline", "n_simulated", "backend"):
+            assert doc[key] == summary[key]
+        assert summary["scenarios_per_sec"] == pytest.approx(
+            summary["n_scenarios"] / summary["elapsed_s"])
+        assert doc["rows"] == buffered["rows"]
+
+    def test_stream_jobs_matches_serial_output(self, tmp_path):
+        grid = default_grid()
+        a, b = tmp_path / "serial.csv", tmp_path / "jobs.csv"
+        stream(grid, csv_path=a)
+        stream(grid, csv_path=b, jobs=2)
+        assert a.read_text() == b.read_text()
+
+
+class TestSweepCli:
+    def test_jobs_flag(self, capsys, tmp_path):
+        from repro.launch.sweep import main
+        path = tmp_path / "cli.json"
+        assert main(["--workloads", "alexnet", "--workers", "2,4",
+                     "--policies", "tensorflow", "--jobs", "2",
+                     "--json", str(path)]) == 0
+        out = capsys.readouterr().out
+        assert "/s;" in out                      # throughput in the summary
+        doc = json.loads(path.read_text())
+        import dataclasses
+        ref = sweep(dataclasses.replace(          # CLI base is default_grid
+            default_grid(), workloads=("alexnet",), worker_counts=(2, 4),
+            policies=("tensorflow",)))
+        assert doc["rows"] == ref.rows
+
+    def test_jobs_flag_streaming(self, capsys, tmp_path):
+        from repro.launch.sweep import main
+        path = tmp_path / "cli_stream.json"
+        assert main(["--workloads", "alexnet", "--workers", "2",
+                     "--policies", "tensorflow,bucketed-4mb",
+                     "--jobs", "2", "--chunk", "3",
+                     "--stream", "--json", str(path)]) == 0
+        doc = json.loads(path.read_text())
+        assert doc["n_scenarios"] == 12 == len(doc["rows"])
+        assert doc["scenarios_per_sec"] > 0
+
+    def test_chunk_flag_buffered(self, capsys):
+        from repro.launch.sweep import main
+        assert main(["--workloads", "alexnet", "--workers", "2",
+                     "--policies", "tensorflow", "--chunk", "2",
+                     "--top", "3"]) == 0
+        assert "evaluated in" in capsys.readouterr().out
+
+
+class TestSweepResultConstruction:
+    def test_from_table_from_rows(self):
+        rows = [evaluate_scenario(Scenario("alexnet", "v100-nvlink-ib", 4,
+                                           "caffe-mpi"))]
+        r = SweepResult(columns=table_from_rows(rows), elapsed_s=0.5,
+                        n_analytical=1, n_simulated=0)
+        assert r.rows == rows
+        assert r.scenarios_per_sec == pytest.approx(2.0)
+        assert len(r) == 1
+
+    def test_default_chunk_exported(self):
+        assert DEFAULT_CHUNK >= 1
