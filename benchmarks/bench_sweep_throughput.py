@@ -33,10 +33,17 @@ process-pool throughput (recorded, not gated: one CI core has nothing
 to fan out over).  ``--assert-e2e-floor R`` gates the frontier grid's
 end-to-end throughput at >= R scenarios/s on both backends.
 
+The heterogeneity metrics (ISSUE 8): a dedicated het/straggler grid
+runs the (S,W,L) slowest-worker kernels plus the straggler Monte
+Carlo tail pass end to end on both backends.  ``--assert-het-floor R``
+gates CI on het-grid batched throughput >= R scenarios/s (numpy, MC
+included) and backend agreement <= 1e-6 — the trajectory lands in
+``BENCH_sweep.json`` under ``het_straggler_grid``.
+
 ``--smoke`` does one timed repeat per grid and shrinks the
-bucketed/priority grid — the CI regression gate (pair with
-``--assert-timeline-floor`` / ``--assert-jax-floor`` /
-``--assert-e2e-floor``).
+bucketed/priority and het/straggler grids — the CI regression gate
+(pair with ``--assert-timeline-floor`` / ``--assert-jax-floor`` /
+``--assert-e2e-floor`` / ``--assert-het-floor``).
 """
 from __future__ import annotations
 
@@ -73,6 +80,23 @@ def bucketed_priority_grid(smoke: bool = False) -> ScenarioGrid:
                         collectives=COLLECTIVE_ALGORITHMS,
                         interconnects=(None, "10gbe", "ib-200g",
                                        "ib-100g-fused"), **kw)
+
+
+def het_straggler_grid(smoke: bool = False) -> ScenarioGrid:
+    """The (S,W,L) heterogeneity grid: paper CNNs on both paper
+    clusters with compute-skew and link-skew profiles, half the rows
+    under a 100-draw lognormal straggler Monte Carlo.  This is the
+    path ``--assert-het-floor`` gates: slowest-worker kernels + tail
+    statistics end to end."""
+    kw = dict(workloads=("alexnet", "googlenet", "resnet50"),
+              clusters=("k80-pcie-10gbe", "v100-nvlink-ib"),
+              policies=("tensorflow", "bucketed-4mb", "priority"),
+              het_profiles=("het:1x0.5+3x1.0", "het:2x1.0@bw0.5"),
+              stragglers=(None, "lognormal:0.2x100"))
+    if smoke:
+        return ScenarioGrid(worker_counts=(4,), collectives=("ring",), **kw)
+    return ScenarioGrid(worker_counts=(4, 16),
+                        collectives=("ring", "hierarchical"), **kw)
 
 
 def _time_sweep(grid, repeats: int, batched: bool,
@@ -147,7 +171,8 @@ def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
     repeats = 1 if smoke else 5
     grids = {"default_grid": default_grid(), "mixed_grid": mixed_grid(),
              "frontier_grid": frontier_grid(),
-             "bucketed_priority_grid": bucketed_priority_grid(smoke)}
+             "bucketed_priority_grid": bucketed_priority_grid(smoke),
+             "het_straggler_grid": het_straggler_grid(smoke)}
     report: dict = {"smoke": smoke, "repeats": repeats}
     for name, grid in grids.items():
         r: dict = {"n_scenarios": len(grid)}
@@ -198,7 +223,10 @@ def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
         # engine exists to close.  The bucketed/priority grid below is
         # the dedicated simulated-path trajectory; its slow side is
         # timed once (plenty of precision for a >= 20x gate).
-        if name != "frontier_grid":
+        # ... and the het/straggler grid's slow side would re-simulate
+        # or re-evaluate every Monte Carlo draw per scenario in Python;
+        # its gate is throughput + agreement, not a speedup ratio.
+        if name not in ("frontier_grid", "het_straggler_grid"):
             slow_repeats = 1 if name == "bucketed_priority_grid" else repeats
             r["per_scenario"] = _time_sweep(grid, slow_repeats, batched=False)
             r["speedup"] = (r["per_scenario"]["elapsed_s"]
@@ -244,6 +272,13 @@ def main(argv=None) -> int:
                          "scenarios/s on BOTH backends (the columnar-"
                          "pipeline CI gate: tidy-table assembly may not "
                          "reopen the e2e/kernel gap)")
+    ap.add_argument("--assert-het-floor", type=float, default=None,
+                    metavar="R",
+                    help="exit non-zero unless the het/straggler grid's "
+                         "end-to-end batched sweep() throughput (numpy, "
+                         "Monte Carlo tails included) is >= R scenarios/s "
+                         "AND the backends agree to <= 1e-6 on that grid "
+                         "(the heterogeneity-engine CI gate)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     report = run(smoke=args.smoke, json_path=args.json)
@@ -286,6 +321,22 @@ def main(argv=None) -> int:
               f"{fr['batched']['scenarios_per_sec']:,.0f}/s, jax "
               f"{fr['jax']['scenarios_per_sec']:,.0f}/s >= "
               f"{args.assert_e2e_floor:,.0f}/s")
+    if args.assert_het_floor is not None:
+        hg = report["het_straggler_grid"]
+        got = hg["batched"]["scenarios_per_sec"]
+        if got < args.assert_het_floor:
+            print(f"error: het/straggler-grid batched throughput "
+                  f"{got:,.0f}/s below the "
+                  f"{args.assert_het_floor:,.0f}/s floor", file=sys.stderr)
+            return 1
+        if hg["agreement_max_rel"] > 1e-6:
+            print(f"error: het-grid jax/numpy disagreement "
+                  f"{hg['agreement_max_rel']:.2e} exceeds the 1e-6 gate",
+                  file=sys.stderr)
+            return 1
+        print(f"# het/straggler gate: {got:,.0f}/s >= "
+              f"{args.assert_het_floor:,.0f}/s, max rel diff "
+              f"{hg['agreement_max_rel']:.1e}")
     return 0
 
 

@@ -106,6 +106,34 @@ def non_overlapped_comm_batch(t_b: np.ndarray, t_c: np.ndarray) -> np.ndarray:
     return xp.maximum(comm_finish - total_b, 0.0)
 
 
+def worker_bottleneck(inv_speed, bw_mult, lat_mult, axis: int = -1):
+    """Slowest-worker reduction over the per-worker axis: the
+    synchronous steady state is gated by the slowest participant, so a
+    heterogeneous scenario collapses to the homogeneous closed forms
+    evaluated at ``tmul = max_w inv_speed``, ``bwmul = min_w bw_mult``,
+    ``latmul = max_w lat_mult``.
+
+    Exact, not an approximation: per-worker multipliers are constant
+    across layers, so the same worker attains the per-layer max at
+    every layer and the per-worker DAG reproduces the reduced closed
+    form (property-tested against the event-driven simulator ≤1e-6).
+
+    Accepts the zero/``+inf``-padded ``(..., Wmax)`` worker tables of
+    :func:`repro.core.het.worker_table_rows` — the pads are neutral for
+    these reductions — and is dtype-polymorphic over NumPy and
+    ``jax.numpy`` (the batched kernels of both backends reduce the same
+    padded tables).  A constant vector reduces to its value bit-exactly
+    (max/min never round), which is what keeps all-ones profiles
+    bit-identical to the scalar path.
+    """
+    from repro.core.xputil import array_namespace
+
+    xp = array_namespace(inv_speed, bw_mult, lat_mult)
+    return (xp.max(inv_speed, axis=axis),
+            xp.min(bw_mult, axis=axis),
+            xp.max(lat_mult, axis=axis))
+
+
 def eq5_wfbp(costs: IterationCosts) -> float:
     """WFBP: max(t_io + t_h2d, t_f + t_b + t_c^no + t_u)."""
     tc_no = non_overlapped_comm(costs.t_b, costs.t_c)

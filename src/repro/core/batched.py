@@ -55,6 +55,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import analytical, bucketsim
+from repro.core import het as het_mod
 from repro.core.hardware import (CLUSTERS, apply_interconnect_preset,
                                  hierarchical_allreduce_coeffs,
                                  ring_allreduce_coeffs,
@@ -240,18 +241,36 @@ def _policy_axis(names: Sequence[str]) -> _PolicyAxis:
 # Tier 1: the affine kernel — policy-independent cost terms.
 # ----------------------------------------------------------------------
 def _collective_coeffs(cax: _ClusterAxis, cidx: np.ndarray,
-                       coll: np.ndarray,
-                       n: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+                       coll: np.ndarray, n: np.ndarray,
+                       bwmul: np.ndarray | None = None,
+                       latmul: np.ndarray | None = None,
+                       ) -> tuple[np.ndarray, np.ndarray]:
     """Per-point affine collective coefficients ``(per_byte,
     per_message)``: every collective model is affine in the payload for
     fixed ``(n, links)`` (see :mod:`repro.core.hardware`), and each
     algorithm's coefficients are evaluated only on its own points (the
-    collective axis partitions the kernel grid)."""
+    collective axis partitions the kernel grid).
+
+    ``bwmul``/``latmul`` are per-point slowest-worker link multipliers
+    (per-worker vectors already reduced by
+    :func:`repro.core.analytical.worker_bottleneck`): a heterogeneous
+    collective is gated by its slowest link, so both the intra- and
+    inter-node parameters are derated before the algorithm dispatch
+    (hierarchical scales both levels).  ``None`` (or all-ones — FP
+    multiply by 1.0 is exact) leaves the homogeneous path bit-identical.
+    """
     n_f = n.astype(np.float64)
+    intra_bw, intra_lat = cax.intra_bw[cidx], cax.intra_lat[cidx]
+    inter_bw, inter_lat = cax.inter_bw[cidx], cax.inter_lat[cidx]
+    if bwmul is not None:
+        intra_bw = intra_bw * bwmul
+        inter_bw = inter_bw * bwmul
+    if latmul is not None:
+        intra_lat = intra_lat * latmul
+        inter_lat = inter_lat * latmul
     use_intra = n <= cax.gpn[cidx]
-    link_bw = np.where(use_intra, cax.intra_bw[cidx], cax.inter_bw[cidx])
-    link_lat = np.where(use_intra, cax.intra_lat[cidx],
-                        cax.inter_lat[cidx])
+    link_bw = np.where(use_intra, intra_bw, inter_bw)
+    link_lat = np.where(use_intra, intra_lat, inter_lat)
     codes_present = np.unique(coll)
     if len(codes_present) == 1:
         sels: list = [slice(None)]
@@ -267,36 +286,50 @@ def _collective_coeffs(cax: _ClusterAxis, cidx: np.ndarray,
             a, b = tree_allreduce_coeffs(n[sel], link_bw[sel],
                                          link_lat[sel])
         else:
-            ci = cidx[sel]
             a, b = hierarchical_allreduce_coeffs(
-                n[sel], cax.gpn[ci], cax.intra_bw[ci], cax.intra_lat[ci],
-                cax.inter_bw[ci], cax.inter_lat[ci])
+                n[sel], cax.gpn[cidx[sel]], intra_bw[sel], intra_lat[sel],
+                inter_bw[sel], inter_lat[sel])
         per_byte[sel], per_message[sel] = a, b
     return per_byte, per_message
 
 
 def _compute_row_map(wax: _WorkloadAxis, cax: _ClusterAxis,
                      widx: np.ndarray, cidx: np.ndarray,
-                     batch: np.ndarray):
-    """``(uw, uc, ubatch, uk)``: the unique *compute rows* of a point
-    set and the point -> row map.  ``t_f``/``t_b`` (and everything
-    derived from them: prefix/suffix sums, ``comp``) depend only on
-    ``(workload, device rate, batch)`` — on a product grid that is a
-    tiny set (workloads x devices, not x interconnects x workers x
+                     batch: np.ndarray,
+                     tmul: np.ndarray | None = None):
+    """``(uw, uc, ubatch, ut, uk)``: the unique *compute rows* of a
+    point set and the point -> row map.  ``t_f``/``t_b`` (and
+    everything derived from them: prefix/suffix sums, ``comp``) depend
+    only on ``(workload, device rate, batch)`` — on a product grid that
+    is a tiny set (workloads x devices, not x interconnects x workers x
     collectives), so the layer-axis matrices are built on ``U`` rows
-    and gathered per point instead of being recomputed ``K`` times."""
+    and gathered per point instead of being recomputed ``K`` times.
+
+    ``tmul`` (per-point slowest-worker compute multipliers) joins the
+    unique key — it must, because it scales the *measured* time tables
+    too, which bypass the device rate — and comes back as the
+    per-unique-row ``ut`` column (``None`` when not given).  A constant
+    ``tmul`` contributes one key level and leaves the row set (and the
+    homogeneous path) unchanged."""
     urate, rinv = np.unique(cax.rate[cidx], return_inverse=True)
     ubv, binv = np.unique(batch, return_inverse=True)
     key = (widx * len(ubv) + binv) * len(urate) + rinv
+    if tmul is not None:
+        utm, tinv = np.unique(tmul, return_inverse=True)
+        key = key * len(utm) + tinv
     _, rep, uk = np.unique(key, return_index=True, return_inverse=True)
-    return widx[rep], cidx[rep], batch[rep], uk
+    ut = None if tmul is None else tmul[rep]
+    return widx[rep], cidx[rep], batch[rep], ut, uk
 
 
 def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
                  widx: np.ndarray, cidx: np.ndarray, coll: np.ndarray,
                  n: np.ndarray, batch: np.ndarray,
                  tl_specs: Sequence[tuple[float, bool]] = (),
-                 chunk: int = KERNEL_CHUNK) -> dict[str, np.ndarray]:
+                 chunk: int = KERNEL_CHUNK,
+                 tmul: np.ndarray | None = None,
+                 bwmul: np.ndarray | None = None,
+                 latmul: np.ndarray | None = None) -> dict[str, np.ndarray]:
     """Policy-independent terms for every kernel point, reduced over
     the layer axis: ``(K,)`` vectors of ``io_h2d``, ``t_h2d``, ``comp``
     (= sum t_f + sum t_b), ``sum_c``, ``tc_no``, ``t_u``, plus the
@@ -326,6 +359,19 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
     gathered from the per-row backward suffix — the exact
     :func:`repro.core.bucketsim.timeline_residual` makespan, never
     materializing a per-point duration matrix.
+
+    ``tmul``/``bwmul``/``latmul`` (all ``(K,)`` or ``None``) are the
+    slowest-worker bottleneck multipliers of the heterogeneity engine —
+    per-worker vectors already reduced by
+    :func:`repro.core.analytical.worker_bottleneck` (and, on the Monte
+    Carlo straggler path, already folded with each draw's jitter):
+    ``tmul`` scales every compute-time term (analytic *and* measured —
+    it joins the unique-row key via :func:`_compute_row_map`), while
+    ``bwmul``/``latmul`` derate the collective links
+    (:func:`_collective_coeffs`).  ``t_io``/``t_h2d`` stay homogeneous
+    (their channels are per-worker and identical) and ``t_u`` is
+    HBM-bandwidth-bound, not compute-rate-bound, so neither is scaled.
+    All-ones multipliers are bit-identity (IEEE ``x * 1.0 == x``).
     """
     K = len(widx)
     # Per-workload layer tables: inclusive payload/count prefix sums
@@ -355,7 +401,9 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
         n_f = nn.astype(np.float64)
 
         # compute costs: (U, L) on the unique compute rows only
-        uw, uc, ub, uk = _compute_row_map(wax, cax, w, c, batch[sl])
+        uw, uc, ub, ut, uk = _compute_row_map(
+            wax, cax, w, c, batch[sl],
+            None if tmul is None else tmul[sl])
         ubatch_f = np.where(ub > 0, ub,
                             wax.batch_default[uw]).astype(np.float64)
         tfa = wax.flops[uw] * ubatch_f[:, None] / cax.rate[uc][:, None]
@@ -365,6 +413,9 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
             scale = (ubatch_f / wax.batch_default[uw])[:, None]
             t_f = t_f + wax.tf_meas[uw] * scale    # but skip it when the
             t_b = t_b + wax.tb_meas[uw] * scale    # batch has no traces
+        if ut is not None:            # slowest-worker compute multiplier
+            t_f = t_f * ut[:, None]
+            t_b = t_b * ut[:, None]
         prefix_b = np.cumsum(t_b, axis=1)
         total_b_u = prefix_b[:, -1]
         suffix_b_u = (total_b_u[:, None] - prefix_b) + t_b   # inclusive
@@ -372,7 +423,10 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
         total_b = total_b_u[uk]
 
         # per-point affine collective coefficients
-        per_byte, per_message = _collective_coeffs(cax, c, cl, nn)
+        per_byte, per_message = _collective_coeffs(
+            cax, c, cl, nn,
+            None if bwmul is None else bwmul[sl],
+            None if latmul is None else latmul[sl])
 
         # pipeline terms: (k,)
         nbytes_in = batch_f * wax.bytes_per_sample[w]
@@ -491,7 +545,14 @@ def select_to_columns(cols: dict[str, np.ndarray],
     order) from a :func:`_policy_select` output plus per-scenario label
     columns (object arrays, already gathered).  Shared by both batched
     backends — the NumPy grid/list front ends here and
-    :class:`repro.core.batched_jax.JaxGridRun`."""
+    :class:`repro.core.batched_jax.JaxGridRun`.
+
+    The tail columns ``t_mean_s``/``t_p95_s``/``t_p99_s`` come from the
+    straggler Monte Carlo pass when present; deterministic rows (no
+    straggler spec, or zero jitter) default to ``iteration_time_s`` —
+    the distribution is a point mass there.
+    """
+    t_iter = np.asarray(cols["iteration_time_s"])
     return {
         "workload": labels["workload"],
         "cluster": labels["cluster"],
@@ -499,14 +560,113 @@ def select_to_columns(cols: dict[str, np.ndarray],
         "policy": labels["policy"],
         "collective": labels["collective"],
         "interconnect": labels["interconnect"],
+        "het": labels["het"],
+        "straggler": labels["straggler"],
         "batch_per_gpu": np.asarray(cols["batch"]).astype(np.int64),
-        "iteration_time_s": np.asarray(cols["iteration_time_s"]),
+        "iteration_time_s": t_iter,
         "samples_per_sec": np.asarray(cols["samples_per_sec"]),
         "speedup": np.asarray(cols["speedup"]),
         "t_comm_s": np.asarray(cols["t_comm_s"]),
         "t_comp_s": np.asarray(cols["t_comp_s"]),
+        "t_mean_s": np.asarray(cols.get("t_mean_s", t_iter)),
+        "t_p95_s": np.asarray(cols.get("t_p95_s", t_iter)),
+        "t_p99_s": np.asarray(cols.get("t_p99_s", t_iter)),
         "method": METHOD_LABELS[np.asarray(cols["method_code"])],
     }
+
+
+# ----------------------------------------------------------------------
+# Straggler Monte Carlo: per-draw kernel evaluation, reduced to tails.
+# ----------------------------------------------------------------------
+def _apply_mc_tails(wax: _WorkloadAxis, cax: _ClusterAxis, pax: _PolicyAxis,
+                    widx: np.ndarray, cidx: np.ndarray, coll: np.ndarray,
+                    n: np.ndarray, batch: np.ndarray, polidx: np.ndarray,
+                    hks: np.ndarray, wtab: dict[str, np.ndarray],
+                    bwmul: np.ndarray | None, latmul: np.ndarray | None,
+                    st_specs: Sequence, stidx: np.ndarray,
+                    cols: dict[str, np.ndarray], seed: int,
+                    active: np.ndarray | None = None) -> None:
+    """Attach ``t_mean_s``/``t_p95_s``/``t_p99_s`` to a
+    :func:`_policy_select` output in place.
+
+    Every input array is per-*row*: ``widx``/``cidx``/``coll``/``n``/
+    ``batch`` locate the row's kernel point, ``polidx`` its policy,
+    ``hks`` its padded worker-table row in ``wtab``
+    (:func:`repro.core.het.worker_table_rows`), ``stidx`` its spec in
+    ``st_specs`` (parsed :class:`repro.core.het.StragglerSpec` or
+    ``None``), and ``bwmul``/``latmul`` its deterministic slowest-link
+    multipliers.  Deterministic rows (no spec, or zero jitter) keep the
+    point-mass default — tails equal to ``iteration_time_s``, bit-exact.
+
+    Stochastic rows take a Monte Carlo pass: per draw ``d`` the
+    slowest-worker theorem applies with multiplier ``max_w(J[d, w] /
+    speed_w)`` (jitter folded with the het profile's per-worker rates
+    *before* the max — the slow worker and the unlucky worker need not
+    coincide), so each draw is one deterministic kernel evaluation at
+    that ``tmul``.  Rows sharing ``(kernel point, policy, worker
+    table)`` are deduplicated first, per-point draw multipliers are
+    built once per unique worker-table row (the ``(D, W)`` matrices
+    come from :meth:`~repro.core.het.StragglerSpec.draw_matrix`, keyed
+    by ``(spec, n, seed)`` so every backend and shard consumes the
+    identical sample), and the expanded ``point x draw`` set streams
+    through the ordinary two-tier kernel in blocks of roughly
+    :data:`KERNEL_CHUNK` rows.  The per-draw iteration times reduce to
+    mean/p95/p99 with ``np.quantile`` on the host — shared by the jax
+    backend, which guarantees the draw-for-draw <= 1e-6 agreement.
+
+    ``active=False`` rows (simulator-fallback policies) are skipped:
+    their whole row, tails included, is overwritten by the per-draw
+    oracle path in :mod:`repro.core.sweep`.
+    """
+    t_iter = np.asarray(cols["iteration_time_s"])
+    cols["t_mean_s"] = t_iter.copy()
+    cols["t_p95_s"] = t_iter.copy()
+    cols["t_p99_s"] = t_iter.copy()
+    for si, st in enumerate(st_specs):
+        if st is None or st.is_deterministic:
+            continue
+        sel = stidx == si
+        if active is not None:
+            sel = sel & active
+        rows = np.nonzero(sel)[0]
+        if not len(rows):
+            continue
+        # one MC evaluation per unique (kernel point, policy, worker
+        # table) triple — rows sharing all three see identical draws
+        key = np.stack([widx[rows], cidx[rows], coll[rows], n[rows],
+                        batch[rows], polidx[rows], hks[rows]], axis=1)
+        _, rep, uinv = np.unique(key, axis=0, return_index=True,
+                                 return_inverse=True)
+        urows = rows[rep]
+        U, D = len(urows), st.draws
+        tmuls = np.empty((U, D))
+        for h in np.unique(hks[urows]):
+            pts = np.nonzero(hks[urows] == h)[0]
+            nw = int(wtab["n"][h])
+            J = st.draw_matrix(nw, seed)                   # (D, nw)
+            tmuls[pts] = (J * wtab["inv_speed"][h, :nw]).max(axis=1)
+        mean_u = np.empty(U)
+        p95_u = np.empty(U)
+        p99_u = np.empty(U)
+        blk = max(1, KERNEL_CHUNK // D)
+        for lo in range(0, U, blk):
+            pt = urows[lo:lo + blk]
+            m = len(pt)
+            rp = np.repeat(pt, D)
+            kc = _kernel_cols(
+                wax, cax, widx[rp], cidx[rp], coll[rp], n[rp], batch[rp],
+                tl_specs=pax.tl_specs,
+                tmul=tmuls[lo:lo + m].ravel(),
+                bwmul=None if bwmul is None else bwmul[rp],
+                latmul=None if latmul is None else latmul[rp])
+            ti = _policy_select(pax, polidx[rp], kc, kidx=None)[
+                "iteration_time_s"].reshape(m, D)
+            mean_u[lo:lo + m] = ti.mean(axis=1)
+            p95_u[lo:lo + m] = np.quantile(ti, 0.95, axis=1)
+            p99_u[lo:lo + m] = np.quantile(ti, 0.99, axis=1)
+        cols["t_mean_s"][rows] = mean_u[uinv]
+        cols["t_p95_s"][rows] = p95_u[uinv]
+        cols["t_p99_s"][rows] = p99_u[uinv]
 
 
 # ----------------------------------------------------------------------
@@ -545,21 +705,25 @@ class GridEvaluator:
         nW, nC = len(grid.workloads), len(grid.clusters)
         nK, nP = len(grid.worker_counts), len(grid.policies)
         nA, nI = len(grid.collectives), len(grid.interconnects)
-        self._sizes = (nW, nC, nK, nP, nA, nI)
-        self.n_scenarios = nW * nC * nK * nP * nA * nI
+        nH, nT = len(grid.het_profiles), len(grid.stragglers)
+        self._sizes = (nW, nC, nK, nP, nA, nI, nH, nT)
+        self.n_scenarios = nW * nC * nK * nP * nA * nI * nH * nT
 
         self._wax = _workload_axis(grid.workloads)
         pairs = [(c, ic) for c in grid.clusters for ic in grid.interconnects]
         self._cax = _cluster_axis(pairs)
         self._pax = _policy_axis(grid.policies)
 
-        # Kernel grid: the scenario product with the policy axis
-        # dropped — order (workloads, clusters, workers, collectives,
-        # interconnects), rightmost fastest.  O(K) int vectors; every
-        # per-*scenario* quantity is derived per chunk instead (see
-        # _scenario_codes), so preparation stays O(axes + K) however
-        # large the scenario product is.
-        kw, kc, kk, ka, ki = _axis_codes((nW, nC, nK, nA, nI))
+        # Kernel grid: the scenario product with the policy *and*
+        # straggler axes dropped — order (workloads, clusters, workers,
+        # collectives, interconnects, het_profiles), rightmost fastest.
+        # The straggler axis never changes a deterministic kernel point
+        # (jitter only enters the Monte Carlo pass); the het axis does,
+        # through the slowest-worker bottleneck multipliers.  O(K) int
+        # vectors; every per-*scenario* quantity is derived per chunk
+        # instead (see _scenario_codes), so preparation stays
+        # O(axes + K) however large the scenario product is.
+        kw, kc, kk, ka, ki, kh = _axis_codes((nW, nC, nK, nA, nI, nH))
         self._kwidx = kw
         self._kcidx = kc * nI + ki              # (cluster, interconnect) pair
         self._kcoll = np.array(
@@ -569,7 +733,32 @@ class GridEvaluator:
                             dtype=np.int64)[kk]
         self._kbatch = np.full(len(kw), grid.batch_per_gpu or 0,
                                dtype=np.int64)
+        self._khk = kh * nK + kk                # (het profile, n) pair row
         _check_batch_locked(self._wax, kw, self._kbatch)
+
+        # Heterogeneity: one padded per-worker table row per (profile,
+        # n_workers) pair, reduced once to the slowest-worker bottleneck
+        # multipliers and gathered per kernel point.  All-homogeneous
+        # grids keep the multipliers as None so the kernel's fast path
+        # stays literally untouched (not merely bit-identical).
+        profiles = [het_mod.parse_het_profile(h) for h in grid.het_profiles]
+        self._wtab = het_mod.worker_table_rows(
+            [(prof, int(n)) for prof in profiles
+             for n in grid.worker_counts])
+        self._any_het = any(p is not None for p in profiles)
+        if self._any_het:
+            tm, bm, lm = analytical.worker_bottleneck(
+                self._wtab["inv_speed"], self._wtab["bw_mult"],
+                self._wtab["lat_mult"])
+            self._ktmul = tm[self._khk]
+            self._kbwmul = bm[self._khk]
+            self._klatmul = lm[self._khk]
+        else:
+            self._ktmul = self._kbwmul = self._klatmul = None
+        self._st_specs = [het_mod.parse_straggler(s)
+                          for s in grid.stragglers]
+        self._any_mc = any(s is not None and not s.is_deterministic
+                           for s in self._st_specs)
 
         per_policy = self.n_scenarios // nP if nP else 0
         self.n_fast = per_policy * int(self._pax.has_fast.sum())
@@ -588,6 +777,12 @@ class GridEvaluator:
         self._ic_values = np.array(
             [normalize_interconnect(ic) for ic in grid.interconnects],
             dtype=object)
+        self._ht_values = np.array(
+            [het_mod.normalize_het(h) for h in grid.het_profiles],
+            dtype=object)
+        self._st_values = np.array(
+            [het_mod.normalize_straggler(s) for s in grid.stragglers],
+            dtype=object)
 
     def __len__(self) -> int:
         return self.n_scenarios
@@ -597,8 +792,12 @@ class GridEvaluator:
         scenario indices ``[lo, hi)``, derived arithmetically from the
         expand() order (rightmost axis fastest) — O(chunk) work and
         memory, nothing per-scenario is ever stored."""
-        nW, nC, nK, nP, nA, nI = self._sizes
+        nW, nC, nK, nP, nA, nI, nH, nT = self._sizes
         r = np.arange(lo, hi, dtype=np.int64)
+        sti = r % nT
+        r //= nT
+        hp = r % nH
+        r //= nH
         ii = r % nI
         r //= nI
         ai = r % nA
@@ -609,9 +808,9 @@ class GridEvaluator:
         r //= nK
         ci = r % nC
         wi = r // nC
-        kidx = (((wi * nC + ci) * nK + ki) * nA + ai) * nI + ii
+        kidx = ((((wi * nC + ci) * nK + ki) * nA + ai) * nI + ii) * nH + hp
         return {"wi": wi, "ci": ci, "ki": ki, "pi": pi, "ai": ai, "ii": ii,
-                "kidx": kidx,
+                "hi": hp, "sti": sti, "kidx": kidx,
                 "batched": self._pax.has_fast[pi] | self._pax.has_tl[pi]}
 
     def _label_columns(self, codes: dict[str, np.ndarray]) -> dict:
@@ -622,17 +821,45 @@ class GridEvaluator:
             "policy": self._pol_values[codes["pi"]],
             "collective": self._coll_values[codes["ai"]],
             "interconnect": self._ic_values[codes["ii"]],
+            "het": self._ht_values[codes["hi"]],
+            "straggler": self._st_values[codes["sti"]],
         }
 
-    def run(self) -> "GridRun":
+    def _apply_tails(self, codes: dict[str, np.ndarray],
+                     cols: dict[str, np.ndarray], seed: int) -> None:
+        """Attach the tail columns for the rows of ``codes`` in place:
+        the point-mass default everywhere, overwritten by the straggler
+        Monte Carlo pass (:func:`_apply_mc_tails`) on stochastic rows.
+        Simulator-fallback rows are excluded — their tails come from
+        the per-draw oracle in :mod:`repro.core.sweep`."""
+        if not self._any_mc:
+            t_iter = np.asarray(cols["iteration_time_s"])
+            cols["t_mean_s"] = t_iter
+            cols["t_p95_s"] = t_iter
+            cols["t_p99_s"] = t_iter
+            return
+        k = codes["kidx"]
+        _apply_mc_tails(
+            self._wax, self._cax, self._pax,
+            self._kwidx[k], self._kcidx[k], self._kcoll[k], self._kn[k],
+            self._kbatch[k], codes["pi"], self._khk[k], self._wtab,
+            None if self._kbwmul is None else self._kbwmul[k],
+            None if self._klatmul is None else self._klatmul[k],
+            self._st_specs, codes["sti"], cols, seed,
+            active=codes["batched"])
+
+    def run(self, seed: int = 0) -> "GridRun":
         """Evaluate the kernel grid (fresh numbers every call) and
-        return the per-run table materializer."""
+        return the per-run table materializer.  ``seed`` keys the
+        straggler Monte Carlo draws (ignored on deterministic grids)."""
         return GridRun(self, _kernel_cols(
             self._wax, self._cax, self._kwidx, self._kcidx,
             self._kcoll, self._kn, self._kbatch,
-            tl_specs=self._pax.tl_specs))
+            tl_specs=self._pax.tl_specs,
+            tmul=self._ktmul, bwmul=self._kbwmul, latmul=self._klatmul),
+            seed=seed)
 
-    def run_span(self, lo: int, hi: int):
+    def run_span(self, lo: int, hi: int, seed: int = 0):
         """Evaluate just the flat scenario indices ``[lo, hi)`` —
         kernel restricted to the unique kernel points the span touches,
         so a worker evaluating one shard never pays for the whole grid.
@@ -645,8 +872,12 @@ class GridEvaluator:
         kc = _kernel_cols(
             self._wax, self._cax, self._kwidx[uk], self._kcidx[uk],
             self._kcoll[uk], self._kn[uk], self._kbatch[uk],
-            tl_specs=self._pax.tl_specs)
+            tl_specs=self._pax.tl_specs,
+            tmul=None if self._ktmul is None else self._ktmul[uk],
+            bwmul=None if self._kbwmul is None else self._kbwmul[uk],
+            latmul=None if self._klatmul is None else self._klatmul[uk])
         cols = _policy_select(self._pax, codes["pi"], kc, inv)
+        self._apply_tails(codes, cols, seed)
         return (select_to_columns(cols, self._label_columns(codes)),
                 codes["batched"])
 
@@ -662,9 +893,11 @@ class GridRun:
     chunk (:meth:`table_slice` is the hot path; :meth:`rows_slice` is
     the per-row compat view)."""
 
-    def __init__(self, ev: GridEvaluator, kernel_cols: dict[str, np.ndarray]):
+    def __init__(self, ev: GridEvaluator, kernel_cols: dict[str, np.ndarray],
+                 seed: int = 0):
         self._ev = ev
         self._kc = kernel_cols
+        self._seed = seed
 
     def __len__(self) -> int:
         return self._ev.n_scenarios
@@ -678,6 +911,7 @@ class GridRun:
         ev = self._ev
         codes = ev._scenario_codes(lo, hi)
         cols = _policy_select(ev._pax, codes["pi"], self._kc, codes["kidx"])
+        ev._apply_tails(codes, cols, self._seed)
         cols["method"] = METHOD_LABELS[cols.pop("method_code")].tolist()
         return cols
 
@@ -692,6 +926,7 @@ class GridRun:
         ev = self._ev
         codes = ev._scenario_codes(lo, hi)
         cols = _policy_select(ev._pax, codes["pi"], self._kc, codes["kidx"])
+        ev._apply_tails(codes, cols, self._seed)
         return (select_to_columns(cols, ev._label_columns(codes)),
                 codes["batched"])
 
@@ -789,6 +1024,47 @@ def scenario_axes(scenarios: Sequence[Scenario]):
     return wax, cax, pax, widx, cidx, polidx, coll, n, batch
 
 
+def scenario_het_axes(scenarios: Sequence[Scenario]):
+    """One Python pass over a scenario list: the heterogeneity /
+    straggler structure the kernel and the Monte Carlo pass need.
+    Returns ``(hks, wtab, tmul, bwmul, latmul, st_specs, stidx)`` —
+    per-scenario rows into a padded worker table over the unique
+    ``(het, n_workers)`` pairs, the reduced slowest-worker multiplier
+    vectors (``None`` when every scenario is homogeneous, keeping the
+    kernel's fast path untouched), and the unique parsed straggler
+    specs with the per-scenario index.  Shared with the jax list front
+    end so both backends agree on structure."""
+    pair_key: dict[tuple[str, int], int] = {}
+    st_key: dict[str, int] = {}
+    hks = np.empty(len(scenarios), dtype=np.int64)
+    stidx = np.empty(len(scenarios), dtype=np.int64)
+    any_het = False
+    for i, s in enumerate(scenarios):
+        hspec = het_mod.normalize_het(s.het)
+        pk = (hspec, int(s.n_workers))
+        j = pair_key.get(pk)
+        if j is None:
+            j = pair_key[pk] = len(pair_key)
+        hks[i] = j
+        if hspec != "none":
+            any_het = True
+        sk = het_mod.normalize_straggler(s.straggler)
+        si = st_key.get(sk)
+        if si is None:
+            si = st_key[sk] = len(st_key)
+        stidx[i] = si
+    wtab = het_mod.worker_table_rows(
+        [(het_mod.parse_het_profile(h), n) for h, n in pair_key])
+    if any_het:
+        tm, bm, lm = analytical.worker_bottleneck(
+            wtab["inv_speed"], wtab["bw_mult"], wtab["lat_mult"])
+        tmul, bwmul, latmul = tm[hks], bm[hks], lm[hks]
+    else:
+        tmul = bwmul = latmul = None
+    st_specs = [het_mod.parse_straggler(s) for s in st_key]
+    return hks, wtab, tmul, bwmul, latmul, st_specs, stidx
+
+
 def scenario_labels(scenarios: Sequence[Scenario]) -> dict[str, np.ndarray]:
     """Per-scenario label columns (object arrays) for a scenario list —
     the list front end's counterpart of the grid's per-axis value
@@ -804,30 +1080,44 @@ def scenario_labels(scenarios: Sequence[Scenario]) -> dict[str, np.ndarray]:
         "interconnect": np.array(
             [normalize_interconnect(s.interconnect) for s in scenarios],
             dtype=object),
+        "het": np.array([het_mod.normalize_het(s.het) for s in scenarios],
+                        dtype=object),
+        "straggler": np.array(
+            [het_mod.normalize_straggler(s.straggler) for s in scenarios],
+            dtype=object),
     }
 
 
-def eval_scenarios_table(scenarios: Sequence[Scenario]) -> dict[str, np.ndarray]:
+def eval_scenarios_table(scenarios: Sequence[Scenario],
+                         seed: int = 0) -> dict[str, np.ndarray]:
     """Columnar result table (input order) for a list of
     batched-path-eligible scenarios (closed-form or bucket-timeline
     policies); one Python pass to build code vectors, then the same
     two-tier kernel the grid front end uses (with the identity
-    scenario -> kernel-point map).
+    scenario -> kernel-point map).  ``seed`` keys the straggler Monte
+    Carlo draws for stochastic scenarios.
 
     Raises ``ValueError`` if any scenario's policy has neither form —
     callers (:func:`repro.core.sweep.sweep`) partition first.
     """
     wax, cax, pax, widx, cidx, polidx, coll, n, batch = \
         scenario_axes(scenarios)
+    hks, wtab, tmul, bwmul, latmul, st_specs, stidx = \
+        scenario_het_axes(scenarios)
     kc = _kernel_cols(wax, cax, widx, cidx, coll, n, batch,
-                      tl_specs=pax.tl_specs)
+                      tl_specs=pax.tl_specs,
+                      tmul=tmul, bwmul=bwmul, latmul=latmul)
     cols = _policy_select(pax, polidx, kc, kidx=None)
+    _apply_mc_tails(wax, cax, pax, widx, cidx, coll, n, batch, polidx,
+                    hks, wtab, bwmul, latmul, st_specs, stidx,
+                    cols, seed)
     return select_to_columns(cols, scenario_labels(scenarios))
 
 
-def eval_scenarios(scenarios: Sequence[Scenario]) -> list[dict]:
+def eval_scenarios(scenarios: Sequence[Scenario],
+                   seed: int = 0) -> list[dict]:
     """Batched rows (input order) for a scenario list — the per-row
     view of :func:`eval_scenarios_table`."""
     if not scenarios:
         return []
-    return rows_from_table(eval_scenarios_table(scenarios))
+    return rows_from_table(eval_scenarios_table(scenarios, seed=seed))

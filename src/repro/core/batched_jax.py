@@ -67,7 +67,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from repro.core import batched, bucketsim
+from repro.core import analytical, batched, bucketsim
 from repro.core.batched import grid_evaluator
 from repro.core.hardware import (hierarchical_allreduce_coeffs,
                                  ring_allreduce_coeffs,
@@ -90,7 +90,7 @@ _NUMERIC_COLS = ("batch", "iteration_time_s", "samples_per_sec",
 # Structure extraction: axis tables -> one flat dict of arrays (a jit
 # pytree argument), prefix/suffix and bucket structure included.
 # ----------------------------------------------------------------------
-def _axes_tables(wax, cax, pax) -> tuple[dict, dict]:
+def _axes_tables(wax, cax, pax, wtab) -> tuple[dict, dict]:
     """``(tables, pflags)`` array dicts from the NumPy engine's axis
     dataclasses — the jit kernel's pytree inputs, including the
     per-workload prefix tables the affine formulation gathers
@@ -98,7 +98,16 @@ def _axes_tables(wax, cax, pax) -> tuple[dict, dict]:
     tables per timeline spec.  ``bucket_bytes`` rides along purely as
     a differentiation input: the partition structure (``bt<i>_*``) is
     discrete and prebuilt, which is exactly the piecewise-constant
-    dependence documented in the module docstring."""
+    dependence documented in the module docstring.
+
+    ``wtab`` is the padded per-worker table
+    (:func:`repro.core.het.worker_table_rows`) over the unique
+    ``(het profile, n_workers)`` pairs: the kernel reduces the gathered
+    rows with :func:`repro.core.analytical.worker_bottleneck` *inside*
+    the jit, so the het link derating shards and differentiates with
+    everything else.  On all-homogeneous inputs every row is ones (the
+    pads are neutral) and the reduction multiplies by exactly 1.0 —
+    bit-identity, same contract as the NumPy kernel's ``None`` path."""
     grad = wax.grad_bytes
     comm_mask = (grad > 0).astype(np.float64)
     cumgrad = np.cumsum(grad, axis=1)
@@ -119,6 +128,8 @@ def _axes_tables(wax, cax, pax) -> tuple[dict, dict]:
         "rate": cax.rate, "hbm_bw": cax.hbm_bw,
         "bucket_bytes": np.array([bb for bb, _ in pax.tl_specs],
                                  dtype=np.float64),
+        "w_inv": wtab["inv_speed"], "w_bw": wtab["bw_mult"],
+        "w_lat": wtab["lat_mult"],
     }
     for i, (bb, _) in enumerate(pax.tl_specs):
         bt = bucketsim.bucket_table(wax.grad_bytes, bb)
@@ -143,11 +154,21 @@ def _kernel_cols_jax(tbl: dict, kcodes: dict, ucodes: dict,
     vectors — the jax twin of :func:`repro.core.batched._kernel_cols`:
     affine collective coefficients, unique-compute-row backward tables
     gathered through the host-precomputed ``uk`` map, and the fused
-    multiply-add + masked-max residuals."""
+    multiply-add + masked-max residuals.
+
+    Heterogeneity enters exactly as in the NumPy kernel:
+    ``ucodes["tmul"]`` (slowest-worker compute multiplier, folded into
+    the unique-row key on the host) scales ``t_f``/``t_b``, and the
+    per-point link multipliers — reduced in-jit from the padded worker
+    table gathered at ``kcodes["hk"]`` — derate both link levels
+    before the collective dispatch.  All-ones multipliers are
+    bit-identity (IEEE ``x * 1.0 == x``)."""
     w, c = kcodes["w"], kcodes["c"]
     coll, n, batch, uk = kcodes["coll"], kcodes["n"], kcodes["batch"], \
         kcodes["uk"]
-    uw, uc, ub = ucodes["w"], ucodes["c"], ucodes["batch"]
+    hk = kcodes["hk"]
+    uw, uc, ub, ut = ucodes["w"], ucodes["c"], ucodes["batch"], \
+        ucodes["tmul"]
     batch_f = jnp.where(batch > 0, batch,
                         tbl["batch_default"][w]).astype(jnp.float64)
     n_f = n.astype(jnp.float64)
@@ -160,6 +181,8 @@ def _kernel_cols_jax(tbl: dict, kcodes: dict, ucodes: dict,
     t_f = tfa + tbl["tf_meas"][uw] * scale         # measured rows: exact,
     t_b = tbl["bwd_ratio"][uw][:, None] * tfa \
         + tbl["tb_meas"][uw] * scale               # others +0.0
+    t_f = t_f * ut[:, None]            # slowest-worker compute multiplier
+    t_b = t_b * ut[:, None]
     prefix_b = jnp.cumsum(t_b, axis=1)
     total_b_u = prefix_b[:, -1]
     suffix_b_u = (total_b_u[:, None] - prefix_b) + t_b   # inclusive
@@ -167,10 +190,18 @@ def _kernel_cols_jax(tbl: dict, kcodes: dict, ucodes: dict,
     total_b = total_b_u[uk]
 
     # per-point affine collective coefficients (coll is traced; the
-    # codes *present* are static, so only those models trace)
+    # codes *present* are static, so only those models trace).  The
+    # heterogeneous collective is gated by its slowest link, so both
+    # link levels are derated before the algorithm dispatch.
+    _, bwmul, latmul = analytical.worker_bottleneck(
+        tbl["w_inv"][hk], tbl["w_bw"][hk], tbl["w_lat"][hk])
+    intra_bw = tbl["intra_bw"][c] * bwmul
+    intra_lat = tbl["intra_lat"][c] * latmul
+    inter_bw = tbl["inter_bw"][c] * bwmul
+    inter_lat = tbl["inter_lat"][c] * latmul
     use_intra = n <= tbl["gpn"][c]
-    link_bw = jnp.where(use_intra, tbl["intra_bw"][c], tbl["inter_bw"][c])
-    link_lat = jnp.where(use_intra, tbl["intra_lat"][c], tbl["inter_lat"][c])
+    link_bw = jnp.where(use_intra, intra_bw, inter_bw)
+    link_lat = jnp.where(use_intra, intra_lat, inter_lat)
 
     def _model(code: int):
         if code == 0:
@@ -178,8 +209,7 @@ def _kernel_cols_jax(tbl: dict, kcodes: dict, ucodes: dict,
         if code == 1:
             return tree_allreduce_coeffs(n, link_bw, link_lat)
         return hierarchical_allreduce_coeffs(
-            n, tbl["gpn"][c], tbl["intra_bw"][c], tbl["intra_lat"][c],
-            tbl["inter_bw"][c], tbl["inter_lat"][c])
+            n, tbl["gpn"][c], intra_bw, intra_lat, inter_bw, inter_lat)
 
     per_byte, per_message = _model(coll_codes[0])
     for code in coll_codes[1:]:
@@ -338,14 +368,17 @@ class JaxGridEvaluator:
                 f"policies only; {bad} need the event-driven simulator. "
                 f"Use backend='numpy' for grids containing them.")
         self.ev = ev
-        self._tables, self._pflags = _axes_tables(ev._wax, ev._cax, ev._pax)
+        self._tables, self._pflags = _axes_tables(ev._wax, ev._cax,
+                                                  ev._pax, ev._wtab)
         self._tl_overlaps = tuple(bool(ov) for _, ov in ev._pax.tl_specs)
         self._coll_codes = tuple(int(x) for x in np.unique(ev._kcoll)) or (0,)
-        uw, uc, ub, uk = batched._compute_row_map(
-            ev._wax, ev._cax, ev._kwidx, ev._kcidx, ev._kbatch)
+        uw, uc, ub, ut, uk = batched._compute_row_map(
+            ev._wax, ev._cax, ev._kwidx, ev._kcidx, ev._kbatch, ev._ktmul)
         kcodes = {"w": ev._kwidx, "c": ev._kcidx, "coll": ev._kcoll,
-                  "n": ev._kn, "batch": ev._kbatch, "uk": uk}
-        self._ucodes = {"w": uw, "c": uc, "batch": ub}
+                  "n": ev._kn, "batch": ev._kbatch, "uk": uk,
+                  "hk": ev._khk}
+        self._ucodes = {"w": uw, "c": uc, "batch": ub,
+                        "tmul": np.ones(len(uw)) if ut is None else ut}
         S = len(ev)
         if S:
             sc = ev._scenario_codes(0, S)
@@ -393,8 +426,33 @@ class JaxGridEvaluator:
                             self._scodes, self._ucodes, self._tl_overlaps,
                             self._coll_codes)
 
-    def run(self, params: dict | None = None) -> "JaxGridRun":
-        return JaxGridRun(self, self.columns(params))
+    def run(self, params: dict | None = None, seed: int = 0) -> "JaxGridRun":
+        """One evaluation: the jit kernel for the deterministic
+        columns, then the straggler Monte Carlo tail pass.  The MC
+        orchestration (dedup, keyed draws, slowest-worker fold,
+        ``np.quantile`` reduction) is the host-side pass *shared* with
+        the NumPy engine (:func:`repro.core.batched._apply_mc_tails`),
+        which is what guarantees draw-for-draw agreement between the
+        backends; deterministic grids skip it and the tail columns
+        equal ``iteration_time_s`` bit-exactly."""
+        cols = self.columns(params)
+        ev = self.ev
+        if ev._any_mc and len(ev):
+            codes = ev._scenario_codes(0, len(ev))
+            k = codes["kidx"]
+            batched._apply_mc_tails(
+                ev._wax, ev._cax, ev._pax, ev._kwidx[k], ev._kcidx[k],
+                ev._kcoll[k], ev._kn[k], ev._kbatch[k], codes["pi"],
+                ev._khk[k], ev._wtab,
+                None if ev._kbwmul is None else ev._kbwmul[k],
+                None if ev._klatmul is None else ev._klatmul[k],
+                ev._st_specs, codes["sti"], cols, seed)
+        else:
+            t_iter = cols["iteration_time_s"]
+            cols["t_mean_s"] = t_iter
+            cols["t_p95_s"] = t_iter
+            cols["t_p99_s"] = t_iter
+        return JaxGridRun(self, cols)
 
     def method_labels(self, pi: np.ndarray) -> list[str]:
         """Per-row evaluation-path labels (``all_batched`` holds, so
@@ -471,11 +529,14 @@ def jax_grid_evaluator(grid: ScenarioGrid, *, mesh=None) -> JaxGridEvaluator:
 # ----------------------------------------------------------------------
 # Scenario-list front end — jax twin of batched.eval_scenarios.
 # ----------------------------------------------------------------------
-def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario]
-                       ) -> list[dict]:
+def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario],
+                       seed: int = 0) -> list[dict]:
     """Batched rows (input order) for a list of batched-path-eligible
     scenarios, evaluated by the fused jit kernel with the identity
-    scenario -> kernel-point map.  Raises ``ValueError`` (via
+    scenario -> kernel-point map; het/straggler structure comes from
+    the shared :func:`repro.core.batched.scenario_het_axes` pass and
+    the straggler Monte Carlo tails from the shared host-side pass,
+    exactly as on the grid path.  Raises ``ValueError`` (via
     :func:`repro.core.batched.scenario_axes`) if any scenario's policy
     has neither a closed nor a bucket-timeline form."""
     scenarios = list(scenarios)
@@ -483,13 +544,17 @@ def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario]
         return []
     wax, cax, pax, widx, cidx, polidx, coll, n, batch = \
         batched.scenario_axes(scenarios)
-    tables, pflags = _axes_tables(wax, cax, pax)
+    hks, wtab, tmul, bwmul, latmul, st_specs, stidx = \
+        batched.scenario_het_axes(scenarios)
+    tables, pflags = _axes_tables(wax, cax, pax, wtab)
     tl_overlaps = tuple(bool(ov) for _, ov in pax.tl_specs)
     S = len(scenarios)
-    uw, uc, ub, uk = batched._compute_row_map(wax, cax, widx, cidx, batch)
+    uw, uc, ub, ut, uk = batched._compute_row_map(wax, cax, widx, cidx,
+                                                  batch, tmul)
     kcodes = {"w": widx, "c": cidx, "coll": coll, "n": n, "batch": batch,
-              "uk": uk}
-    ucodes = {"w": uw, "c": uc, "batch": ub}
+              "uk": uk, "hk": hks}
+    ucodes = {"w": uw, "c": uc, "batch": ub,
+              "tmul": np.ones(len(uw)) if ut is None else ut}
     scodes = {"pi": polidx, "kidx": np.arange(S, dtype=np.int64)}
     coll_codes = tuple(int(x) for x in np.unique(coll)) or (0,)
     with enable_x64():
@@ -497,6 +562,9 @@ def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario]
                            tl_overlaps, coll_codes)
         cols = {k: np.asarray(v) for k, v in out.items()
                 if k in _NUMERIC_COLS}
+    batched._apply_mc_tails(wax, cax, pax, widx, cidx, coll, n, batch,
+                            polidx, hks, wtab, bwmul, latmul, st_specs,
+                            stidx, cols, seed)
     cols["method_code"] = pax.tier[polidx]
     return rows_from_table(batched.select_to_columns(
         cols, batched.scenario_labels(scenarios)))
@@ -573,7 +641,8 @@ def numpy_iteration_times(grid: ScenarioGrid,
                         for i, (_, ov) in enumerate(tl_specs)]
     kc = batched._kernel_cols(ev._wax, cax, ev._kwidx, ev._kcidx,
                               ev._kcoll, ev._kn, ev._kbatch,
-                              tl_specs=tl_specs)
+                              tl_specs=tl_specs, tmul=ev._ktmul,
+                              bwmul=ev._kbwmul, latmul=ev._klatmul)
     codes = ev._scenario_codes(0, len(ev))
     return batched._policy_select(ev._pax, codes["pi"], kc,
                                   codes["kidx"])["iteration_time_s"]

@@ -227,14 +227,29 @@ class SSGDDagBuilder:
 
     def __init__(self, costs: IterationCosts, n_workers: int, policy: Policy,
                  comm_scale: Callable[[float, float], float] | None = None,
-                 shared_compute: bool = False):
+                 shared_compute: bool = False,
+                 worker_scale: Sequence[float] | None = None):
         if n_workers < 1:
             raise ValueError("n_workers >= 1")
+        if worker_scale is not None:
+            worker_scale = [float(s) for s in worker_scale]
+            if len(worker_scale) != n_workers:
+                raise ValueError(
+                    f"worker_scale must have one entry per worker "
+                    f"({n_workers}), got {len(worker_scale)}")
+            if any(s <= 0 for s in worker_scale):
+                raise ValueError("worker_scale entries must be > 0")
         self.dag = DAG()
         self.costs = costs
         self.n_workers = n_workers
         self.policy = policy
         self.n_iterations = 0
+        # Per-worker compute-time multipliers (heterogeneous GPUs /
+        # straggler jitter): worker ``w``'s forward and backward tasks
+        # run ``worker_scale[w]`` x slower.  I/O, H2D, comm and the
+        # update are deliberately unscaled — they live on their own
+        # channels (disk/PCIe/net) or are HBM-bound (t_u).
+        self._worker_scale = worker_scale
         # ``shared_compute`` serializes all workers on one compute
         # channel — models host-device oversubscription (N logical
         # devices on one core), used by examples/dag_validation.py.
@@ -282,12 +297,15 @@ class SSGDDagBuilder:
             h2d_tasks.append(h2d)
 
         # --- forward, layer 1..L ---------------------------------------
+        scale = self._worker_scale
         fwd: list[list[int]] = [[] for _ in range(L)]
         for w in range(self.n_workers):
+            ws = 1.0 if scale is None else scale[w]
             prev = h2d_tasks[w]
             for l in range(L):
                 t = g.add_task(f"fwd_l{l + 1}_w{w}", TaskKind.COMPUTE,
-                               costs.t_f[l], self._gpu_of(w), iteration=it,
+                               costs.t_f[l] * ws, self._gpu_of(w),
+                               iteration=it,
                                layer=l + 1, worker=w, priority=float(l))
                 g.add_edge(prev, t)
                 if l == 0 and prev_update is not None:
@@ -298,10 +316,12 @@ class SSGDDagBuilder:
         # --- backward, layer L..1 --------------------------------------
         bwd: dict[int, list[int]] = {}
         for w in range(self.n_workers):
+            ws = 1.0 if scale is None else scale[w]
             prev = fwd[L - 1][w]
             for l in range(L - 1, -1, -1):
                 t = g.add_task(f"bwd_l{l + 1}_w{w}", TaskKind.COMPUTE,
-                               costs.t_b[l], self._gpu_of(w), iteration=it,
+                               costs.t_b[l] * ws, self._gpu_of(w),
+                               iteration=it,
                                layer=l + 1, worker=w,
                                priority=float(2 * L - l))
                 g.add_edge(prev, t)
@@ -355,6 +375,7 @@ def build_ssgd_dag(
     n_iterations: int = 1,
     comm_scale: Callable[[float, float], float] | None = None,
     shared_compute: bool = False,
+    worker_scale: Sequence[float] | None = None,
 ) -> DAG:
     """Build the S-SGD DAG of Fig. 1 for ``n_iterations`` iterations.
 
@@ -364,9 +385,13 @@ def build_ssgd_dag(
     ``comm_scale(total_bytes, naive_total_time)`` maps a fused bucket to
     its collective duration (used by the bucketing policy to model the
     latency amortization the paper calls for in §VII).
+    ``worker_scale`` gives per-worker compute-time multipliers
+    (heterogeneous GPUs / straggler jitter draws) — the per-worker DAG
+    is the agreement oracle for the heterogeneous batched engine.
     """
     b = SSGDDagBuilder(costs, n_workers, policy, comm_scale=comm_scale,
-                       shared_compute=shared_compute)
+                       shared_compute=shared_compute,
+                       worker_scale=worker_scale)
     for _ in range(n_iterations):
         b.add_iteration()
     return b.dag

@@ -80,8 +80,27 @@ class Interconnect:
 # latency)`` column vectors against per-layer ``nbytes`` row vectors to
 # get ``(scenario x layer)`` cost matrices in one shot.
 # ----------------------------------------------------------------------
-def ring_allreduce_time(nbytes, n, bandwidth, latency):
+def slowest_link(bandwidth, latency, axis: int = -1):
+    """Reduce per-worker link vectors to the link that gates the
+    collective: a synchronous all-reduce completes when its slowest
+    participant finishes, so heterogeneous links collapse to
+    ``(min bandwidth, max latency)`` over the worker axis.
+
+    Degenerates bit-exactly to the scalar model when the vectors are
+    constant (min/max never round), which is how the heterogeneous
+    engine keeps homogeneous scenarios bit-identical.  Dtype-polymorphic
+    over NumPy and ``jax.numpy`` like the collective models below.
+    """
+    xp = array_namespace(bandwidth, latency)
+    return xp.min(bandwidth, axis=axis), xp.max(latency, axis=axis)
+
+
+def ring_allreduce_time(nbytes, n, bandwidth, latency, worker_axis=None):
     """Ring all-reduce: ``2 (n-1)/n * M/B + 2 (n-1) alpha`` seconds.
+
+    ``worker_axis`` marks ``bandwidth``/``latency`` as carrying a
+    per-worker axis: the time is then gated by the slowest link
+    (:func:`slowest_link` reduces that axis first).
 
     Bandwidth-optimal (each rank sends ``2 (n-1)/n`` of the payload)
     but latency grows linearly in ``n`` — the regime behind the 9.6%
@@ -92,6 +111,8 @@ def ring_allreduce_time(nbytes, n, bandwidth, latency):
     ``jax.numpy``; the Python-scalar branch is reserved for genuine
     host scalars because ``if n <= 1`` cannot be traced.
     """
+    if worker_axis is not None:
+        bandwidth, latency = slowest_link(bandwidth, latency, worker_axis)
     if np.ndim(n) == 0 and not is_jax_array(n):
         if n <= 1:
             return nbytes * 0.0
@@ -114,14 +135,18 @@ def _ceil_log2(n, xp=np):
     return xp.where(m == 0.5, e - 1, e).astype(xp.float64)
 
 
-def tree_allreduce_time(nbytes, n, bandwidth, latency):
+def tree_allreduce_time(nbytes, n, bandwidth, latency, worker_axis=None):
     """Double-binary-tree all-reduce: ``2 M/B + 2 ceil(log2 n) alpha``.
 
     NCCL >= 2.4's tree pair pipelines reduce+broadcast so the bandwidth
     term is a flat ``2 M/B`` (slightly worse than ring's
     ``2 (n-1)/n M/B``) while latency grows only logarithmically —
     strictly better than ring for small messages on large clusters.
+    ``worker_axis`` marks per-worker link vectors (see
+    :func:`slowest_link`).
     """
+    if worker_axis is not None:
+        bandwidth, latency = slowest_link(bandwidth, latency, worker_axis)
     if np.ndim(n) == 0 and not is_jax_array(n):
         if n <= 1:
             return nbytes * 0.0
@@ -136,7 +161,8 @@ def tree_allreduce_time(nbytes, n, bandwidth, latency):
 
 def hierarchical_allreduce_time(nbytes, n, gpus_per_node,
                                 intra_bandwidth, intra_latency,
-                                inter_bandwidth, inter_latency):
+                                inter_bandwidth, inter_latency,
+                                worker_axis=None):
     """Two-level all-reduce: ``g``-wide intra-node reduce-scatter,
     inter-node ring all-reduce of the ``nbytes/g`` shard, intra-node
     all-gather.  Degenerates to a flat intra ring on one node and to a
@@ -146,7 +172,14 @@ def hierarchical_allreduce_time(nbytes, n, gpus_per_node,
     link parameters broadcast against ``nbytes``, which is how the
     batched fast path costs every scenario of a grid at once — and
     dtype-polymorphic, so the jit/vmap kernels trace the same code.
+    ``worker_axis`` marks all four link parameters as per-worker
+    vectors, each reduced to its slowest entry (:func:`slowest_link`).
     """
+    if worker_axis is not None:
+        intra_bandwidth, intra_latency = slowest_link(
+            intra_bandwidth, intra_latency, worker_axis)
+        inter_bandwidth, inter_latency = slowest_link(
+            inter_bandwidth, inter_latency, worker_axis)
     xp = array_namespace(nbytes, n, gpus_per_node,
                          intra_bandwidth, inter_bandwidth)
     scalar = xp is np and np.ndim(n) == 0 and np.ndim(gpus_per_node) == 0

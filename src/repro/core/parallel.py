@@ -86,15 +86,18 @@ def _init_worker(src_path: str) -> None:
 
 
 def _eval_span(grid: ScenarioGrid, lo: int, hi: int,
-               warm_iterations: int) -> dict:
+               warm_iterations: int, seed: int = 0) -> dict:
     """One unit of work: evaluate flat scenario indices ``[lo, hi)``
     and return the finished columnar table.  Runs in the worker; the
     evaluator memo (:func:`repro.core.batched.grid_evaluator`) makes
-    every span after a worker's first reuse the prepared structure."""
+    every span after a worker's first reuse the prepared structure.
+    ``seed`` keys the straggler Monte Carlo draws — the draws are keyed
+    by ``(spec, n_workers, seed)`` alone, so sharding cannot change a
+    single sample."""
     from repro.core.batched import grid_evaluator
 
     ev = grid_evaluator(grid)
-    table, batched = ev.run_span(lo, hi)
+    table, batched = ev.run_span(lo, hi, seed=seed)
     if not bool(batched.all()):
         # simulator-fallback rows are filled where they are computed,
         # so the parent never re-derives which rows a span left bogus
@@ -103,7 +106,8 @@ def _eval_span(grid: ScenarioGrid, lo: int, hi: int,
 
         idx = np.nonzero(~batched)[0]
         fill_rows(table, idx,
-                  [_sim_eval(ev.scenario_at(lo + int(i)), warm_iterations)
+                  [_sim_eval(ev.scenario_at(lo + int(i)), warm_iterations,
+                             seed=seed)
                    for i in idx])
     return table
 
@@ -138,12 +142,15 @@ def _shutdown_pools() -> None:
 
 def parallel_tables(grid: ScenarioGrid, *, jobs: int,
                     chunk: int, warm_iterations: int = 6,
-                    pool: str | Executor = "process") -> Iterator[dict]:
+                    pool: str | Executor = "process",
+                    seed: int = 0) -> Iterator[dict]:
     """Evaluate ``grid`` sharded across ``jobs`` workers, yielding
     finished columnar tables **in grid order** (submission order; all
     spans are in flight at once, results are consumed as each earliest
     outstanding span completes).  ``pool`` is ``"process"`` /
-    ``"thread"`` or any ``concurrent.futures.Executor`` to reuse."""
+    ``"thread"`` or any ``concurrent.futures.Executor`` to reuse;
+    ``seed`` keys the straggler Monte Carlo draws identically in every
+    worker."""
     jobs = resolve_jobs(jobs)
     n = len(grid)
     spans = span_plan(n, jobs, chunk)
@@ -151,10 +158,10 @@ def parallel_tables(grid: ScenarioGrid, *, jobs: int,
         return
     if jobs == 1:
         for lo, hi in spans:
-            yield _eval_span(grid, lo, hi, warm_iterations)
+            yield _eval_span(grid, lo, hi, warm_iterations, seed)
         return
     ex = pool if isinstance(pool, Executor) else _get_pool(pool, jobs)
-    futures = [ex.submit(_eval_span, grid, lo, hi, warm_iterations)
+    futures = [ex.submit(_eval_span, grid, lo, hi, warm_iterations, seed)
                for lo, hi in spans]
     for fut in futures:
         yield fut.result()

@@ -24,24 +24,31 @@ from typing import Sequence
 import numpy as np
 
 #: Column order of the tidy results table (the single source of truth;
-#: :mod:`repro.core.sweep` re-exports it).
+#: :mod:`repro.core.sweep` re-exports it).  ``het`` / ``straggler``
+#: are the heterogeneity axes (label ``"none"`` when unused);
+#: ``t_mean_s``/``t_p95_s``/``t_p99_s`` are the straggler Monte Carlo
+#: tail statistics of the iteration time — equal to
+#: ``iteration_time_s`` on deterministic rows (a point mass has no
+#: tails).
 COLUMNS = ("workload", "cluster", "n_workers", "policy", "collective",
-           "interconnect", "batch_per_gpu", "iteration_time_s",
-           "samples_per_sec", "speedup", "t_comm_s", "t_comp_s",
+           "interconnect", "het", "straggler", "batch_per_gpu",
+           "iteration_time_s", "samples_per_sec", "speedup",
+           "t_comm_s", "t_comp_s", "t_mean_s", "t_p95_s", "t_p99_s",
            "method")
 
 #: String-valued columns, stored as object arrays (shared-pointer
 #: labels: fancy-indexing an object array copies references, never
 #: string bytes).
 LABEL_COLUMNS = ("workload", "cluster", "policy", "collective",
-                 "interconnect", "method")
+                 "interconnect", "het", "straggler", "method")
 
 #: Integer-valued columns (int64).
 INT_COLUMNS = ("n_workers", "batch_per_gpu")
 
 #: Float-valued columns (float64).
 FLOAT_COLUMNS = ("iteration_time_s", "samples_per_sec", "speedup",
-                 "t_comm_s", "t_comp_s")
+                 "t_comm_s", "t_comp_s", "t_mean_s", "t_p95_s",
+                 "t_p99_s")
 
 #: Evaluation-path labels indexed by the policy tier code the batched
 #: select computes (0 = closed form, 1 = bucket timeline, 2 =
@@ -95,20 +102,8 @@ def rows_from_table(table: dict,
         c = table[k] if indices is None else table[k][indices]
         return c.tolist()
 
-    return [
-        {
-            "workload": wl, "cluster": cl, "n_workers": nw, "policy": pol,
-            "collective": co, "interconnect": ic, "batch_per_gpu": b,
-            "iteration_time_s": it, "samples_per_sec": sps, "speedup": sp,
-            "t_comm_s": tcm, "t_comp_s": tcp, "method": meth,
-        }
-        for wl, cl, nw, pol, co, ic, b, it, sps, sp, tcm, tcp, meth in zip(
-            col("workload"), col("cluster"), col("n_workers"),
-            col("policy"), col("collective"), col("interconnect"),
-            col("batch_per_gpu"), col("iteration_time_s"),
-            col("samples_per_sec"), col("speedup"), col("t_comm_s"),
-            col("t_comp_s"), col("method"))
-    ]
+    return [dict(zip(COLUMNS, values))
+            for values in zip(*(col(k) for k in COLUMNS))]
 
 
 def fill_rows(table: dict, indices: Sequence[int],

@@ -13,11 +13,13 @@ and validates them, so grids stay cheap to build, hash and diff.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import math
 from dataclasses import dataclass
 from typing import Iterator, Sequence
 
+from repro.core import het as het_mod
 from repro.core.hardware import (CLUSTERS, COLLECTIVE_ALGORITHMS,
                                  INTERCONNECT_PRESETS, ClusterSpec,
                                  apply_interconnect_preset,
@@ -68,12 +70,19 @@ class Scenario:
     policy: str
     collective: str = "ring"
     interconnect: str | None = None
+    het: str | None = None
+    straggler: str | None = None
     batch_per_gpu: int | None = None
 
     def label(self) -> str:
         ic = normalize_interconnect(self.interconnect)
-        return (f"{self.workload}/{self.cluster}/w{self.n_workers}"
-                f"/{self.policy}/{self.collective}/{ic}")
+        label = (f"{self.workload}/{self.cluster}/w{self.n_workers}"
+                 f"/{self.policy}/{self.collective}/{ic}")
+        if self.het is not None and self.het != "none":
+            label += f"/{self.het}"
+        if self.straggler is not None and self.straggler != "none":
+            label += f"/{self.straggler}"
+        return label
 
     def validate(self) -> None:
         validate_workload(self.workload)     # any registered provider
@@ -89,20 +98,48 @@ class Scenario:
             raise ValueError(f"unknown collective {self.collective!r}; "
                              f"one of {COLLECTIVE_ALGORITHMS}")
         validate_interconnect(self.interconnect)
+        try:
+            het_mod.validate_het(self.het)
+            het_mod.validate_straggler(self.straggler)
+        except ValueError as e:
+            raise ValueError(str(e)) from None
         if self.batch_per_gpu is not None and self.batch_per_gpu < 1:
             raise ValueError(f"batch_per_gpu must be >= 1, "
                              f"got {self.batch_per_gpu}")
+
+
+def apply_het_links(cluster: ClusterSpec, bw_mult: float,
+                    lat_mult: float) -> ClusterSpec:
+    """A copy of ``cluster`` with both links scaled by the slowest-
+    worker link multipliers of a heterogeneity profile (the per-worker
+    vectors reduce to ``min bw`` / ``max lat`` first — see
+    :func:`repro.core.analytical.worker_bottleneck`).  Identity
+    multipliers return the cluster untouched, keeping homogeneous
+    scenarios bit-identical."""
+    if bw_mult == 1.0 and lat_mult == 1.0:
+        return cluster
+    return dataclasses.replace(
+        cluster,
+        intra=cluster.intra.scaled(bw_mult, lat_mult),
+        inter=cluster.inter.scaled(bw_mult, lat_mult))
 
 
 def resolve_cluster(scenario: Scenario) -> ClusterSpec:
     """Concrete :class:`ClusterSpec` for a scenario: the named base
     cluster resized to hold ``n_workers`` devices (whole nodes of
     ``gpus_per_node``, like the paper's 1/2/4-node testbeds) with the
-    interconnect preset applied."""
+    interconnect preset applied, and — when the scenario carries a
+    heterogeneity profile — the links derated to the slowest worker's
+    multipliers."""
     base = CLUSTERS[scenario.cluster]
     n_nodes = max(1, math.ceil(scenario.n_workers / base.gpus_per_node))
     cluster = base.with_workers(n_nodes=n_nodes)
-    return apply_interconnect_preset(cluster, scenario.interconnect)
+    cluster = apply_interconnect_preset(cluster, scenario.interconnect)
+    profile = het_mod.parse_het_profile(scenario.het)
+    if profile is not None:
+        _, bw, lat = het_mod.worker_vectors(profile, scenario.n_workers)
+        cluster = apply_het_links(cluster, float(bw.min()), float(lat.max()))
+    return cluster
 
 
 def resolve_policy(scenario: Scenario) -> Policy:
@@ -124,12 +161,15 @@ class ScenarioGrid:
                                "caffe-mpi")
     collectives: Sequence[str] = ("ring",)
     interconnects: Sequence[str | None] = (None,)
+    het_profiles: Sequence[str | None] = (None,)
+    stragglers: Sequence[str | None] = (None,)
     batch_per_gpu: int | None = None
 
     def __len__(self) -> int:
         return (len(self.workloads) * len(self.clusters)
                 * len(self.worker_counts) * len(self.policies)
-                * len(self.collectives) * len(self.interconnects))
+                * len(self.collectives) * len(self.interconnects)
+                * len(self.het_profiles) * len(self.stragglers))
 
     def __iter__(self) -> Iterator[Scenario]:
         return iter(self.expand())
@@ -161,15 +201,21 @@ class ScenarioGrid:
                                  f"one of {COLLECTIVE_ALGORITHMS}")
         for ic in self.interconnects:
             validate_interconnect(ic)
+        for h in self.het_profiles:
+            het_mod.validate_het(h)
+        for st in self.stragglers:
+            het_mod.validate_straggler(st)
 
     def expand(self) -> list[Scenario]:
         self.validate_axes()
         return [Scenario(workload=wl, cluster=cl, n_workers=int(n),
                          policy=pol, collective=coll, interconnect=ic,
+                         het=h, straggler=st,
                          batch_per_gpu=self.batch_per_gpu)
-                for wl, cl, n, pol, coll, ic in itertools.product(
+                for wl, cl, n, pol, coll, ic, h, st in itertools.product(
                     self.workloads, self.clusters, self.worker_counts,
-                    self.policies, self.collectives, self.interconnects)]
+                    self.policies, self.collectives, self.interconnects,
+                    self.het_profiles, self.stragglers)]
 
     def scenario_at(self, i: int) -> Scenario:
         """Materialize the scenario at flat ``expand()`` index ``i``
@@ -177,17 +223,20 @@ class ScenarioGrid:
         batched/parallel paths recover the few simulator-fallback
         scenarios of an otherwise fully batched grid."""
         codes = []
-        for axis in (self.interconnects, self.collectives, self.policies,
+        for axis in (self.stragglers, self.het_profiles,
+                     self.interconnects, self.collectives, self.policies,
                      self.worker_counts, self.clusters, self.workloads):
             i, c = divmod(i, len(axis))
             codes.append(c)
-        ii, ai, pi, ki, ci, wi = codes
+        sti, hi, ii, ai, pi, ki, ci, wi = codes
         return Scenario(workload=self.workloads[wi],
                         cluster=self.clusters[ci],
                         n_workers=int(self.worker_counts[ki]),
                         policy=self.policies[pi],
                         collective=self.collectives[ai],
                         interconnect=self.interconnects[ii],
+                        het=self.het_profiles[hi],
+                        straggler=self.stragglers[sti],
                         batch_per_gpu=self.batch_per_gpu)
 
 def default_grid() -> ScenarioGrid:

@@ -269,6 +269,7 @@ def simulate_policy(
     comm_scale: Callable[[float, float], float] | None = None,
     auto_steady: bool = False,
     rtol: float = STEADY_RTOL,
+    worker_scale=None,
 ) -> SimResult:
     """Build the Fig.-1 S-SGD DAG for ``policy`` and list-schedule it.
 
@@ -281,9 +282,14 @@ def simulate_policy(
     iteration at a time and the warm-up stops as soon as the
     update-task deltas converge (``rtol``), capped at ``n_iterations``
     — :attr:`SimResult.n_iterations_used` records where it stopped.
+
+    ``worker_scale`` (per-worker compute-time multipliers) makes this
+    the per-worker oracle for the heterogeneous/straggler engine — see
+    :class:`repro.core.dag.SSGDDagBuilder`.
     """
     builder = SSGDDagBuilder(costs, n_workers, policy,
-                             comm_scale=comm_scale)
+                             comm_scale=comm_scale,
+                             worker_scale=worker_scale)
     prio = frozenset([NET_CHANNEL]) if getattr(policy, "priority_comm", False) \
         else None
     sim = Simulation(builder.dag, priority_channels=prio)
@@ -306,11 +312,13 @@ def simulate_steady(
     policy,
     n_iterations: int = 6,
     comm_scale: Callable[[float, float], float] | None = None,
+    worker_scale=None,
 ) -> float:
     """:func:`simulate_policy`, reduced to the warm per-iteration time
     in seconds.  Auto-detects the steady state: the warm-up stops as
     soon as consecutive update deltas converge, with ``n_iterations``
     as the cap (the historical fixed warm-up count)."""
     return simulate_policy(costs, n_workers, policy, n_iterations,
-                           comm_scale, auto_steady=True) \
+                           comm_scale, auto_steady=True,
+                           worker_scale=worker_scale) \
         .steady_iteration_time()

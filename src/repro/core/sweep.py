@@ -1,8 +1,8 @@
 """Batched scenario-sweep engine for the S-SGD DAG model.
 
 Evaluates a :class:`repro.core.scenarios.ScenarioGrid` — thousands of
-``(workload x cluster x workers x interconnect x policy x collective)``
-combinations — in one call, two ways:
+``(workload x cluster x workers x interconnect x policy x collective
+x het x straggler)`` combinations — in one call, two ways:
 
 * **Batched analytical fast path** (the default for every policy
   whose closed form is exact — see
@@ -65,6 +65,7 @@ from typing import Iterable, Iterator, Sequence
 import numpy as np
 
 from repro.core import analytical
+from repro.core import het as het_mod
 from repro.core.batched import grid_evaluator
 from repro.core.batched import eval_scenarios  # noqa: F401  (re-export)
 from repro.core.costmodel import comm_scale_fn
@@ -107,46 +108,118 @@ def _scenario_costs(s: Scenario, tab: WorkloadTable):
     return costs, cluster, policy, batch
 
 
-def _fast_eval(s: Scenario) -> dict:
+def _scale_compute(costs, tmul: float):
+    """Slowest-worker theorem applied to :class:`IterationCosts`: the
+    synchronous steady state with per-worker compute multipliers equals
+    the homogeneous closed form with ``t_f``/``t_b`` scaled by the
+    bottleneck multiplier (``t_io``/``t_h2d``/``t_c``/``t_u`` are not
+    compute-rate-bound and stay put)."""
+    return replace(costs, t_f=np.asarray(costs.t_f) * tmul,
+                   t_b=np.asarray(costs.t_b) * tmul)
+
+
+def _het_state(s: Scenario):
+    """``(inv_speed | None, StragglerSpec | None)`` for one scenario —
+    the per-worker compute-rate vector (``None`` when homogeneous, so
+    the deterministic path stays bit-identical) and the parsed
+    straggler spec."""
+    profile = het_mod.parse_het_profile(s.het)
+    inv = None
+    if profile is not None:
+        inv, _, _ = het_mod.worker_vectors(profile, s.n_workers)
+    return inv, het_mod.parse_straggler(s.straggler)
+
+
+def _ref_tails(t_iters) -> tuple[float, float, float]:
+    """``(mean, p95, p99)`` of per-draw iteration times — the same
+    host-side reduction the batched Monte Carlo pass applies."""
+    t = np.asarray(t_iters)
+    return (float(t.mean()), float(np.quantile(t, 0.95)),
+            float(np.quantile(t, 0.99)))
+
+
+def _fast_eval(s: Scenario, seed: int = 0) -> dict:
     """Per-scenario analytical path: NumPy arrays over the layer
     dimension fed straight into the shared closed forms (the scalar
     equations in :mod:`repro.core.analytical` are pure arithmetic over
     sequences, so array-valued ``IterationCosts`` evaluate directly —
     no parallel formula implementation to keep in lockstep).
 
+    Heterogeneous scenarios apply the slowest-worker reduction: links
+    are derated in :func:`repro.core.scenarios.resolve_cluster`,
+    compute by :func:`_scale_compute` at ``max_w(1/speed_w)``.
+    Stochastic stragglers loop the closed form over the Monte Carlo
+    draws for the tail columns (same draw matrices as the batched
+    engines, keyed by ``seed``).
+
     This is the **reference implementation and agreement oracle** for
     the scenario-axis batched kernel (:mod:`repro.core.batched`), which
     is what :func:`sweep` actually routes closed-form scenarios
     through; the property tests pin the two to <= 1e-9 relative."""
-    costs, _, policy, batch = _scenario_costs(s, resolve_workload(s.workload))
+    costs0, _, policy, batch = _scenario_costs(s, resolve_workload(s.workload))
+    inv, st = _het_state(s)
+    costs = costs0 if inv is None else _scale_compute(costs0, float(inv.max()))
     t_iter = float(analytical.closed_form(costs, policy))
     t1 = float(analytical.closed_form(
         costs.with_comm(np.zeros_like(costs.t_f)), policy))
+    tails = None
+    if st is not None and not st.is_deterministic:
+        J = st.draw_matrix(s.n_workers, seed)
+        tmuls = (J if inv is None else J * inv).max(axis=1)
+        tails = _ref_tails([
+            float(analytical.closed_form(_scale_compute(costs0, m), policy))
+            for m in tmuls])
     return _row(s, batch, t_iter, t1, float(np.sum(costs.t_c)),
-                float(np.sum(costs.t_f) + np.sum(costs.t_b)), "analytical")
+                float(np.sum(costs.t_f) + np.sum(costs.t_b)), "analytical",
+                tails=tails)
 
 
-def _sim_eval(s: Scenario, warm_iterations: int = 6) -> dict:
-    """Event-driven fallback: build the Fig.-1 DAG and list-schedule."""
+def _sim_eval(s: Scenario, warm_iterations: int = 6, seed: int = 0) -> dict:
+    """Event-driven fallback: build the Fig.-1 DAG and list-schedule.
+
+    This is the per-worker oracle for the heterogeneity engine: the
+    per-worker rate vector goes to the DAG builder *unreduced*
+    (``worker_scale``), so agreement with the batched path validates
+    the slowest-worker theorem rather than assuming it.  Stochastic
+    stragglers re-simulate per draw with ``jitter * inv_speed``."""
     tab = resolve_workload(s.workload)
     costs, cluster, policy, batch = _scenario_costs(s, tab)
+    inv, st = _het_state(s)
     comm_scale = comm_scale_fn(cluster, s.n_workers, s.collective) \
         if policy.bucket_bytes else None
     t_iter = simulate_steady(costs, s.n_workers, policy,
                              n_iterations=warm_iterations,
-                             comm_scale=comm_scale)
-    # weak-scaling baseline: same pipeline, one worker, no comm
+                             comm_scale=comm_scale,
+                             worker_scale=inv)
+    # weak-scaling baseline: same pipeline, one worker, no comm — with
+    # the same bottleneck compute rate, matching the batched speedup
     base_policy = replace(policy, bucket_bytes=None, priority_comm=False)
     c1 = costs.with_comm([0.0] * costs.num_layers)
+    if inv is not None:
+        c1 = _scale_compute(c1, float(inv.max()))
     t1 = analytical.closed_form(c1, base_policy)
     if t1 is None:                                    # pragma: no cover
         t1 = simulate_steady(c1, 1, base_policy, n_iterations=warm_iterations)
+    tails = None
+    if st is not None and not st.is_deterministic:
+        J = st.draw_matrix(s.n_workers, seed)
+        mul = J if inv is None else J * inv
+        tails = _ref_tails([
+            simulate_steady(costs, s.n_workers, policy,
+                            n_iterations=warm_iterations,
+                            comm_scale=comm_scale,
+                            worker_scale=m)
+            for m in mul])
     return _row(s, batch, t_iter, t1, float(np.sum(costs.t_c)),
-                float(np.sum(costs.t_f) + np.sum(costs.t_b)), "simulated")
+                float(np.sum(costs.t_f) + np.sum(costs.t_b)), "simulated",
+                tails=tails)
 
 
 def _row(s: Scenario, batch: int, t_iter: float, t1: float, t_comm: float,
-         t_comp: float, method: str) -> dict:
+         t_comp: float, method: str,
+         tails: tuple[float, float, float] | None = None) -> dict:
+    t_mean, t_p95, t_p99 = tails if tails is not None \
+        else (t_iter, t_iter, t_iter)
     return {
         "workload": s.workload,
         "cluster": s.cluster,
@@ -154,12 +227,17 @@ def _row(s: Scenario, batch: int, t_iter: float, t1: float, t_comm: float,
         "policy": s.policy,
         "collective": s.collective,
         "interconnect": normalize_interconnect(s.interconnect),
+        "het": het_mod.normalize_het(s.het),
+        "straggler": het_mod.normalize_straggler(s.straggler),
         "batch_per_gpu": batch,
         "iteration_time_s": t_iter,
         "samples_per_sec": s.n_workers * batch / t_iter if t_iter else 0.0,
         "speedup": s.n_workers * t1 / t_iter if t_iter else float(s.n_workers),
         "t_comm_s": t_comm,
         "t_comp_s": t_comp,
+        "t_mean_s": t_mean,
+        "t_p95_s": t_p95,
+        "t_p99_s": t_p99,
         "method": method,
     }
 
@@ -203,11 +281,21 @@ class SweepResult:
     def scenarios_per_sec(self) -> float:
         return len(self) / self.elapsed_s if self.elapsed_s else 0.0
 
+    def _col(self, column: str) -> np.ndarray:
+        """The column array, or a ``KeyError`` naming the valid columns
+        — a typo'd ``sorted_by("t_p95")`` should say what *is* there."""
+        try:
+            return self.columns[column]
+        except KeyError:
+            raise KeyError(
+                f"unknown column {column!r}; one of "
+                f"{', '.join(COLUMNS)}") from None
+
     def sorted_by(self, column: str, reverse: bool = True) -> list[dict]:
         """Rows ordered by ``column`` — a stable argsort over the
         column array (ties keep grid order, exactly like
         ``sorted(rows, ...)`` did on the per-row path)."""
-        col = self.columns[column]
+        col = self._col(column)
         if reverse:
             # stable *descending*: stable-argsort the reversed column,
             # map indices back, reverse — equal keys keep ascending
@@ -224,13 +312,19 @@ class SweepResult:
 
         ``interconnect`` accepts both spellings of "cluster default":
         ``None`` and ``"default"`` (rows always store the normalized
-        form, via the same normalizer as ``Scenario.label()``).
+        form, via the same normalizer as ``Scenario.label()``); ``het``
+        and ``straggler`` likewise accept ``None`` for ``"none"``.
+        Unknown column names raise ``KeyError`` naming the valid ones.
         """
         if "interconnect" in eq:
             eq["interconnect"] = normalize_interconnect(eq["interconnect"])
+        if "het" in eq:
+            eq["het"] = het_mod.normalize_het(eq["het"])
+        if "straggler" in eq:
+            eq["straggler"] = het_mod.normalize_straggler(eq["straggler"])
         mask = np.ones(len(self), dtype=bool)
         for k, v in eq.items():
-            mask &= self.columns[k] == v
+            mask &= self._col(k) == v
         return rows_from_table(self.columns, np.nonzero(mask)[0])
 
     def to_csv(self, path) -> None:
@@ -277,19 +371,29 @@ class SweepResult:
             rows = list(rows)
             if limit is not None:
                 rows = rows[:limit]
-        # wide enough for provider-prefixed names (llm:qwen2-moe-a2.7b)
+        # wide enough for provider-prefixed names (llm:qwen2-moe-a2.7b);
+        # the heterogeneity columns appear only when some row uses them
+        with_het = any(r["het"] != "none" or r["straggler"] != "none"
+                       for r in rows)
         header = (f"{'workload':22s} {'cluster':16s} {'wk':>3s} "
                   f"{'policy':13s} {'coll':12s} {'interconn':12s} "
                   f"{'iter_ms':>9s} {'samp/s':>10s} {'speedup':>7s} {'m':>2s}")
+        if with_het:
+            header += (f" {'het':18s} {'straggler':18s} "
+                       f"{'p99_ms':>9s}")
         lines = [header, "-" * len(header)]
         for r in rows:
-            lines.append(
+            line = (
                 f"{r['workload']:22s} {r['cluster']:16s} "
                 f"{r['n_workers']:3d} {r['policy']:13s} "
                 f"{r['collective']:12s} {r['interconnect']:12s} "
                 f"{r['iteration_time_s'] * 1e3:9.2f} "
                 f"{r['samples_per_sec']:10.0f} {r['speedup']:7.2f} "
                 f"{r['method'][:1]:>2s}")
+            if with_het:
+                line += (f" {r['het'][:18]:18s} {r['straggler'][:18]:18s} "
+                         f"{r['t_p99_s'] * 1e3:9.2f}")
+            lines.append(line)
         return "\n".join(lines)
 
 
@@ -325,7 +429,7 @@ def _check_backend(backend: str, *, batched: bool,
 
 
 def _fill_simulated(table: dict, batched_mask: np.ndarray, ev, lo: int,
-                    warm_iterations: int) -> None:
+                    warm_iterations: int, seed: int = 0) -> None:
     """Overwrite the tier-2 placeholder rows of a chunk table with
     event-driven simulator results, in place."""
     from repro.core.resulttable import fill_rows
@@ -333,13 +437,15 @@ def _fill_simulated(table: dict, batched_mask: np.ndarray, ev, lo: int,
     idx = np.nonzero(~batched_mask)[0]
     if len(idx):
         fill_rows(table, idx,
-                  [_sim_eval(ev.scenario_at(lo + int(i)), warm_iterations)
+                  [_sim_eval(ev.scenario_at(lo + int(i)), warm_iterations,
+                             seed=seed)
                    for i in idx])
 
 
 def _reference_rows(scenarios: Sequence[Scenario], *,
                     force_simulator: bool, warm_iterations: int,
-                    batched: bool, chunk: int) -> Iterator[list[dict]]:
+                    batched: bool, chunk: int,
+                    seed: int = 0) -> Iterator[list[dict]]:
     """The per-scenario reference paths, chunk by chunk:
     :func:`_fast_eval` for closed forms (or the batched list kernel
     when ``batched``), the event-driven simulator for the rest — the
@@ -363,12 +469,13 @@ def _reference_rows(scenarios: Sequence[Scenario], *,
             if tier >= (1 if batched else 2):
                 fast.append(i)
         if batched and fast:
-            fast_rows = iter(eval_scenarios([part[i] for i in fast]))
+            fast_rows = iter(eval_scenarios([part[i] for i in fast],
+                                            seed=seed))
         else:
-            fast_rows = iter([_fast_eval(part[i]) for i in fast])
+            fast_rows = iter([_fast_eval(part[i], seed=seed) for i in fast])
         fast_set = set(fast)
         yield [next(fast_rows) if i in fast_set
-               else _sim_eval(s, warm_iterations)
+               else _sim_eval(s, warm_iterations, seed=seed)
                for i, s in enumerate(part)]
 
 
@@ -379,7 +486,8 @@ def iter_tables(grid: ScenarioGrid | Iterable[Scenario], *,
                 backend: str = "numpy",
                 chunk: int = DEFAULT_CHUNK,
                 jobs: int | None = None,
-                pool: str = "process") -> Iterator[dict]:
+                pool: str = "process",
+                seed: int = 0) -> Iterator[dict]:
     """Yield columnar result tables in scenario order, lazily — the
     single evaluation core behind :func:`sweep`, :func:`iter_rows` and
     :func:`stream`.  Each yielded table maps every :data:`COLUMNS` key
@@ -397,6 +505,11 @@ def iter_tables(grid: ScenarioGrid | Iterable[Scenario], *,
     and more than one device is visible).  Scenario lists and the
     reference paths (``batched=False`` / ``force_simulator=True``)
     produce per-row dicts and are wrapped into tables chunk by chunk.
+
+    ``seed`` keys the straggler Monte Carlo draws (no effect on
+    deterministic scenarios); every route threads it to the same keyed
+    generator, so results are independent of backend, sharding and
+    chunking.
     """
     _check_backend(backend, batched=batched, force_simulator=force_simulator)
     if backend == "jax":
@@ -409,7 +522,7 @@ def iter_tables(grid: ScenarioGrid | Iterable[Scenario], *,
                 if len(_jax.devices()) > 1:
                     from repro.launch.mesh import make_dp_mesh
                     mesh = make_dp_mesh(min(jobs, len(_jax.devices())))
-            run = jax_grid_evaluator(grid, mesh=mesh).run()
+            run = jax_grid_evaluator(grid, mesh=mesh).run(seed=seed)
             for lo in range(0, len(run), chunk):
                 yield run.table_slice(lo, min(lo + chunk, len(run)))[0]
         else:
@@ -420,7 +533,7 @@ def iter_tables(grid: ScenarioGrid | Iterable[Scenario], *,
                 s.validate()
             for lo in range(0, len(scenarios), chunk):
                 yield table_from_rows(
-                    eval_scenarios_jax(scenarios[lo:lo + chunk]))
+                    eval_scenarios_jax(scenarios[lo:lo + chunk], seed=seed))
         return
     if isinstance(grid, ScenarioGrid) and batched and not force_simulator:
         if jobs is not None and jobs > 1:
@@ -428,14 +541,15 @@ def iter_tables(grid: ScenarioGrid | Iterable[Scenario], *,
 
             yield from parallel_tables(grid, jobs=jobs, chunk=chunk,
                                        warm_iterations=warm_iterations,
-                                       pool=pool)
+                                       pool=pool, seed=seed)
             return
         ev = grid_evaluator(grid)
-        run = ev.run()
+        run = ev.run(seed=seed)
         for lo in range(0, len(run), chunk):
             table, mask = run.table_slice(lo, min(lo + chunk, len(run)))
             if not ev.all_batched:
-                _fill_simulated(table, mask, ev, lo, warm_iterations)
+                _fill_simulated(table, mask, ev, lo, warm_iterations,
+                                seed=seed)
             yield table
         return
     if isinstance(grid, ScenarioGrid):
@@ -446,7 +560,7 @@ def iter_tables(grid: ScenarioGrid | Iterable[Scenario], *,
             s.validate()
     for part in _reference_rows(scenarios, force_simulator=force_simulator,
                                 warm_iterations=warm_iterations,
-                                batched=batched, chunk=chunk):
+                                batched=batched, chunk=chunk, seed=seed):
         yield table_from_rows(part)
 
 
@@ -456,14 +570,15 @@ def iter_rows(grid: ScenarioGrid | Iterable[Scenario], *,
               batched: bool = True,
               backend: str = "numpy",
               chunk: int = DEFAULT_CHUNK,
-              jobs: int | None = None) -> Iterator[dict]:
+              jobs: int | None = None,
+              seed: int = 0) -> Iterator[dict]:
     """Yield tidy result rows in scenario order, lazily — the per-row
     view of :func:`iter_tables` (one chunk of rows is materialized at
     a time; for columnar access use :func:`iter_tables` directly)."""
     for table in iter_tables(grid, force_simulator=force_simulator,
                              warm_iterations=warm_iterations,
                              batched=batched, backend=backend,
-                             chunk=chunk, jobs=jobs):
+                             chunk=chunk, jobs=jobs, seed=seed):
         yield from rows_from_table(table)
 
 
@@ -473,7 +588,8 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
           batched: bool = True,
           backend: str = "numpy",
           jobs: int | None = None,
-          chunk: int | None = None) -> SweepResult:
+          chunk: int | None = None,
+          seed: int = 0) -> SweepResult:
     """Evaluate every scenario of ``grid`` and return the tidy table.
 
     Closed-form and bucket-timeline scenarios go through the
@@ -498,6 +614,9 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
     processes (:mod:`repro.core.parallel`) — output is bit-identical
     to serial, in the same order.  On the jax backend it shards over
     the device mesh instead (no-op on a single device).
+
+    ``seed`` keys the straggler Monte Carlo draws; same grid + same
+    seed reproduces the tail columns exactly on every backend.
     """
     _check_backend(backend, batched=batched, force_simulator=force_simulator)
     t0 = time.perf_counter()
@@ -512,7 +631,7 @@ def sweep(grid: ScenarioGrid | Iterable[Scenario], *,
     columns = concat_tables(list(iter_tables(
         grid, force_simulator=force_simulator,
         warm_iterations=warm_iterations, batched=batched,
-        backend=backend, chunk=chunk, jobs=jobs)))
+        backend=backend, chunk=chunk, jobs=jobs, seed=seed)))
     elapsed = time.perf_counter() - t0
     if grid_batched:
         # static counts from the grid structure — no label scan
@@ -530,7 +649,8 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
            csv_path=None, json_path=None,
            force_simulator: bool = False, warm_iterations: int = 6,
            batched: bool = True, backend: str = "numpy",
-           chunk: int = DEFAULT_CHUNK, jobs: int | None = None) -> dict:
+           chunk: int = DEFAULT_CHUNK, jobs: int | None = None,
+           seed: int = 0) -> dict:
     """Evaluate ``grid`` **once** and write the tidy table to
     ``csv_path`` and/or ``json_path`` incrementally — one chunk of
     rows in memory at a time, both formats fed from the same pass.
@@ -560,7 +680,7 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
         for table in iter_tables(grid, force_simulator=force_simulator,
                                  warm_iterations=warm_iterations,
                                  batched=batched, backend=backend,
-                                 chunk=chunk, jobs=jobs):
+                                 chunk=chunk, jobs=jobs, seed=seed):
             if csv_file is not None:
                 writer.writerows(
                     zip(*(table[k].tolist() for k in COLUMNS)))
@@ -607,23 +727,23 @@ def stream_json(grid: ScenarioGrid | Iterable[Scenario], path,
 
 
 def evaluate_scenario(s: Scenario, method: str = "auto",
-                      warm_iterations: int = 6) -> dict:
+                      warm_iterations: int = 6, seed: int = 0) -> dict:
     """Evaluate one scenario; ``method`` is ``auto`` (closed form when
     exact, else the batched bucket-timeline kernel, else the
     simulator), ``analytical`` (raise unless the per-layer closed form
-    applies) or ``simulator``."""
+    applies) or ``simulator``.  ``seed`` keys the straggler draws."""
     s.validate()
     policy = resolve_policy(s)
     if method == "simulator":
-        return _sim_eval(s, warm_iterations)
+        return _sim_eval(s, warm_iterations, seed=seed)
     if method == "analytical":
         if not has_fast_path(policy):
             raise ValueError(f"policy {s.policy!r} has no exact closed form")
-        return _fast_eval(s)
+        return _fast_eval(s, seed=seed)
     if method != "auto":
         raise ValueError(f"unknown method {method!r}")
     if has_fast_path(policy):
-        return _fast_eval(s)
+        return _fast_eval(s, seed=seed)
     if has_batched_path(policy):
-        return eval_scenarios([s])[0]
-    return _sim_eval(s, warm_iterations)
+        return eval_scenarios([s], seed=seed)[0]
+    return _sim_eval(s, warm_iterations, seed=seed)

@@ -10,6 +10,9 @@ emit a tidy results table.
         --clusters v100-nvlink-ib \\
         --workers 4,8,16,32 --policies caffe-mpi,bucketed-25mb \\
         --collectives ring,tree,hierarchical --csv /tmp/sweep.csv
+    PYTHONPATH=src python -m repro.launch.sweep \\
+        --het none,het:1x0.5+3x1.0 --stragglers none,lognormal:0.2x1000 \\
+        --seed 7 --sort t_p99_s
 
 Workloads resolve through the pluggable registry
 (``repro.core.workloads``): bare paper CNN names or ``cnn:<name>``,
@@ -77,6 +80,22 @@ def build_parser() -> argparse.ArgumentParser:
                    help="comma-separated presets "
                         f"({', '.join(sorted(INTERCONNECT_PRESETS))}) "
                         "and/or 'default'")
+    p.add_argument("--het", type=_csv_list, default=None,
+                   help="comma-separated heterogeneity profiles: 'none' "
+                        "and/or 'het:<slots>' specs, e.g. "
+                        "het:1x0.5+3x1.0 (one half-speed worker per 4), "
+                        "het:2x1.0@bw0.5 (half link bandwidth); see "
+                        "repro.core.het")
+    p.add_argument("--stragglers", type=_csv_list, default=None,
+                   help="comma-separated straggler models: 'none' and/or "
+                        "'<dist>:<scale>[x<draws>]' with dist lognormal|exp, "
+                        "e.g. lognormal:0.2x1000 — Monte Carlo tails land "
+                        "in t_mean_s/t_p95_s/t_p99_s")
+    p.add_argument("--seed", type=int, default=0,
+                   help="seed for the straggler Monte Carlo draws "
+                        "(default 0; draws are keyed by (spec, workers, "
+                        "seed), so results are reproducible across "
+                        "backends, --jobs and chunking)")
     p.add_argument("--batch-per-gpu", type=int, default=None,
                    help="override the workload's per-GPU batch size")
     p.add_argument("--force-simulator", action="store_true",
@@ -135,6 +154,12 @@ def grid_from_args(args: argparse.Namespace):
     if args.interconnects:
         axes["interconnects"] = tuple(
             None if i == "default" else i for i in args.interconnects)
+    if args.het:
+        axes["het_profiles"] = tuple(
+            None if h == "none" else h for h in args.het)
+    if args.stragglers:
+        axes["stragglers"] = tuple(
+            None if s == "none" else s for s in args.stragglers)
     if args.batch_per_gpu is not None:
         axes["batch_per_gpu"] = args.batch_per_gpu
     return dataclasses.replace(base, **axes)
@@ -175,13 +200,16 @@ def main(argv: list[str] | None = None) -> int:
           f"({len(grid.workloads)} workloads x {len(grid.clusters)} clusters "
           f"x {len(grid.worker_counts)} sizes x {len(grid.policies)} policies "
           f"x {len(grid.collectives)} collectives "
-          f"x {len(grid.interconnects)} interconnects)")
+          f"x {len(grid.interconnects)} interconnects "
+          f"x {len(grid.het_profiles)} het x {len(grid.stragglers)} "
+          f"stragglers)")
     if args.stream:
         summary = stream(grid, csv_path=args.csv, json_path=args.json,
                          force_simulator=args.force_simulator,
                          batched=not args.per_scenario,
                          backend=args.backend, jobs=args.jobs,
-                         chunk=args.chunk or DEFAULT_CHUNK)
+                         chunk=args.chunk or DEFAULT_CHUNK,
+                         seed=args.seed)
         dests = ", ".join(p for p in (args.csv, args.json) if p)
         print(f"streamed {summary['n_scenarios']} rows to {dests} "
               f"in {summary['elapsed_s']:.2f}s "
@@ -192,7 +220,7 @@ def main(argv: list[str] | None = None) -> int:
         return 0
     result = sweep(grid, force_simulator=args.force_simulator,
                    batched=not args.per_scenario, backend=args.backend,
-                   jobs=args.jobs, chunk=args.chunk)
+                   jobs=args.jobs, chunk=args.chunk, seed=args.seed)
     print(f"evaluated in {result.elapsed_s:.2f}s "
           f"({result.scenarios_per_sec:,.0f}/s; "
           f"{result.n_analytical} analytical, "

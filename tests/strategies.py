@@ -35,6 +35,12 @@ GRID_POLICIES = ("naive", "cntk", "mxnet", "tensorflow", "caffe-mpi",
 GRID_COLLECTIVES = ("ring", "tree", "hierarchical")
 GRID_INTERCONNECTS = (None, "ib-100g", "10gbe@bw2@lat0.25",
                       "nvlink@bw0.5@lat4")
+GRID_HET_PROFILES = (None, "het:1x0.5+3x1.0", "het:2x1.0@bw0.5",
+                     "het:1x0.7@lat2.0+1x1.3", "het:1x1.0")
+#: Straggler specs keep draw counts small — property tests run many
+#: examples, and the MC cost is (unique points) x draws.
+GRID_STRAGGLERS = (None, "lognormal:0.25x32", "exp:0.5x16",
+                   "lognormal:0x8")
 
 
 @st.composite
@@ -89,16 +95,56 @@ def _axis(draw, choices, max_size):
 
 
 @st.composite
-def scenario_grids(draw, max_per_axis: int = 2):
+def worker_rates(draw, max_workers: int = 8):
+    """A per-worker relative-speed vector (each in ``(0, 2]``, at least
+    one worker) — raw material for per-worker oracle properties."""
+    n = draw(st.integers(1, max_workers))
+    return np.array([draw(st.floats(0.1, 2.0)) for _ in range(n)])
+
+
+@st.composite
+def het_profiles(draw, max_slots: int = 3):
+    """A random ``het:`` profile string: 1–3 slots with random counts,
+    relative speeds, and optional per-slot bandwidth/latency skew."""
+    slots = []
+    for _ in range(draw(st.integers(1, max_slots))):
+        s = f"{draw(st.integers(1, 4))}x{draw(st.floats(0.25, 2.0)):g}"
+        if draw(st.booleans()):
+            s += f"@bw{draw(st.floats(0.25, 2.0)):g}"
+        if draw(st.booleans()):
+            s += f"@lat{draw(st.floats(0.5, 4.0)):g}"
+        slots.append(s)
+    return "het:" + "+".join(slots)
+
+
+@st.composite
+def straggler_specs(draw, max_draws: int = 32):
+    """A random parsed-valid straggler spec string; scale 0 (the
+    deterministic degenerate) is drawn deliberately often."""
+    dist = draw(st.sampled_from(("lognormal", "exp")))
+    scale = draw(st.sampled_from((0.0, 0.1, 0.25, 0.5)))
+    return f"{dist}:{scale:g}x{draw(st.integers(4, max_draws))}"
+
+
+@st.composite
+def scenario_grids(draw, max_per_axis: int = 2, with_het: bool = False):
     """Random batched-eligible :class:`~repro.core.scenarios.ScenarioGrid`
     spanning every provider, policy family, collective and interconnect
-    preset — the NumPy ≡ JAX differential property's input space."""
+    preset — the NumPy ≡ JAX differential property's input space.
+    ``with_het=True`` adds the heterogeneity axes (het profiles and
+    small-draw straggler specs)."""
     from repro.core.scenarios import ScenarioGrid
 
+    het_axes = {}
+    if with_het:
+        het_axes = {
+            "het_profiles": _axis(draw, GRID_HET_PROFILES, max_per_axis),
+            "stragglers": _axis(draw, GRID_STRAGGLERS, max_per_axis)}
     return ScenarioGrid(
         workloads=_axis(draw, GRID_WORKLOADS, max_per_axis),
         clusters=_axis(draw, GRID_CLUSTERS, max_per_axis),
         worker_counts=_axis(draw, GRID_WORKERS, max_per_axis),
         policies=_axis(draw, GRID_POLICIES, max_per_axis),
         collectives=_axis(draw, GRID_COLLECTIVES, max_per_axis),
-        interconnects=_axis(draw, GRID_INTERCONNECTS, max_per_axis))
+        interconnects=_axis(draw, GRID_INTERCONNECTS, max_per_axis),
+        **het_axes)

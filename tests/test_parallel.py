@@ -32,7 +32,7 @@ from repro.core.sweep import (DEFAULT_CHUNK, SweepResult, evaluate_scenario,
                               iter_tables, stream, sweep)
 
 NUMERIC = ("iteration_time_s", "samples_per_sec", "speedup",
-           "t_comm_s", "t_comp_s")
+           "t_comm_s", "t_comp_s", "t_mean_s", "t_p95_s", "t_p99_s")
 LABELS = tuple(k for k in COLUMNS if k not in NUMERIC)
 
 
