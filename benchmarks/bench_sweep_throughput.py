@@ -40,10 +40,20 @@ gates CI on het-grid batched throughput >= R scenarios/s (numpy, MC
 included) and backend agreement <= 1e-6 — the trajectory lands in
 ``BENCH_sweep.json`` under ``het_straggler_grid``.
 
+The failure-model metrics (ISSUE 9): a faults + backup-workers grid
+crosses K-of-N partial-sync thresholds with ``fail:`` crash specs on
+top of compute skew, so the K-th-order-statistic kernels and the
+fault Monte Carlo run end to end on both backends.
+``--assert-faults-floor R`` gates CI on that grid's batched
+throughput >= R scenarios/s (numpy, crash draws included) and
+backend agreement <= 1e-6 — the trajectory lands in
+``BENCH_sweep.json`` under ``failure_grid``.
+
 ``--smoke`` does one timed repeat per grid and shrinks the
-bucketed/priority and het/straggler grids — the CI regression gate
-(pair with ``--assert-timeline-floor`` / ``--assert-jax-floor`` /
-``--assert-e2e-floor`` / ``--assert-het-floor``).
+bucketed/priority, het/straggler and failure grids — the CI
+regression gate (pair with ``--assert-timeline-floor`` /
+``--assert-jax-floor`` / ``--assert-e2e-floor`` /
+``--assert-het-floor`` / ``--assert-faults-floor``).
 """
 from __future__ import annotations
 
@@ -96,6 +106,25 @@ def het_straggler_grid(smoke: bool = False) -> ScenarioGrid:
     if smoke:
         return ScenarioGrid(worker_counts=(4,), collectives=("ring",), **kw)
     return ScenarioGrid(worker_counts=(4, 16),
+                        collectives=("ring", "hierarchical"), **kw)
+
+
+def failure_grid(smoke: bool = False) -> ScenarioGrid:
+    """The K-of-N + fault-injection grid: paper CNNs on both paper
+    clusters with compute skew, crossed with backup-worker sync
+    thresholds (full sync, N-2 and N/2 backups) and crash specs under
+    a 100-draw fault Monte Carlo.  This is the path
+    ``--assert-faults-floor`` gates: K-th-order-statistic kernels +
+    crash-penalty tail statistics end to end."""
+    kw = dict(workloads=("alexnet", "googlenet", "resnet50"),
+              clusters=("k80-pcie-10gbe", "v100-nvlink-ib"),
+              policies=("tensorflow", "bucketed-4mb", "priority"),
+              het_profiles=(None, "het:1x0.5+3x1.0"),
+              sync_ks=(None, 2, 6),
+              faults=(None, "fail:0.01@restart2.5x100"))
+    if smoke:
+        return ScenarioGrid(worker_counts=(8,), collectives=("ring",), **kw)
+    return ScenarioGrid(worker_counts=(8, 16),
                         collectives=("ring", "hierarchical"), **kw)
 
 
@@ -172,7 +201,8 @@ def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
     grids = {"default_grid": default_grid(), "mixed_grid": mixed_grid(),
              "frontier_grid": frontier_grid(),
              "bucketed_priority_grid": bucketed_priority_grid(smoke),
-             "het_straggler_grid": het_straggler_grid(smoke)}
+             "het_straggler_grid": het_straggler_grid(smoke),
+             "failure_grid": failure_grid(smoke)}
     report: dict = {"smoke": smoke, "repeats": repeats}
     for name, grid in grids.items():
         r: dict = {"n_scenarios": len(grid)}
@@ -223,10 +253,11 @@ def run(smoke: bool = False, json_path: str = "BENCH_sweep.json") -> dict:
         # engine exists to close.  The bucketed/priority grid below is
         # the dedicated simulated-path trajectory; its slow side is
         # timed once (plenty of precision for a >= 20x gate).
-        # ... and the het/straggler grid's slow side would re-simulate
-        # or re-evaluate every Monte Carlo draw per scenario in Python;
-        # its gate is throughput + agreement, not a speedup ratio.
-        if name not in ("frontier_grid", "het_straggler_grid"):
+        # ... and the het/straggler and failure grids' slow sides would
+        # re-evaluate every Monte Carlo draw per scenario in Python;
+        # their gates are throughput + agreement, not a speedup ratio.
+        if name not in ("frontier_grid", "het_straggler_grid",
+                        "failure_grid"):
             slow_repeats = 1 if name == "bucketed_priority_grid" else repeats
             r["per_scenario"] = _time_sweep(grid, slow_repeats, batched=False)
             r["speedup"] = (r["per_scenario"]["elapsed_s"]
@@ -279,6 +310,13 @@ def main(argv=None) -> int:
                          "Monte Carlo tails included) is >= R scenarios/s "
                          "AND the backends agree to <= 1e-6 on that grid "
                          "(the heterogeneity-engine CI gate)")
+    ap.add_argument("--assert-faults-floor", type=float, default=None,
+                    metavar="R",
+                    help="exit non-zero unless the K-of-N/fault grid's "
+                         "end-to-end batched sweep() throughput (numpy, "
+                         "crash Monte Carlo included) is >= R scenarios/s "
+                         "AND the backends agree to <= 1e-6 on that grid "
+                         "(the failure-model CI gate)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     report = run(smoke=args.smoke, json_path=args.json)
@@ -337,6 +375,23 @@ def main(argv=None) -> int:
         print(f"# het/straggler gate: {got:,.0f}/s >= "
               f"{args.assert_het_floor:,.0f}/s, max rel diff "
               f"{hg['agreement_max_rel']:.1e}")
+    if args.assert_faults_floor is not None:
+        fg = report["failure_grid"]
+        got = fg["batched"]["scenarios_per_sec"]
+        if got < args.assert_faults_floor:
+            print(f"error: failure-grid batched throughput "
+                  f"{got:,.0f}/s below the "
+                  f"{args.assert_faults_floor:,.0f}/s floor",
+                  file=sys.stderr)
+            return 1
+        if fg["agreement_max_rel"] > 1e-6:
+            print(f"error: failure-grid jax/numpy disagreement "
+                  f"{fg['agreement_max_rel']:.2e} exceeds the 1e-6 gate",
+                  file=sys.stderr)
+            return 1
+        print(f"# failure-model gate: {got:,.0f}/s >= "
+              f"{args.assert_faults_floor:,.0f}/s, max rel diff "
+              f"{fg['agreement_max_rel']:.1e}")
     return 0
 
 

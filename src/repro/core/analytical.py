@@ -134,6 +134,84 @@ def worker_bottleneck(inv_speed, bw_mult, lat_mult, axis: int = -1):
             xp.max(lat_mult, axis=axis))
 
 
+def effective_sync_k(sync_k, n_workers):
+    """The K actually waited for: ``sync_k`` clamped to ``[1, n]``,
+    with the full-sync sentinels (``None`` / ``0``) mapping to ``n``.
+    Clamping (rather than rejecting ``K > n``) keeps grid-axis
+    validation separable from the worker-count axis — the same design
+    rule as the het profiles' proportional slot stretching.  Accepts
+    scalars or arrays (vectorized over rows)."""
+    from repro.core.xputil import array_namespace
+
+    if sync_k is None:
+        return n_workers
+    xp = array_namespace(sync_k, n_workers)
+    k = xp.asarray(sync_k)
+    n = xp.asarray(n_workers)
+    return xp.where(k <= 0, n, xp.clip(k, 1, n))
+
+
+def kth_order_statistic(values, n, k):
+    """The ``k``-th smallest of the ``n`` live entries in each
+    zero-padded ``(..., Wmax)`` row of ``values`` (live entries are
+    strictly positive, pads are ``0`` — the
+    :func:`repro.core.het.worker_table_rows` convention).
+
+    ``k = n`` returns exactly the row max (the slowest-worker
+    reduction, bit-identical — a sort never rounds); ``k = 1`` the live
+    min.  Sorting descending puts the pads *last*, so the ``k``-th
+    smallest live value sits at index ``n - k`` regardless of padding.
+    Dtype-polymorphic: the jax branch sorts with ``jax.lax.top_k``
+    (k = Wmax, i.e. a full descending sort, jit/vmap-compatible with a
+    static width), the NumPy branch with ``np.sort``.  ``n`` and ``k``
+    broadcast over the leading axes; ``k`` must already be clamped to
+    ``[1, n]`` (:func:`effective_sync_k`)."""
+    from repro.core.xputil import array_namespace
+
+    xp = array_namespace(values, n, k)
+    values = xp.asarray(values, dtype=xp.float64)
+    wmax = values.shape[-1]
+    n = xp.asarray(n)
+    k = xp.asarray(k)
+    if xp.__name__.startswith("jax"):
+        import jax
+
+        desc, _ = jax.lax.top_k(values, wmax)
+    else:
+        desc = -xp.sort(-values, axis=-1)
+    idx = xp.clip(n - k, 0, wmax - 1).astype(xp.int64)
+    idx = xp.broadcast_to(idx, values.shape[:-1])
+    return xp.take_along_axis(desc, idx[..., None], axis=-1)[..., 0]
+
+
+def worker_bottleneck_k(inv_speed, bw_mult, lat_mult, n, sync_k, axis: int = -1):
+    """K-of-N generalization of :func:`worker_bottleneck`: the
+    synchronous update fires once the ``K``-th fastest gradient is in,
+    so the compute multiplier is the ``K``-th *order statistic* of the
+    per-worker ``inv_speed`` (not the max), while the link multipliers
+    stay the full min/max — all ``N`` workers keep their place in the
+    collective and receive the broadcast update; the threshold only
+    stops the barrier from waiting for gradients beyond the ``K``-th.
+
+    Exactness argument unchanged from :func:`worker_bottleneck`:
+    per-worker multipliers are constant across layers, so the worker
+    ranked ``K``-th is ranked ``K``-th at every layer, and the K-of-N
+    DAG steady state equals the homogeneous closed form at
+    ``tmul = kth_smallest_w(inv_speed)`` (property-tested ≤1e-6 against
+    the event-driven simulator).  ``sync_k`` may be a scalar or a
+    per-row array; full-sync sentinels (``None``/``0``) and ``K >= n``
+    reproduce :func:`worker_bottleneck` bit-identically."""
+    from repro.core.xputil import array_namespace
+
+    if axis != -1:
+        raise ValueError("worker_bottleneck_k reduces the last axis only")
+    xp = array_namespace(inv_speed, bw_mult, lat_mult)
+    keff = effective_sync_k(sync_k, n)
+    return (kth_order_statistic(inv_speed, n, keff),
+            xp.min(bw_mult, axis=-1),
+            xp.max(lat_mult, axis=-1))
+
+
 def eq5_wfbp(costs: IterationCosts) -> float:
     """WFBP: max(t_io + t_h2d, t_f + t_b + t_c^no + t_u)."""
     tc_no = non_overlapped_comm(costs.t_b, costs.t_c)

@@ -63,7 +63,8 @@ from repro.core.hardware import (CLUSTERS, apply_interconnect_preset,
 from repro.core.policies import Policy, get_policy
 from repro.core.resulttable import METHOD_LABELS, rows_from_table
 from repro.core.scenarios import (Scenario, ScenarioGrid,
-                                  normalize_interconnect)
+                                  normalize_interconnect,
+                                  normalize_sync_k)
 from repro.core.workloads import WorkloadTable, resolve_workload
 
 _COLLECTIVE_CODE = {"ring": 0, "tree": 1, "hierarchical": 2}
@@ -484,13 +485,22 @@ def _kernel_cols(wax: _WorkloadAxis, cax: _ClusterAxis,
 # ----------------------------------------------------------------------
 def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
                    kc: dict[str, np.ndarray],
-                   kidx: np.ndarray | None) -> dict[str, np.ndarray]:
+                   kidx: np.ndarray | None,
+                   chain_extra: np.ndarray | None = None
+                   ) -> dict[str, np.ndarray]:
     """Gather each scenario's kernel point (``kidx=None`` means the
     identity map) and select its policy's steady-state form — Eqs. (2),
     (3), (5) and the late-H2D variants for closed-form policies, the
     bucket-timeline residual for schedule-dependent ones — plus the
     zero-comm weak-scaling baseline with the *same* policy (what
-    ``_fast_eval`` / ``_sim_eval`` compute for the speedup column)."""
+    ``_fast_eval`` / ``_sim_eval`` compute for the speedup column).
+
+    ``chain_extra`` is an additive extension of the GPU/update chain
+    (the fault model's serialized checkpoint restores, which gate the
+    update broadcast).  It sits *inside* the pipeline max, so an
+    I/O-bound pipeline absorbs part of the penalty — exactly what the
+    event-driven DAG produces.  The zero-comm baseline ``t1`` is
+    unaffected (it is the hypothetical fault-free single-GPU time)."""
     def g(a: np.ndarray) -> np.ndarray:
         return a if kidx is None else a[kidx]
 
@@ -513,6 +523,8 @@ def _policy_select(pax: _PolicyAxis, polidx: np.ndarray,
     for i in range(len(pax.tl_specs)):
         comm_term = np.where(spec_of == i, g(kc[f"tl{i}"]), comm_term)
     gpu_chain = comp + comm_term + t_u
+    if chain_extra is not None:
+        gpu_chain = gpu_chain + chain_extra
     eq2 = io_h2d + gpu_chain                        # no I/O overlap
     eq_early = np.maximum(io_h2d, gpu_chain)        # Eq. (3)/(5)
     eq_late = np.maximum(io_h2d, t_h2d + gpu_chain)  # late-H2D variants
@@ -562,6 +574,8 @@ def select_to_columns(cols: dict[str, np.ndarray],
         "interconnect": labels["interconnect"],
         "het": labels["het"],
         "straggler": labels["straggler"],
+        "sync_k": labels["sync_k"],
+        "faults": labels["faults"],
         "batch_per_gpu": np.asarray(cols["batch"]).astype(np.int64),
         "iteration_time_s": t_iter,
         "samples_per_sec": np.asarray(cols["samples_per_sec"]),
@@ -576,7 +590,8 @@ def select_to_columns(cols: dict[str, np.ndarray],
 
 
 # ----------------------------------------------------------------------
-# Straggler Monte Carlo: per-draw kernel evaluation, reduced to tails.
+# Failure-model Monte Carlo: per-draw kernel evaluation, reduced to
+# tails (straggler jitter, K-of-N sync, fault injection).
 # ----------------------------------------------------------------------
 def _apply_mc_tails(wax: _WorkloadAxis, cax: _ClusterAxis, pax: _PolicyAxis,
                     widx: np.ndarray, cidx: np.ndarray, coll: np.ndarray,
@@ -585,7 +600,10 @@ def _apply_mc_tails(wax: _WorkloadAxis, cax: _ClusterAxis, pax: _PolicyAxis,
                     bwmul: np.ndarray | None, latmul: np.ndarray | None,
                     st_specs: Sequence, stidx: np.ndarray,
                     cols: dict[str, np.ndarray], seed: int,
-                    active: np.ndarray | None = None) -> None:
+                    active: np.ndarray | None = None,
+                    synck: np.ndarray | None = None,
+                    ft_specs: Sequence = (None,),
+                    fidx: np.ndarray | None = None) -> None:
     """Attach ``t_mean_s``/``t_p95_s``/``t_p99_s`` to a
     :func:`_policy_select` output in place.
 
@@ -594,25 +612,40 @@ def _apply_mc_tails(wax: _WorkloadAxis, cax: _ClusterAxis, pax: _PolicyAxis,
     ``hks`` its padded worker-table row in ``wtab``
     (:func:`repro.core.het.worker_table_rows`), ``stidx`` its spec in
     ``st_specs`` (parsed :class:`repro.core.het.StragglerSpec` or
-    ``None``), and ``bwmul``/``latmul`` its deterministic slowest-link
-    multipliers.  Deterministic rows (no spec, or zero jitter) keep the
-    point-mass default — tails equal to ``iteration_time_s``, bit-exact.
+    ``None``), ``bwmul``/``latmul`` its deterministic slowest-link
+    multipliers, ``synck`` its normalized sync threshold (``0`` = full
+    sync) and ``fidx`` its spec in ``ft_specs`` (parsed
+    :class:`repro.core.het.FaultSpec` or ``None``).  Deterministic rows
+    (no stochastic spec) keep the point-mass default — tails equal to
+    ``iteration_time_s``, bit-exact.
 
     Stochastic rows take a Monte Carlo pass: per draw ``d`` the
-    slowest-worker theorem applies with multiplier ``max_w(J[d, w] /
-    speed_w)`` (jitter folded with the het profile's per-worker rates
-    *before* the max — the slow worker and the unlucky worker need not
-    coincide), so each draw is one deterministic kernel evaluation at
-    that ``tmul``.  Rows sharing ``(kernel point, policy, worker
-    table)`` are deduplicated first, per-point draw multipliers are
-    built once per unique worker-table row (the ``(D, W)`` matrices
-    come from :meth:`~repro.core.het.StragglerSpec.draw_matrix`, keyed
-    by ``(spec, n, seed)`` so every backend and shard consumes the
-    identical sample), and the expanded ``point x draw`` set streams
-    through the ordinary two-tier kernel in blocks of roughly
-    :data:`KERNEL_CHUNK` rows.  The per-draw iteration times reduce to
-    mean/p95/p99 with ``np.quantile`` on the host — shared by the jax
-    backend, which guarantees the draw-for-draw <= 1e-6 agreement.
+    bottleneck theorem applies with multiplier ``kth_w(J[d, w] /
+    speed_w)`` — the K-th order statistic of the jitter folded with the
+    het profile's per-worker rates (``K = n`` under full sync recovers
+    the max; the slow worker and the unlucky worker need not coincide,
+    and under K-of-N each draw elects its *own* K-th worker) — so each
+    draw is one deterministic kernel evaluation at that ``tmul``.  A
+    fault spec contributes a per-draw penalty ``restart * crashes[d]``
+    (crash counts from
+    :meth:`~repro.core.het.FaultSpec.crash_matrix`) injected into the
+    GPU/update chain via ``_policy_select(chain_extra=...)``: restores
+    serialize on the shared checkpoint store and gate the update
+    broadcast, so they extend the chain *inside* the pipeline max — an
+    I/O-bound pipeline absorbs part of the penalty, exactly as the
+    event-driven DAG does.  Rows sharing
+    ``(kernel point, policy, worker table, sync_k)`` are deduplicated
+    first, per-point draw multipliers are built once per unique
+    ``(worker-table row, sync_k)`` pair (the ``(D, W)`` matrices come
+    from :meth:`~repro.core.het.StragglerSpec.draw_matrix`, keyed by
+    ``(spec, n, seed)`` so every backend and shard consumes the
+    identical sample; the draw count is the straggler spec's when one
+    is present, else the fault spec's), and the expanded ``point x
+    draw`` set streams through the ordinary two-tier kernel in blocks
+    of roughly :data:`KERNEL_CHUNK` rows.  The per-draw iteration times
+    reduce to mean/p95/p99 with ``np.quantile`` on the host — shared by
+    the jax backend, which guarantees the draw-for-draw <= 1e-6
+    agreement.
 
     ``active=False`` rows (simulator-fallback policies) are skipped:
     their whole row, tails included, is overwritten by the per-draw
@@ -622,51 +655,78 @@ def _apply_mc_tails(wax: _WorkloadAxis, cax: _ClusterAxis, pax: _PolicyAxis,
     cols["t_mean_s"] = t_iter.copy()
     cols["t_p95_s"] = t_iter.copy()
     cols["t_p99_s"] = t_iter.copy()
+    if synck is None:
+        synck = np.zeros(len(t_iter), dtype=np.int64)
+    if fidx is None:
+        fidx = np.zeros(len(t_iter), dtype=np.int64)
     for si, st in enumerate(st_specs):
-        if st is None or st.is_deterministic:
-            continue
-        sel = stidx == si
-        if active is not None:
-            sel = sel & active
-        rows = np.nonzero(sel)[0]
-        if not len(rows):
-            continue
-        # one MC evaluation per unique (kernel point, policy, worker
-        # table) triple — rows sharing all three see identical draws
-        key = np.stack([widx[rows], cidx[rows], coll[rows], n[rows],
-                        batch[rows], polidx[rows], hks[rows]], axis=1)
-        _, rep, uinv = np.unique(key, axis=0, return_index=True,
-                                 return_inverse=True)
-        urows = rows[rep]
-        U, D = len(urows), st.draws
-        tmuls = np.empty((U, D))
-        for h in np.unique(hks[urows]):
-            pts = np.nonzero(hks[urows] == h)[0]
-            nw = int(wtab["n"][h])
-            J = st.draw_matrix(nw, seed)                   # (D, nw)
-            tmuls[pts] = (J * wtab["inv_speed"][h, :nw]).max(axis=1)
-        mean_u = np.empty(U)
-        p95_u = np.empty(U)
-        p99_u = np.empty(U)
-        blk = max(1, KERNEL_CHUNK // D)
-        for lo in range(0, U, blk):
-            pt = urows[lo:lo + blk]
-            m = len(pt)
-            rp = np.repeat(pt, D)
-            kc = _kernel_cols(
-                wax, cax, widx[rp], cidx[rp], coll[rp], n[rp], batch[rp],
-                tl_specs=pax.tl_specs,
-                tmul=tmuls[lo:lo + m].ravel(),
-                bwmul=None if bwmul is None else bwmul[rp],
-                latmul=None if latmul is None else latmul[rp])
-            ti = _policy_select(pax, polidx[rp], kc, kidx=None)[
-                "iteration_time_s"].reshape(m, D)
-            mean_u[lo:lo + m] = ti.mean(axis=1)
-            p95_u[lo:lo + m] = np.quantile(ti, 0.95, axis=1)
-            p99_u[lo:lo + m] = np.quantile(ti, 0.99, axis=1)
-        cols["t_mean_s"][rows] = mean_u[uinv]
-        cols["t_p95_s"][rows] = p95_u[uinv]
-        cols["t_p99_s"][rows] = p99_u[uinv]
+        st_live = st is not None and not st.is_deterministic
+        for fi, ft in enumerate(ft_specs):
+            ft_live = ft is not None and not ft.is_deterministic
+            if not (st_live or ft_live):
+                continue
+            sel = (stidx == si) & (fidx == fi)
+            if active is not None:
+                sel = sel & active
+            rows = np.nonzero(sel)[0]
+            if not len(rows):
+                continue
+            # one MC evaluation per unique (kernel point, policy,
+            # worker table, sync_k) tuple — rows sharing all four see
+            # identical draws
+            key = np.stack([widx[rows], cidx[rows], coll[rows], n[rows],
+                            batch[rows], polidx[rows], hks[rows],
+                            synck[rows]], axis=1)
+            _, rep, uinv = np.unique(key, axis=0, return_index=True,
+                                     return_inverse=True)
+            urows = rows[rep]
+            U = len(urows)
+            D = st.draws if st_live else ft.draws
+            tmuls = np.empty((U, D))
+            pens = np.zeros((U, D)) if ft_live else None
+            hkpairs = np.stack([hks[urows], synck[urows]], axis=1)
+            for h, k in np.unique(hkpairs, axis=0):
+                pts = np.nonzero((hkpairs[:, 0] == h)
+                                 & (hkpairs[:, 1] == k))[0]
+                nw = int(wtab["n"][h])
+                J = (st.draw_matrix(nw, seed) if st_live
+                     else np.ones((D, nw)))
+                times = J * wtab["inv_speed"][h, :nw]      # (D, nw)
+                keff = nw if k == 0 else min(max(int(k), 1), nw)
+                if keff >= nw:
+                    tmuls[pts] = times.max(axis=1)
+                else:
+                    tmuls[pts] = np.partition(
+                        times, keff - 1, axis=1)[:, keff - 1]
+                if ft_live:
+                    crashes = ft.crash_matrix(
+                        nw, seed, draws=D).sum(axis=1)     # (D,)
+                    pens[pts] = ft.restart * crashes
+            mean_u = np.empty(U)
+            p95_u = np.empty(U)
+            p99_u = np.empty(U)
+            blk = max(1, KERNEL_CHUNK // D)
+            for lo in range(0, U, blk):
+                pt = urows[lo:lo + blk]
+                m = len(pt)
+                rp = np.repeat(pt, D)
+                kc = _kernel_cols(
+                    wax, cax, widx[rp], cidx[rp], coll[rp], n[rp],
+                    batch[rp], tl_specs=pax.tl_specs,
+                    tmul=tmuls[lo:lo + m].ravel(),
+                    bwmul=None if bwmul is None else bwmul[rp],
+                    latmul=None if latmul is None else latmul[rp])
+                ti = _policy_select(
+                    pax, polidx[rp], kc, kidx=None,
+                    chain_extra=None if pens is None
+                    else pens[lo:lo + m].ravel())[
+                    "iteration_time_s"].reshape(m, D)
+                mean_u[lo:lo + m] = ti.mean(axis=1)
+                p95_u[lo:lo + m] = np.quantile(ti, 0.95, axis=1)
+                p99_u[lo:lo + m] = np.quantile(ti, 0.99, axis=1)
+            cols["t_mean_s"][rows] = mean_u[uinv]
+            cols["t_p95_s"][rows] = p95_u[uinv]
+            cols["t_p99_s"][rows] = p99_u[uinv]
 
 
 # ----------------------------------------------------------------------
@@ -706,24 +766,30 @@ class GridEvaluator:
         nK, nP = len(grid.worker_counts), len(grid.policies)
         nA, nI = len(grid.collectives), len(grid.interconnects)
         nH, nT = len(grid.het_profiles), len(grid.stragglers)
-        self._sizes = (nW, nC, nK, nP, nA, nI, nH, nT)
-        self.n_scenarios = nW * nC * nK * nP * nA * nI * nH * nT
+        nQ, nF = len(grid.sync_ks), len(grid.faults)
+        self._sizes = (nW, nC, nK, nP, nA, nI, nH, nT, nQ, nF)
+        self.n_scenarios = (nW * nC * nK * nP * nA * nI * nH * nT
+                            * nQ * nF)
 
         self._wax = _workload_axis(grid.workloads)
         pairs = [(c, ic) for c in grid.clusters for ic in grid.interconnects]
         self._cax = _cluster_axis(pairs)
         self._pax = _policy_axis(grid.policies)
 
-        # Kernel grid: the scenario product with the policy *and*
-        # straggler axes dropped — order (workloads, clusters, workers,
-        # collectives, interconnects, het_profiles), rightmost fastest.
-        # The straggler axis never changes a deterministic kernel point
-        # (jitter only enters the Monte Carlo pass); the het axis does,
-        # through the slowest-worker bottleneck multipliers.  O(K) int
-        # vectors; every per-*scenario* quantity is derived per chunk
-        # instead (see _scenario_codes), so preparation stays
-        # O(axes + K) however large the scenario product is.
-        kw, kc, kk, ka, ki, kh = _axis_codes((nW, nC, nK, nA, nI, nH))
+        # Kernel grid: the scenario product with the policy, straggler
+        # and fault axes dropped — order (workloads, clusters, workers,
+        # collectives, interconnects, het_profiles, sync_ks), rightmost
+        # fastest.  The straggler and fault axes never change a
+        # deterministic kernel point (jitter and crash penalties only
+        # enter the Monte Carlo pass); the het axis does, through the
+        # bottleneck multipliers, and the sync_k axis does too — it
+        # picks *which* order statistic of the per-worker rates gates
+        # the iteration.  O(K) int vectors; every per-*scenario*
+        # quantity is derived per chunk instead (see _scenario_codes),
+        # so preparation stays O(axes + K) however large the scenario
+        # product is.
+        kw, kc, kk, ka, ki, kh, kq = _axis_codes(
+            (nW, nC, nK, nA, nI, nH, nQ))
         self._kwidx = kw
         self._kcidx = kc * nI + ki              # (cluster, interconnect) pair
         self._kcoll = np.array(
@@ -734,31 +800,48 @@ class GridEvaluator:
         self._kbatch = np.full(len(kw), grid.batch_per_gpu or 0,
                                dtype=np.int64)
         self._khk = kh * nK + kk                # (het profile, n) pair row
+        sk_values = np.array(
+            [normalize_sync_k(k) for k in grid.sync_ks], dtype=np.int64)
+        self._ksynck = sk_values[kq]            # 0 = full sync
         _check_batch_locked(self._wax, kw, self._kbatch)
 
         # Heterogeneity: one padded per-worker table row per (profile,
-        # n_workers) pair, reduced once to the slowest-worker bottleneck
-        # multipliers and gathered per kernel point.  All-homogeneous
-        # grids keep the multipliers as None so the kernel's fast path
-        # stays literally untouched (not merely bit-identical).
+        # n_workers) pair, reduced once to the bottleneck multipliers
+        # and gathered per kernel point.  All-homogeneous grids keep
+        # the multipliers as None so the kernel's fast path stays
+        # literally untouched (not merely bit-identical) — exact even
+        # under K-of-N sync, where every order statistic of an all-ones
+        # rate vector is 1.0; a partial-sync threshold only changes the
+        # *deterministic* kernel point when workers actually differ.
         profiles = [het_mod.parse_het_profile(h) for h in grid.het_profiles]
         self._wtab = het_mod.worker_table_rows(
             [(prof, int(n)) for prof in profiles
              for n in grid.worker_counts])
         self._any_het = any(p is not None for p in profiles)
+        self._any_synck = bool((sk_values != 0).any())
         if self._any_het:
             tm, bm, lm = analytical.worker_bottleneck(
                 self._wtab["inv_speed"], self._wtab["bw_mult"],
                 self._wtab["lat_mult"])
-            self._ktmul = tm[self._khk]
             self._kbwmul = bm[self._khk]
             self._klatmul = lm[self._khk]
+            if self._any_synck:
+                nrow = self._wtab["n"][self._khk]
+                self._ktmul = analytical.kth_order_statistic(
+                    self._wtab["inv_speed"][self._khk], nrow,
+                    analytical.effective_sync_k(self._ksynck, nrow))
+            else:
+                self._ktmul = tm[self._khk]
         else:
             self._ktmul = self._kbwmul = self._klatmul = None
         self._st_specs = [het_mod.parse_straggler(s)
                           for s in grid.stragglers]
-        self._any_mc = any(s is not None and not s.is_deterministic
-                           for s in self._st_specs)
+        self._ft_specs = [het_mod.parse_fault(f) for f in grid.faults]
+        self._any_mc = (
+            any(s is not None and not s.is_deterministic
+                for s in self._st_specs)
+            or any(f is not None and not f.is_deterministic
+                   for f in self._ft_specs))
 
         per_policy = self.n_scenarios // nP if nP else 0
         self.n_fast = per_policy * int(self._pax.has_fast.sum())
@@ -783,6 +866,10 @@ class GridEvaluator:
         self._st_values = np.array(
             [het_mod.normalize_straggler(s) for s in grid.stragglers],
             dtype=object)
+        self._sk_values = sk_values
+        self._fl_values = np.array(
+            [het_mod.normalize_fault(f) for f in grid.faults],
+            dtype=object)
 
     def __len__(self) -> int:
         return self.n_scenarios
@@ -792,8 +879,12 @@ class GridEvaluator:
         scenario indices ``[lo, hi)``, derived arithmetically from the
         expand() order (rightmost axis fastest) — O(chunk) work and
         memory, nothing per-scenario is ever stored."""
-        nW, nC, nK, nP, nA, nI, nH, nT = self._sizes
+        nW, nC, nK, nP, nA, nI, nH, nT, nQ, nF = self._sizes
         r = np.arange(lo, hi, dtype=np.int64)
+        fli = r % nF
+        r //= nF
+        ski = r % nQ
+        r //= nQ
         sti = r % nT
         r //= nT
         hp = r % nH
@@ -808,9 +899,10 @@ class GridEvaluator:
         r //= nK
         ci = r % nC
         wi = r // nC
-        kidx = ((((wi * nC + ci) * nK + ki) * nA + ai) * nI + ii) * nH + hp
+        kidx = ((((((wi * nC + ci) * nK + ki) * nA + ai) * nI + ii) * nH
+                 + hp) * nQ + ski)
         return {"wi": wi, "ci": ci, "ki": ki, "pi": pi, "ai": ai, "ii": ii,
-                "hi": hp, "sti": sti, "kidx": kidx,
+                "hi": hp, "sti": sti, "ski": ski, "fli": fli, "kidx": kidx,
                 "batched": self._pax.has_fast[pi] | self._pax.has_tl[pi]}
 
     def _label_columns(self, codes: dict[str, np.ndarray]) -> dict:
@@ -823,6 +915,8 @@ class GridEvaluator:
             "interconnect": self._ic_values[codes["ii"]],
             "het": self._ht_values[codes["hi"]],
             "straggler": self._st_values[codes["sti"]],
+            "sync_k": self._sk_values[codes["ski"]],
+            "faults": self._fl_values[codes["fli"]],
         }
 
     def _apply_tails(self, codes: dict[str, np.ndarray],
@@ -846,7 +940,8 @@ class GridEvaluator:
             None if self._kbwmul is None else self._kbwmul[k],
             None if self._klatmul is None else self._klatmul[k],
             self._st_specs, codes["sti"], cols, seed,
-            active=codes["batched"])
+            active=codes["batched"], synck=self._ksynck[k],
+            ft_specs=self._ft_specs, fidx=codes["fli"])
 
     def run(self, seed: int = 0) -> "GridRun":
         """Evaluate the kernel grid (fresh numbers every call) and
@@ -1026,18 +1121,25 @@ def scenario_axes(scenarios: Sequence[Scenario]):
 
 def scenario_het_axes(scenarios: Sequence[Scenario]):
     """One Python pass over a scenario list: the heterogeneity /
-    straggler structure the kernel and the Monte Carlo pass need.
-    Returns ``(hks, wtab, tmul, bwmul, latmul, st_specs, stidx)`` —
-    per-scenario rows into a padded worker table over the unique
-    ``(het, n_workers)`` pairs, the reduced slowest-worker multiplier
-    vectors (``None`` when every scenario is homogeneous, keeping the
-    kernel's fast path untouched), and the unique parsed straggler
-    specs with the per-scenario index.  Shared with the jax list front
-    end so both backends agree on structure."""
+    failure-model structure the kernel and the Monte Carlo pass need.
+    Returns ``(hks, wtab, tmul, bwmul, latmul, st_specs, stidx, synck,
+    ft_specs, fidx)`` — per-scenario rows into a padded worker table
+    over the unique ``(het, n_workers)`` pairs, the reduced bottleneck
+    multiplier vectors (``None`` when every scenario is homogeneous,
+    keeping the kernel's fast path untouched; the compute multiplier is
+    the ``sync_k``-th order statistic when a partial-sync threshold is
+    present), the unique parsed straggler specs with the per-scenario
+    index, the normalized per-scenario sync thresholds (``0`` = full
+    sync) and the unique parsed fault specs with the per-scenario
+    index.  Shared with the jax list front end so both backends agree
+    on structure."""
     pair_key: dict[tuple[str, int], int] = {}
     st_key: dict[str, int] = {}
+    fl_key: dict[str, int] = {}
     hks = np.empty(len(scenarios), dtype=np.int64)
     stidx = np.empty(len(scenarios), dtype=np.int64)
+    fidx = np.empty(len(scenarios), dtype=np.int64)
+    synck = np.empty(len(scenarios), dtype=np.int64)
     any_het = False
     for i, s in enumerate(scenarios):
         hspec = het_mod.normalize_het(s.het)
@@ -1053,16 +1155,31 @@ def scenario_het_axes(scenarios: Sequence[Scenario]):
         if si is None:
             si = st_key[sk] = len(st_key)
         stidx[i] = si
+        fl = het_mod.normalize_fault(s.faults)
+        fi = fl_key.get(fl)
+        if fi is None:
+            fi = fl_key[fl] = len(fl_key)
+        fidx[i] = fi
+        synck[i] = normalize_sync_k(s.sync_k)
     wtab = het_mod.worker_table_rows(
         [(het_mod.parse_het_profile(h), n) for h, n in pair_key])
     if any_het:
         tm, bm, lm = analytical.worker_bottleneck(
             wtab["inv_speed"], wtab["bw_mult"], wtab["lat_mult"])
-        tmul, bwmul, latmul = tm[hks], bm[hks], lm[hks]
+        bwmul, latmul = bm[hks], lm[hks]
+        if bool((synck != 0).any()):
+            nrow = wtab["n"][hks]
+            tmul = analytical.kth_order_statistic(
+                wtab["inv_speed"][hks], nrow,
+                analytical.effective_sync_k(synck, nrow))
+        else:
+            tmul = tm[hks]
     else:
         tmul = bwmul = latmul = None
     st_specs = [het_mod.parse_straggler(s) for s in st_key]
-    return hks, wtab, tmul, bwmul, latmul, st_specs, stidx
+    ft_specs = [het_mod.parse_fault(f) for f in fl_key]
+    return (hks, wtab, tmul, bwmul, latmul, st_specs, stidx,
+            synck, ft_specs, fidx)
 
 
 def scenario_labels(scenarios: Sequence[Scenario]) -> dict[str, np.ndarray]:
@@ -1085,6 +1202,12 @@ def scenario_labels(scenarios: Sequence[Scenario]) -> dict[str, np.ndarray]:
         "straggler": np.array(
             [het_mod.normalize_straggler(s.straggler) for s in scenarios],
             dtype=object),
+        "sync_k": np.array(
+            [normalize_sync_k(s.sync_k) for s in scenarios],
+            dtype=np.int64),
+        "faults": np.array(
+            [het_mod.normalize_fault(s.faults) for s in scenarios],
+            dtype=object),
     }
 
 
@@ -1102,15 +1225,15 @@ def eval_scenarios_table(scenarios: Sequence[Scenario],
     """
     wax, cax, pax, widx, cidx, polidx, coll, n, batch = \
         scenario_axes(scenarios)
-    hks, wtab, tmul, bwmul, latmul, st_specs, stidx = \
-        scenario_het_axes(scenarios)
+    (hks, wtab, tmul, bwmul, latmul, st_specs, stidx,
+     synck, ft_specs, fidx) = scenario_het_axes(scenarios)
     kc = _kernel_cols(wax, cax, widx, cidx, coll, n, batch,
                       tl_specs=pax.tl_specs,
                       tmul=tmul, bwmul=bwmul, latmul=latmul)
     cols = _policy_select(pax, polidx, kc, kidx=None)
     _apply_mc_tails(wax, cax, pax, widx, cidx, coll, n, batch, polidx,
                     hks, wtab, bwmul, latmul, st_specs, stidx,
-                    cols, seed)
+                    cols, seed, synck=synck, ft_specs=ft_specs, fidx=fidx)
     return select_to_columns(cols, scenario_labels(scenarios))
 
 

@@ -446,7 +446,9 @@ class JaxGridEvaluator:
                 ev._khk[k], ev._wtab,
                 None if ev._kbwmul is None else ev._kbwmul[k],
                 None if ev._klatmul is None else ev._klatmul[k],
-                ev._st_specs, codes["sti"], cols, seed)
+                ev._st_specs, codes["sti"], cols, seed,
+                synck=ev._ksynck[k], ft_specs=ev._ft_specs,
+                fidx=codes["fli"])
         else:
             t_iter = cols["iteration_time_s"]
             cols["t_mean_s"] = t_iter
@@ -544,8 +546,8 @@ def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario],
         return []
     wax, cax, pax, widx, cidx, polidx, coll, n, batch = \
         batched.scenario_axes(scenarios)
-    hks, wtab, tmul, bwmul, latmul, st_specs, stidx = \
-        batched.scenario_het_axes(scenarios)
+    (hks, wtab, tmul, bwmul, latmul, st_specs, stidx,
+     synck, ft_specs, fidx) = batched.scenario_het_axes(scenarios)
     tables, pflags = _axes_tables(wax, cax, pax, wtab)
     tl_overlaps = tuple(bool(ov) for _, ov in pax.tl_specs)
     S = len(scenarios)
@@ -564,7 +566,8 @@ def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario],
                 if k in _NUMERIC_COLS}
     batched._apply_mc_tails(wax, cax, pax, widx, cidx, coll, n, batch,
                             polidx, hks, wtab, bwmul, latmul, st_specs,
-                            stidx, cols, seed)
+                            stidx, cols, seed, synck=synck,
+                            ft_specs=ft_specs, fidx=fidx)
     cols["method_code"] = pax.tier[polidx]
     return rows_from_table(batched.select_to_columns(
         cols, batched.scenario_labels(scenarios)))

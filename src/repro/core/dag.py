@@ -43,6 +43,12 @@ def pcie_channel(worker: int) -> str:
 
 NET_CHANNEL = "net"
 
+#: Shared checkpoint-store channel: crash restores read the same npz
+#: store (:mod:`repro.checkpoint.ckpt`), so they serialize — which is
+#: what makes the per-iteration fault penalty additive in the crash
+#: count (see :class:`repro.core.het.FaultSpec`).
+CKPT_CHANNEL = "ckpt"
+
 
 @dataclass
 class Task:
@@ -228,9 +234,14 @@ class SSGDDagBuilder:
     def __init__(self, costs: IterationCosts, n_workers: int, policy: Policy,
                  comm_scale: Callable[[float, float], float] | None = None,
                  shared_compute: bool = False,
-                 worker_scale: Sequence[float] | None = None):
+                 worker_scale: Sequence[float] | None = None,
+                 sync_k: int | None = None,
+                 crashed: Sequence[int] = (),
+                 restart_s: float = 0.0):
         if n_workers < 1:
             raise ValueError("n_workers >= 1")
+        if restart_s < 0:
+            raise ValueError("restart_s must be >= 0")
         if worker_scale is not None:
             worker_scale = [float(s) for s in worker_scale]
             if len(worker_scale) != n_workers:
@@ -258,6 +269,28 @@ class SSGDDagBuilder:
         # bucket boundaries depend only on (costs, policy, comm_scale)
         self._buckets = _bucketize(costs, policy, comm_scale) \
             if n_workers > 1 else []
+        # K-of-N partial synchronization: the aggregation and the model
+        # update gate on the K *fastest* workers only (smallest
+        # compute multiplier, ties broken by worker index — exactly the
+        # K-th order statistic the closed form takes).  ``None`` keeps
+        # the full-sync edge set bit-identical to the historical path.
+        keff = n_workers if not sync_k or int(sync_k) <= 0 \
+            else min(int(sync_k), n_workers)
+        if keff < n_workers:
+            ws = worker_scale if worker_scale is not None \
+                else [1.0] * n_workers
+            order = sorted(range(n_workers), key=lambda w: (ws[w], w))
+            self._sync_workers: list[int] | None = sorted(order[:keff])
+        else:
+            self._sync_workers = None
+        # Crash/recover events: each worker in ``crashed`` loses its
+        # state every iteration and re-reads the checkpoint
+        # (``restart_s`` seconds on the shared CKPT_CHANNEL) before the
+        # model update may broadcast.
+        self._crashed = sorted({int(w) for w in crashed})
+        if any(w < 0 or w >= n_workers for w in self._crashed):
+            raise ValueError("crashed worker index out of range")
+        self._restart_s = float(restart_s)
         self._prev_update: int | None = None
         self._prev_h2d: list[int] = []
 
@@ -328,6 +361,13 @@ class SSGDDagBuilder:
                 bwd.setdefault(l, []).append(t)
                 prev = t
         last_bwd = [bwd[0][w] for w in range(self.n_workers)]  # layer 1 last
+        # Partial sync: only the K participants' gradients gate the
+        # aggregation and the update.  Non-participants keep training
+        # (their tasks still occupy their own channels) but nothing
+        # downstream waits for them.
+        sync = self._sync_workers
+        sync_last_bwd = last_bwd if sync is None \
+            else [last_bwd[w] for w in sync]
 
         # --- gradient aggregation (comm tasks T32-T34) -----------------
         comm_tasks: list[int] = []
@@ -344,24 +384,47 @@ class SSGDDagBuilder:
                            nbytes=sum(costs.grad_bytes[m] for m in members)
                            if costs.grad_bytes is not None else 0.0)
             if policy.overlap_comm:
-                # WFBP: ready as soon as every worker finished the
-                # backward of every member layer of the bucket.
+                # WFBP: ready as soon as every participating worker
+                # finished the backward of every member layer.
                 for m in members:
-                    g.add_edges(bwd[m], c)
+                    g.add_edges(bwd[m] if sync is None
+                                else [bwd[m][w] for w in sync], c)
             else:
                 # CNTK: aggregation only after the entire backward pass.
-                g.add_edges(last_bwd, c)
+                g.add_edges(sync_last_bwd, c)
             if prev_comm is not None and policy.serialize_comm:
                 g.add_edge(prev_comm, c)
             prev_comm = c
             comm_tasks.append(c)
 
+        # --- checkpoint restores (crash/recover events) ----------------
+        # A crashed worker re-reads the checkpoint before the update may
+        # broadcast.  Restores gate on the same predecessors the update
+        # would (the sync point is where the crash is detected) and
+        # chain on the shared checkpoint store, so an iteration with
+        # ``c`` crashes finishes exactly ``c * restart_s`` later.
+        restores: list[int] = []
+        for w in self._crashed:
+            r = g.add_task(f"restore_w{w}", TaskKind.COMM,
+                           self._restart_s, CKPT_CHANNEL, iteration=it,
+                           worker=w, priority=float(3 * L))
+            g.add_edges(sync_last_bwd, r)
+            g.add_edges(comm_tasks, r)
+            if restores:
+                g.add_edge(restores[-1], r)
+            restores.append(r)
+
         # --- model update (T35) ----------------------------------------
+        # The update runs on a *participant's* GPU stream: under K-of-N
+        # a non-participant straggler keeps its own channel busy past
+        # the sync point, and parking the update there would serialize
+        # the whole pipeline behind a worker nobody waits for.
         upd = g.add_task("update", TaskKind.COMPUTE, costs.t_u,
-                         self._gpu_of(0), iteration=it,
-                         priority=float(3 * L + 1))
-        g.add_edges(last_bwd, upd)
+                         self._gpu_of(0 if sync is None else sync[0]),
+                         iteration=it, priority=float(3 * L + 1))
+        g.add_edges(sync_last_bwd, upd)
         g.add_edges(comm_tasks, upd)
+        g.add_edges(restores, upd)
         self._prev_update = upd
         self._prev_h2d = h2d_tasks
         self.n_iterations += 1
@@ -376,6 +439,9 @@ def build_ssgd_dag(
     comm_scale: Callable[[float, float], float] | None = None,
     shared_compute: bool = False,
     worker_scale: Sequence[float] | None = None,
+    sync_k: int | None = None,
+    crashed: Sequence[int] = (),
+    restart_s: float = 0.0,
 ) -> DAG:
     """Build the S-SGD DAG of Fig. 1 for ``n_iterations`` iterations.
 
@@ -388,10 +454,14 @@ def build_ssgd_dag(
     ``worker_scale`` gives per-worker compute-time multipliers
     (heterogeneous GPUs / straggler jitter draws) — the per-worker DAG
     is the agreement oracle for the heterogeneous batched engine.
+    ``sync_k`` enables K-of-N partial synchronization (``None``/``0`` =
+    full sync); ``crashed`` workers pay a serialized ``restart_s``
+    checkpoint restore before each iteration's update.
     """
     b = SSGDDagBuilder(costs, n_workers, policy, comm_scale=comm_scale,
                        shared_compute=shared_compute,
-                       worker_scale=worker_scale)
+                       worker_scale=worker_scale, sync_k=sync_k,
+                       crashed=crashed, restart_s=restart_s)
     for _ in range(n_iterations):
         b.add_iteration()
     return b.dag

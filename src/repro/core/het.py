@@ -48,9 +48,29 @@ from typing import Sequence
 import numpy as np
 
 HET_PREFIX = "het:"
+FAULT_PREFIX = "fail:"
 STRAGGLER_DISTRIBUTIONS = ("lognormal", "exp")
 DEFAULT_DRAWS = 1000
 MAX_DRAWS = 1_000_000
+#: Default checkpoint-restore penalty (seconds) when ``@restart<T>`` is
+#: omitted from a fault spec: the wall-clock of re-reading a ~10 GB npz
+#: checkpoint (:mod:`repro.checkpoint.ckpt` save/restore pair) from a
+#: ~2 GB/s shared store and re-staging it — see :func:`restart_penalty_s`.
+DEFAULT_RESTART_S = 5.0
+
+
+def restart_penalty_s(ckpt_bytes: float, store_bw: float = 2e9) -> float:
+    """Checkpoint-restore penalty for a checkpoint of ``ckpt_bytes``
+    read from shared storage at ``store_bw`` bytes/s — the
+    :mod:`repro.checkpoint.ckpt`-shaped cost a crashed worker pays
+    before rejoining (npz read is bandwidth-bound; the h2d restage is
+    folded into the same stream).  Use this to derive the
+    ``@restart<T>`` value of a fault spec from a real model size."""
+    if not ckpt_bytes >= 0:
+        raise ValueError("ckpt_bytes must be >= 0")
+    if not store_bw > 0:
+        raise ValueError("store_bw must be > 0")
+    return float(ckpt_bytes) / float(store_bw)
 
 
 def normalize_het(spec: str | None) -> str:
@@ -272,3 +292,115 @@ def parse_straggler(spec: str | None) -> StragglerSpec | None:
 def validate_straggler(spec: str | None) -> None:
     """Raise ``ValueError`` unless ``spec`` parses (axis validation)."""
     parse_straggler(spec)
+
+
+def normalize_fault(spec: str | None) -> str:
+    """``None`` and ``"none"`` both mean "no faults"."""
+    return "none" if spec is None or spec == "none" else spec
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """A parsed fault-injection spec: per-iteration, per-worker crash
+    probability plus the checkpoint-restore penalty a crash costs.
+
+    The model is additive on the update chain: restores read the
+    shared checkpoint store (:func:`restart_penalty_s`), which
+    serializes them, and the synchronous update cannot broadcast until
+    every crashed worker has rejoined — so an iteration with ``c``
+    crashes (out of ``n`` per-worker Bernoulli(``p``) trials) extends
+    the GPU/update chain by exactly ``c * restart``, independent of
+    the ``sync_k`` threshold (even backup workers beyond the K-th
+    gradient must re-join from the checkpoint before the next
+    iteration).  The penalty rides *inside* the pipeline max, so an
+    I/O-bound pipeline absorbs part of it.  The event-driven oracle
+    reproduces this with explicit crash/restore tasks (see
+    :class:`repro.core.dag.SSGDDagBuilder`)."""
+
+    p: float           # per-iteration per-worker crash probability
+    restart: float     # checkpoint-restore penalty in seconds, >= 0
+    draws: int         # Monte Carlo draws (when no straggler spec rules)
+
+    @property
+    def is_deterministic(self) -> bool:
+        """``p == 0`` or ``restart == 0`` means no draw can ever add a
+        penalty — skip the Monte Carlo pass and keep the tail columns
+        bit-identical to ``iteration_time_s``."""
+        return self.p == 0.0 or self.restart == 0.0
+
+    def key(self, n_workers: int, draws: int | None = None) -> str:
+        d = self.draws if draws is None else int(draws)
+        return (f"fail:{self.p:g}@restart{self.restart:g}x{d}"
+                f"|w{int(n_workers)}")
+
+    def crash_matrix(self, n_workers: int, seed: int = 0,
+                     draws: int | None = None) -> np.ndarray:
+        """The ``(draws, n_workers)`` boolean crash matrix — entry
+        ``[d, w]`` is True when worker ``w`` crashes in draw ``d``.
+        Keyed by ``(spec, effective draws, n_workers, seed)`` only, like
+        :meth:`StragglerSpec.draw_matrix`, so every backend, shard and
+        chunk consumes the identical sample.  ``draws`` overrides the
+        spec's own count when a straggler spec sets the Monte Carlo
+        draw count for the combined pass."""
+        d = self.draws if draws is None else int(draws)
+        rng = np.random.default_rng(
+            [int(seed) & 0x7FFFFFFFFFFFFFFF,
+             zlib.crc32(self.key(n_workers, d).encode())])
+        return rng.random((d, int(n_workers))) < self.p
+
+
+def parse_fault(spec: str | None) -> FaultSpec | None:
+    """Parse a fault spec ``fail:<p>[@restart<T>][x<draws>]``;
+    ``None``/``"none"`` -> ``None`` (no faults).  ``p`` is the
+    per-iteration per-worker crash probability, ``T`` the
+    checkpoint-restore penalty in seconds (default
+    :data:`DEFAULT_RESTART_S`), ``draws`` the Monte Carlo draw count
+    (default :data:`DEFAULT_DRAWS`)."""
+    if spec is None or spec == "none":
+        return None
+    if not isinstance(spec, str) or not spec.startswith(FAULT_PREFIX):
+        raise ValueError(
+            f"unknown fault spec {spec!r}: expected 'none' or "
+            f"'fail:<p>[@restart<T>][x<draws>]'")
+    body = spec[len(FAULT_PREFIX):]
+    head, sep, mod = body.partition("@")
+    restart = DEFAULT_RESTART_S
+    draws_s = None
+    if sep:
+        if not mod.startswith("restart"):
+            raise ValueError(
+                f"malformed fault modifier {mod!r} in {spec!r}: "
+                f"expected restart<T>")
+        restart_s, xsep, tail = mod[len("restart"):].partition("x")
+        if xsep:
+            draws_s = tail
+        try:
+            restart = float(restart_s)
+        except ValueError:
+            raise ValueError(
+                f"malformed fault modifier in {spec!r}: restart must "
+                f"be a float") from None
+    else:
+        head, xsep, tail = head.partition("x")
+        if xsep:
+            draws_s = tail
+    try:
+        p = float(head)
+        draws = int(draws_s) if draws_s is not None else DEFAULT_DRAWS
+    except ValueError:
+        raise ValueError(
+            f"malformed fault spec {spec!r}: p must be a float and "
+            f"draws an int") from None
+    if not 0.0 <= p <= 1.0:
+        raise ValueError(f"fault probability must be in [0, 1] in {spec!r}")
+    if restart < 0:
+        raise ValueError(f"fault restart penalty must be >= 0 in {spec!r}")
+    if not 1 <= draws <= MAX_DRAWS:
+        raise ValueError(
+            f"fault draws must be in [1, {MAX_DRAWS}] in {spec!r}")
+    return FaultSpec(p=p, restart=restart, draws=draws)
+
+
+def validate_fault(spec: str | None) -> None:
+    """Raise ``ValueError`` unless ``spec`` parses (axis validation)."""
+    parse_fault(spec)

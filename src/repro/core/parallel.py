@@ -29,7 +29,20 @@ jax runtime in the parent.  ``pool="thread"`` runs the spans on
 threads instead: zero startup cost and useful concurrency because the
 kernel spends its time inside NumPy (GIL released), but processes are
 the honest default for CPU-bound sharding.  Pools are cached per
-``(kind, jobs)`` and shut down at interpreter exit.
+``(kind, jobs)`` and shut down at interpreter exit; a cached pool that
+broke (a worker OOM-killed or segfaulted) is evicted and rebuilt on
+the next request instead of poisoning every later sweep.
+
+Execution is **crash-tolerant**: a span whose worker process dies
+(``BrokenProcessPool``) is retried on a freshly built pool with
+exponential backoff, and a span that keeps killing workers — a poison
+span — is isolated and rescued in the parent process (whole-span
+first, then scenario by scenario, finally raising an error that names
+the offending flat-index range).  Because every span is a pure
+function of ``(grid, lo, hi, seed)``, re-running it cannot change a
+bit: a sweep that loses a worker finishes with output bit-identical
+to the serial evaluation (``tests/test_parallel.py`` kills a live
+worker mid-sweep and pins exact equality).
 
 The jax backend does **not** use this module: sharding there happens
 on the device mesh inside the jit kernel
@@ -41,8 +54,9 @@ from __future__ import annotations
 import atexit
 import os
 import sys
-from concurrent.futures import Executor, ProcessPoolExecutor, \
-    ThreadPoolExecutor
+import time
+from concurrent.futures import BrokenExecutor, Executor, \
+    ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Iterator
 
 import numpy as np
@@ -114,12 +128,36 @@ def _eval_span(grid: ScenarioGrid, lo: int, hi: int,
 
 _POOLS: dict[tuple[str, int], Executor] = {}
 
+#: Pool rebuilds :func:`parallel_tables` pays for worker-process deaths
+#: before treating the failing span as poison and rescuing it in the
+#: parent.
+MAX_POOL_REBUILDS = 3
+
+#: First-retry backoff after a worker death; doubles per rebuild.
+RETRY_BACKOFF_S = 0.05
+
+
+def _evict_pool(ex: Executor) -> None:
+    """Drop ``ex`` from the cache (if present) and shut it down — a
+    broken executor rejects every future submit, so keeping it cached
+    would poison all later sweeps."""
+    for key, pool in list(_POOLS.items()):
+        if pool is ex:
+            del _POOLS[key]
+    ex.shutdown(wait=False, cancel_futures=True)
+
 
 def _get_pool(kind: str, jobs: int) -> Executor:
     if kind not in POOL_KINDS:
         raise ValueError(f"unknown pool {kind!r}; one of {POOL_KINDS}")
     key = (kind, jobs)
     pool = _POOLS.get(key)
+    if pool is not None and getattr(pool, "_broken", False):
+        # a worker died since the last sweep (OOM killer, segfault):
+        # the executor is permanently broken — rebuild instead of
+        # handing the corpse to every future caller
+        _evict_pool(pool)
+        pool = None
     if pool is None:
         if kind == "process":
             import multiprocessing as mp
@@ -140,6 +178,29 @@ def _shutdown_pools() -> None:
     _POOLS.clear()
 
 
+def _rescue_span(grid: ScenarioGrid, lo: int, hi: int,
+                 warm_iterations: int, seed: int) -> dict:
+    """In-parent rescue for a poison span: evaluate ``[lo, hi)`` whole;
+    if that raises, fall back scenario by scenario so a single bad
+    point is named by its flat index instead of taking the span's other
+    scenarios down with it."""
+    from repro.core.resulttable import concat_tables
+
+    try:
+        return _eval_span(grid, lo, hi, warm_iterations, seed)
+    except Exception:
+        tables = []
+        for i in range(lo, hi):
+            try:
+                tables.append(
+                    _eval_span(grid, i, i + 1, warm_iterations, seed))
+            except Exception as exc:
+                raise RuntimeError(
+                    f"scenario at flat index {i} of poison span "
+                    f"[{lo}, {hi}) failed even in-process: {exc}") from exc
+        return concat_tables(tables)
+
+
 def parallel_tables(grid: ScenarioGrid, *, jobs: int,
                     chunk: int, warm_iterations: int = 6,
                     pool: str | Executor = "process",
@@ -150,7 +211,19 @@ def parallel_tables(grid: ScenarioGrid, *, jobs: int,
     outstanding span completes).  ``pool`` is ``"process"`` /
     ``"thread"`` or any ``concurrent.futures.Executor`` to reuse;
     ``seed`` keys the straggler Monte Carlo draws identically in every
-    worker."""
+    worker.
+
+    A dying worker process (``BrokenProcessPool``) does not kill the
+    sweep: the broken pool is evicted from the cache, a fresh one is
+    built after an exponential backoff, and every not-yet-yielded span
+    is resubmitted — spans are pure functions of ``(grid, lo, hi,
+    seed)``, so the retried output is bit-identical.  After
+    :data:`MAX_POOL_REBUILDS` (or a span that breaks two pools in a
+    row — a poison span) the failing span is rescued in the parent via
+    :func:`_rescue_span`, naming the offending flat-index range if it
+    cannot be salvaged at all.  A caller-supplied executor is never
+    rebuilt: the ``BrokenExecutor`` propagates, because replacing a
+    pool this function does not own would be a lie."""
     jobs = resolve_jobs(jobs)
     n = len(grid)
     spans = span_plan(n, jobs, chunk)
@@ -160,8 +233,40 @@ def parallel_tables(grid: ScenarioGrid, *, jobs: int,
         for lo, hi in spans:
             yield _eval_span(grid, lo, hi, warm_iterations, seed)
         return
-    ex = pool if isinstance(pool, Executor) else _get_pool(pool, jobs)
-    futures = [ex.submit(_eval_span, grid, lo, hi, warm_iterations, seed)
-               for lo, hi in spans]
-    for fut in futures:
-        yield fut.result()
+    external = isinstance(pool, Executor)
+    ex = pool if external else _get_pool(pool, jobs)
+
+    def submit_from(start: int) -> None:
+        futures[start:] = [
+            ex.submit(_eval_span, grid, lo, hi, warm_iterations, seed)
+            for lo, hi in spans[start:]]
+
+    futures: list = [None] * len(spans)
+    submit_from(0)
+    rebuilds = 0
+    breaks: dict[int, int] = {}        # span index -> pools it broke
+    i = 0
+    while i < len(spans):
+        lo, hi = spans[i]
+        try:
+            table = futures[i].result()
+        except BrokenExecutor:
+            if external:
+                raise
+            breaks[i] = breaks.get(i, 0) + 1
+            _evict_pool(ex)
+            if rebuilds >= MAX_POOL_REBUILDS or breaks[i] > 1:
+                # poison span (or the machine keeps killing workers):
+                # rescue this span in the parent, then let the rest of
+                # the sweep continue on a fresh pool
+                table = _rescue_span(grid, lo, hi, warm_iterations, seed)
+                ex = _get_pool(pool, jobs)
+                submit_from(i + 1)
+            else:
+                rebuilds += 1
+                time.sleep(RETRY_BACKOFF_S * 2 ** (rebuilds - 1))
+                ex = _get_pool(pool, jobs)
+                submit_from(i)
+                continue
+        yield table
+        i += 1

@@ -26,12 +26,16 @@ import numpy as np
 #: Column order of the tidy results table (the single source of truth;
 #: :mod:`repro.core.sweep` re-exports it).  ``het`` / ``straggler``
 #: are the heterogeneity axes (label ``"none"`` when unused);
-#: ``t_mean_s``/``t_p95_s``/``t_p99_s`` are the straggler Monte Carlo
-#: tail statistics of the iteration time — equal to
+#: ``sync_k`` / ``faults`` the failure-model axes (``sync_k = 0`` means
+#: full synchronization, a positive K means the iteration waits for the
+#: first K of N gradients; ``faults`` is the ``fail:`` spec label,
+#: ``"none"`` when unused); ``t_mean_s``/``t_p95_s``/``t_p99_s`` are
+#: the Monte Carlo tail statistics of the iteration time — equal to
 #: ``iteration_time_s`` on deterministic rows (a point mass has no
 #: tails).
 COLUMNS = ("workload", "cluster", "n_workers", "policy", "collective",
-           "interconnect", "het", "straggler", "batch_per_gpu",
+           "interconnect", "het", "straggler", "sync_k", "faults",
+           "batch_per_gpu",
            "iteration_time_s", "samples_per_sec", "speedup",
            "t_comm_s", "t_comp_s", "t_mean_s", "t_p95_s", "t_p99_s",
            "method")
@@ -40,10 +44,10 @@ COLUMNS = ("workload", "cluster", "n_workers", "policy", "collective",
 #: labels: fancy-indexing an object array copies references, never
 #: string bytes).
 LABEL_COLUMNS = ("workload", "cluster", "policy", "collective",
-                 "interconnect", "het", "straggler", "method")
+                 "interconnect", "het", "straggler", "faults", "method")
 
 #: Integer-valued columns (int64).
-INT_COLUMNS = ("n_workers", "batch_per_gpu")
+INT_COLUMNS = ("n_workers", "sync_k", "batch_per_gpu")
 
 #: Float-valued columns (float64).
 FLOAT_COLUMNS = ("iteration_time_s", "samples_per_sec", "speedup",

@@ -35,6 +35,34 @@ def normalize_interconnect(interconnect: str | None) -> str:
     return "default" if interconnect is None else interconnect
 
 
+def normalize_sync_k(sync_k: int | None) -> int:
+    """The one spelling of "full synchronization" used everywhere:
+    ``None``/``0``/``"none"`` all mean it and normalize to ``0``; a
+    positive K means "sync with the first K of N gradients" (backup
+    workers).  The effective threshold is clamped to the scenario's
+    worker count at evaluation time
+    (:func:`repro.core.analytical.effective_sync_k`), which keeps
+    grid-axis validation separable from the worker-count axis."""
+    if sync_k is None or sync_k == "none" or sync_k == 0:
+        return 0
+    return int(sync_k)
+
+
+def validate_sync_k(sync_k: int | None) -> None:
+    """Raise ``ValueError`` unless ``sync_k`` is a full-sync sentinel
+    (``None``/``0``/``"none"``) or a positive int."""
+    if sync_k is None or sync_k == "none":
+        return
+    try:
+        k = int(sync_k)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"sync_k must be 'none' or a positive int, got {sync_k!r}"
+        ) from None
+    if k < 0:
+        raise ValueError(f"sync_k must be >= 0 (0 = full sync), got {k}")
+
+
 def validate_interconnect(interconnect: str | None) -> None:
     """Raise ``ValueError`` unless ``interconnect`` is ``None``,
     ``"default"``, a preset name, or a scaled preset
@@ -72,6 +100,8 @@ class Scenario:
     interconnect: str | None = None
     het: str | None = None
     straggler: str | None = None
+    sync_k: int | None = None
+    faults: str | None = None
     batch_per_gpu: int | None = None
 
     def label(self) -> str:
@@ -82,6 +112,10 @@ class Scenario:
             label += f"/{self.het}"
         if self.straggler is not None and self.straggler != "none":
             label += f"/{self.straggler}"
+        if normalize_sync_k(self.sync_k):
+            label += f"/k{normalize_sync_k(self.sync_k)}"
+        if self.faults is not None and self.faults != "none":
+            label += f"/{self.faults}"
         return label
 
     def validate(self) -> None:
@@ -101,6 +135,8 @@ class Scenario:
         try:
             het_mod.validate_het(self.het)
             het_mod.validate_straggler(self.straggler)
+            het_mod.validate_fault(self.faults)
+            validate_sync_k(self.sync_k)
         except ValueError as e:
             raise ValueError(str(e)) from None
         if self.batch_per_gpu is not None and self.batch_per_gpu < 1:
@@ -163,13 +199,16 @@ class ScenarioGrid:
     interconnects: Sequence[str | None] = (None,)
     het_profiles: Sequence[str | None] = (None,)
     stragglers: Sequence[str | None] = (None,)
+    sync_ks: Sequence[int | None] = (None,)
+    faults: Sequence[str | None] = (None,)
     batch_per_gpu: int | None = None
 
     def __len__(self) -> int:
         return (len(self.workloads) * len(self.clusters)
                 * len(self.worker_counts) * len(self.policies)
                 * len(self.collectives) * len(self.interconnects)
-                * len(self.het_profiles) * len(self.stragglers))
+                * len(self.het_profiles) * len(self.stragglers)
+                * len(self.sync_ks) * len(self.faults))
 
     def __iter__(self) -> Iterator[Scenario]:
         return iter(self.expand())
@@ -205,17 +244,23 @@ class ScenarioGrid:
             het_mod.validate_het(h)
         for st in self.stragglers:
             het_mod.validate_straggler(st)
+        for k in self.sync_ks:
+            validate_sync_k(k)
+        for f in self.faults:
+            het_mod.validate_fault(f)
 
     def expand(self) -> list[Scenario]:
         self.validate_axes()
         return [Scenario(workload=wl, cluster=cl, n_workers=int(n),
                          policy=pol, collective=coll, interconnect=ic,
-                         het=h, straggler=st,
+                         het=h, straggler=st, sync_k=sk, faults=fl,
                          batch_per_gpu=self.batch_per_gpu)
-                for wl, cl, n, pol, coll, ic, h, st in itertools.product(
+                for wl, cl, n, pol, coll, ic, h, st, sk, fl
+                in itertools.product(
                     self.workloads, self.clusters, self.worker_counts,
                     self.policies, self.collectives, self.interconnects,
-                    self.het_profiles, self.stragglers)]
+                    self.het_profiles, self.stragglers, self.sync_ks,
+                    self.faults)]
 
     def scenario_at(self, i: int) -> Scenario:
         """Materialize the scenario at flat ``expand()`` index ``i``
@@ -223,12 +268,13 @@ class ScenarioGrid:
         batched/parallel paths recover the few simulator-fallback
         scenarios of an otherwise fully batched grid."""
         codes = []
-        for axis in (self.stragglers, self.het_profiles,
-                     self.interconnects, self.collectives, self.policies,
-                     self.worker_counts, self.clusters, self.workloads):
+        for axis in (self.faults, self.sync_ks, self.stragglers,
+                     self.het_profiles, self.interconnects,
+                     self.collectives, self.policies, self.worker_counts,
+                     self.clusters, self.workloads):
             i, c = divmod(i, len(axis))
             codes.append(c)
-        sti, hi, ii, ai, pi, ki, ci, wi = codes
+        fi, qi, sti, hi, ii, ai, pi, ki, ci, wi = codes
         return Scenario(workload=self.workloads[wi],
                         cluster=self.clusters[ci],
                         n_workers=int(self.worker_counts[ki]),
@@ -237,6 +283,8 @@ class ScenarioGrid:
                         interconnect=self.interconnects[ii],
                         het=self.het_profiles[hi],
                         straggler=self.stragglers[sti],
+                        sync_k=self.sync_ks[qi],
+                        faults=self.faults[fi],
                         batch_per_gpu=self.batch_per_gpu)
 
 def default_grid() -> ScenarioGrid:

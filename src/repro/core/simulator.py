@@ -270,6 +270,9 @@ def simulate_policy(
     auto_steady: bool = False,
     rtol: float = STEADY_RTOL,
     worker_scale=None,
+    sync_k: int | None = None,
+    crashed: tuple = (),
+    restart_s: float = 0.0,
 ) -> SimResult:
     """Build the Fig.-1 S-SGD DAG for ``policy`` and list-schedule it.
 
@@ -285,11 +288,14 @@ def simulate_policy(
 
     ``worker_scale`` (per-worker compute-time multipliers) makes this
     the per-worker oracle for the heterogeneous/straggler engine — see
-    :class:`repro.core.dag.SSGDDagBuilder`.
+    :class:`repro.core.dag.SSGDDagBuilder`.  ``sync_k`` / ``crashed`` /
+    ``restart_s`` add the failure model: K-of-N partial sync and
+    per-iteration checkpoint-restore crash events.
     """
     builder = SSGDDagBuilder(costs, n_workers, policy,
                              comm_scale=comm_scale,
-                             worker_scale=worker_scale)
+                             worker_scale=worker_scale, sync_k=sync_k,
+                             crashed=crashed, restart_s=restart_s)
     prio = frozenset([NET_CHANNEL]) if getattr(policy, "priority_comm", False) \
         else None
     sim = Simulation(builder.dag, priority_channels=prio)
@@ -313,6 +319,9 @@ def simulate_steady(
     n_iterations: int = 6,
     comm_scale: Callable[[float, float], float] | None = None,
     worker_scale=None,
+    sync_k: int | None = None,
+    crashed: tuple = (),
+    restart_s: float = 0.0,
 ) -> float:
     """:func:`simulate_policy`, reduced to the warm per-iteration time
     in seconds.  Auto-detects the steady state: the warm-up stops as
@@ -320,5 +329,6 @@ def simulate_steady(
     as the cap (the historical fixed warm-up count)."""
     return simulate_policy(costs, n_workers, policy, n_iterations,
                            comm_scale, auto_steady=True,
-                           worker_scale=worker_scale) \
+                           worker_scale=worker_scale, sync_k=sync_k,
+                           crashed=crashed, restart_s=restart_s) \
         .steady_iteration_time()

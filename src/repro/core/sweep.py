@@ -2,7 +2,8 @@
 
 Evaluates a :class:`repro.core.scenarios.ScenarioGrid` — thousands of
 ``(workload x cluster x workers x interconnect x policy x collective
-x het x straggler)`` combinations — in one call, two ways:
+x het x straggler x sync_k x faults)`` combinations — in one call,
+two ways:
 
 * **Batched analytical fast path** (the default for every policy
   whose closed form is exact — see
@@ -58,6 +59,7 @@ from __future__ import annotations
 
 import csv
 import json
+import os
 import time
 from dataclasses import dataclass, field, replace
 from typing import Iterable, Iterator, Sequence
@@ -74,8 +76,8 @@ from repro.core.resulttable import (COLUMNS, concat_tables, method_counts,
                                     rows_from_table, table_from_rows,
                                     table_len)
 from repro.core.scenarios import (Scenario, ScenarioGrid,
-                                  normalize_interconnect, resolve_cluster,
-                                  resolve_policy)
+                                  normalize_interconnect, normalize_sync_k,
+                                  resolve_cluster, resolve_policy)
 from repro.core.simulator import simulate_steady
 from repro.core.workloads import WorkloadTable, resolve_workload
 
@@ -130,6 +132,30 @@ def _het_state(s: Scenario):
     return inv, het_mod.parse_straggler(s.straggler)
 
 
+def _kth_tmul(times: np.ndarray, sync_k: int) -> np.ndarray:
+    """Per-draw bottleneck multiplier under K-of-N partial sync: the
+    K-th smallest of each row of per-worker times (``sync_k = 0`` means
+    full sync, the max).  ``times`` is ``(D, n)``; clamping keeps
+    ``K >= n`` bit-identical to the historical max reduction."""
+    n = times.shape[-1]
+    keff = n if sync_k == 0 else min(max(int(sync_k), 1), n)
+    if keff >= n:
+        return times.max(axis=-1)
+    return np.partition(times, keff - 1, axis=-1)[..., keff - 1]
+
+
+def _fault_state(s: Scenario, seed: int, draws: int | None):
+    """``(FaultSpec | None, crash_matrix | None)``: the parsed fault
+    spec and, when stochastic, the seed-keyed ``(D, n)`` boolean crash
+    matrix — each crashed worker costs a serialized ``restart``-second
+    checkpoint restore gating the update broadcast (see
+    :class:`repro.core.dag.SSGDDagBuilder`)."""
+    ft = het_mod.parse_fault(s.faults)
+    if ft is None or ft.is_deterministic:
+        return ft, None
+    return ft, ft.crash_matrix(s.n_workers, seed, draws=draws)
+
+
 def _ref_tails(t_iters) -> tuple[float, float, float]:
     """``(mean, p95, p99)`` of per-draw iteration times — the same
     host-side reduction the batched Monte Carlo pass applies."""
@@ -155,20 +181,37 @@ def _fast_eval(s: Scenario, seed: int = 0) -> dict:
     This is the **reference implementation and agreement oracle** for
     the scenario-axis batched kernel (:mod:`repro.core.batched`), which
     is what :func:`sweep` actually routes closed-form scenarios
-    through; the property tests pin the two to <= 1e-9 relative."""
+    through; the property tests pin the two to <= 1e-9 relative.
+
+    The failure model folds in exactly as in the batched engine:
+    ``sync_k`` swaps the bottleneck max for the K-th order statistic
+    (:func:`_kth_tmul`), and a stochastic fault spec adds each draw's
+    serialized restore penalty to ``t_u`` — the restores gate the
+    update broadcast, so the penalty rides the GPU/update chain
+    *inside* the pipeline max."""
     costs0, _, policy, batch = _scenario_costs(s, resolve_workload(s.workload))
     inv, st = _het_state(s)
-    costs = costs0 if inv is None else _scale_compute(costs0, float(inv.max()))
+    sk = normalize_sync_k(s.sync_k)
+    costs = costs0 if inv is None else _scale_compute(
+        costs0, float(_kth_tmul(inv[None, :], sk)[0]))
     t_iter = float(analytical.closed_form(costs, policy))
     t1 = float(analytical.closed_form(
         costs.with_comm(np.zeros_like(costs.t_f)), policy))
     tails = None
-    if st is not None and not st.is_deterministic:
-        J = st.draw_matrix(s.n_workers, seed)
-        tmuls = (J if inv is None else J * inv).max(axis=1)
+    st_live = st is not None and not st.is_deterministic
+    ft, cm = _fault_state(s, seed,
+                          st.draws if st_live else None)
+    if st_live or cm is not None:
+        D = st.draws if st_live else ft.draws
+        J = st.draw_matrix(s.n_workers, seed) if st_live \
+            else np.ones((D, s.n_workers))
+        tmuls = _kth_tmul(J if inv is None else J * inv, sk)
+        pens = np.zeros(D) if cm is None else ft.restart * cm.sum(axis=1)
         tails = _ref_tails([
-            float(analytical.closed_form(_scale_compute(costs0, m), policy))
-            for m in tmuls])
+            float(analytical.closed_form(
+                replace(_scale_compute(costs0, m), t_u=costs0.t_u + p),
+                policy))
+            for m, p in zip(tmuls, pens)])
     return _row(s, batch, t_iter, t1, float(np.sum(costs.t_c)),
                 float(np.sum(costs.t_f) + np.sum(costs.t_b)), "analytical",
                 tails=tails)
@@ -181,35 +224,51 @@ def _sim_eval(s: Scenario, warm_iterations: int = 6, seed: int = 0) -> dict:
     per-worker rate vector goes to the DAG builder *unreduced*
     (``worker_scale``), so agreement with the batched path validates
     the slowest-worker theorem rather than assuming it.  Stochastic
-    stragglers re-simulate per draw with ``jitter * inv_speed``."""
+    stragglers re-simulate per draw with ``jitter * inv_speed``.  The
+    failure model goes to the builder equally unreduced: ``sync_k``
+    gates the DAG's aggregation edges on the K fastest workers, and
+    each draw's crashed-worker set becomes serialized checkpoint
+    restores — agreement with the batched closed form validates the
+    K-th-order-statistic reduction and the additive restore chain."""
     tab = resolve_workload(s.workload)
     costs, cluster, policy, batch = _scenario_costs(s, tab)
     inv, st = _het_state(s)
+    sk = normalize_sync_k(s.sync_k)
     comm_scale = comm_scale_fn(cluster, s.n_workers, s.collective) \
         if policy.bucket_bytes else None
     t_iter = simulate_steady(costs, s.n_workers, policy,
                              n_iterations=warm_iterations,
                              comm_scale=comm_scale,
-                             worker_scale=inv)
+                             worker_scale=inv,
+                             sync_k=sk or None)
     # weak-scaling baseline: same pipeline, one worker, no comm — with
     # the same bottleneck compute rate, matching the batched speedup
     base_policy = replace(policy, bucket_bytes=None, priority_comm=False)
     c1 = costs.with_comm([0.0] * costs.num_layers)
     if inv is not None:
-        c1 = _scale_compute(c1, float(inv.max()))
+        c1 = _scale_compute(c1, float(_kth_tmul(inv[None, :], sk)[0]))
     t1 = analytical.closed_form(c1, base_policy)
     if t1 is None:                                    # pragma: no cover
         t1 = simulate_steady(c1, 1, base_policy, n_iterations=warm_iterations)
     tails = None
-    if st is not None and not st.is_deterministic:
-        J = st.draw_matrix(s.n_workers, seed)
+    st_live = st is not None and not st.is_deterministic
+    ft, cm = _fault_state(s, seed, st.draws if st_live else None)
+    if st_live or cm is not None:
+        D = st.draws if st_live else ft.draws
+        J = st.draw_matrix(s.n_workers, seed) if st_live \
+            else np.ones((D, s.n_workers))
         mul = J if inv is None else J * inv
+        crash_sets = [()] * D if cm is None else \
+            [tuple(np.nonzero(c)[0].tolist()) for c in cm]
         tails = _ref_tails([
             simulate_steady(costs, s.n_workers, policy,
                             n_iterations=warm_iterations,
                             comm_scale=comm_scale,
-                            worker_scale=m)
-            for m in mul])
+                            worker_scale=m,
+                            sync_k=sk or None,
+                            crashed=crashed,
+                            restart_s=0.0 if ft is None else ft.restart)
+            for m, crashed in zip(mul, crash_sets)])
     return _row(s, batch, t_iter, t1, float(np.sum(costs.t_c)),
                 float(np.sum(costs.t_f) + np.sum(costs.t_b)), "simulated",
                 tails=tails)
@@ -229,6 +288,8 @@ def _row(s: Scenario, batch: int, t_iter: float, t1: float, t_comm: float,
         "interconnect": normalize_interconnect(s.interconnect),
         "het": het_mod.normalize_het(s.het),
         "straggler": het_mod.normalize_straggler(s.straggler),
+        "sync_k": normalize_sync_k(s.sync_k),
+        "faults": het_mod.normalize_fault(s.faults),
         "batch_per_gpu": batch,
         "iteration_time_s": t_iter,
         "samples_per_sec": s.n_workers * batch / t_iter if t_iter else 0.0,
@@ -312,9 +373,11 @@ class SweepResult:
 
         ``interconnect`` accepts both spellings of "cluster default":
         ``None`` and ``"default"`` (rows always store the normalized
-        form, via the same normalizer as ``Scenario.label()``); ``het``
-        and ``straggler`` likewise accept ``None`` for ``"none"``.
-        Unknown column names raise ``KeyError`` naming the valid ones.
+        form, via the same normalizer as ``Scenario.label()``); ``het``,
+        ``straggler`` and ``faults`` likewise accept ``None`` for
+        ``"none"``, and ``sync_k`` accepts ``None`` for ``0`` (full
+        sync).  Unknown column names raise ``KeyError`` naming the
+        valid ones.
         """
         if "interconnect" in eq:
             eq["interconnect"] = normalize_interconnect(eq["interconnect"])
@@ -322,6 +385,10 @@ class SweepResult:
             eq["het"] = het_mod.normalize_het(eq["het"])
         if "straggler" in eq:
             eq["straggler"] = het_mod.normalize_straggler(eq["straggler"])
+        if "faults" in eq:
+            eq["faults"] = het_mod.normalize_fault(eq["faults"])
+        if "sync_k" in eq:
+            eq["sync_k"] = normalize_sync_k(eq["sync_k"])
         mask = np.ones(len(self), dtype=bool)
         for k, v in eq.items():
             mask &= self._col(k) == v
@@ -372,15 +439,20 @@ class SweepResult:
             if limit is not None:
                 rows = rows[:limit]
         # wide enough for provider-prefixed names (llm:qwen2-moe-a2.7b);
-        # the heterogeneity columns appear only when some row uses them
+        # the heterogeneity/failure columns appear only when some row
+        # uses them
         with_het = any(r["het"] != "none" or r["straggler"] != "none"
                        for r in rows)
+        with_fail = any(r["sync_k"] != 0 or r["faults"] != "none"
+                        for r in rows)
         header = (f"{'workload':22s} {'cluster':16s} {'wk':>3s} "
                   f"{'policy':13s} {'coll':12s} {'interconn':12s} "
                   f"{'iter_ms':>9s} {'samp/s':>10s} {'speedup':>7s} {'m':>2s}")
         if with_het:
             header += (f" {'het':18s} {'straggler':18s} "
                        f"{'p99_ms':>9s}")
+        if with_fail:
+            header += f" {'k':>3s} {'faults':26s}"
         lines = [header, "-" * len(header)]
         for r in rows:
             line = (
@@ -393,6 +465,8 @@ class SweepResult:
             if with_het:
                 line += (f" {r['het'][:18]:18s} {r['straggler'][:18]:18s} "
                          f"{r['t_p99_s'] * 1e3:9.2f}")
+            if with_fail:
+                line += f" {r['sync_k']:3d} {r['faults'][:26]:26s}"
             lines.append(line)
         return "\n".join(lines)
 
@@ -660,20 +734,30 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
     The JSON document has the :meth:`SweepResult.to_json` shape (same
     keys; ``rows`` first so the array can stream, counts and timing in
     the trailer).
+
+    Writes are **atomic**: each output streams to ``<path>.tmp`` and is
+    renamed over ``path`` only after the whole pass succeeds, so an
+    exception mid-sweep (a bad scenario in a late chunk, a killed
+    worker) can never leave a truncated CSV or an unterminated JSON
+    document behind — the temp file is removed and any pre-existing
+    ``path`` is untouched.
     """
     if csv_path is None and json_path is None:
         raise ValueError("stream() needs csv_path and/or json_path")
     _check_backend(backend, batched=batched, force_simulator=force_simulator)
     t0 = time.perf_counter()
     n_fast = n_tl = n_slow = 0
+    csv_tmp = None if csv_path is None else str(csv_path) + ".tmp"
+    json_tmp = None if json_path is None else str(json_path) + ".tmp"
     csv_file = json_file = None
+    ok = False
     try:
-        if csv_path is not None:
-            csv_file = open(csv_path, "w", newline="")
+        if csv_tmp is not None:
+            csv_file = open(csv_tmp, "w", newline="")
             writer = csv.writer(csv_file)
             writer.writerow(COLUMNS)
-        if json_path is not None:
-            json_file = open(json_path, "w")
+        if json_tmp is not None:
+            json_file = open(json_tmp, "w")
             json_file.write('{\n  "columns": %s,\n  "rows": ['
                             % json.dumps(list(COLUMNS)))
         first = True
@@ -704,10 +788,20 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
                 '  "n_simulated": %d,\n  "backend": %s\n}\n'
                 % (n, json.dumps(elapsed), json.dumps(rate),
                    n_fast, n_tl, n_slow, json.dumps(backend)))
+        ok = True
     finally:
         for f in (csv_file, json_file):
             if f is not None:
                 f.close()
+        if ok:
+            if csv_tmp is not None:
+                os.replace(csv_tmp, csv_path)
+            if json_tmp is not None:
+                os.replace(json_tmp, json_path)
+        else:
+            for tmp in (csv_tmp, json_tmp):
+                if tmp is not None and os.path.exists(tmp):
+                    os.unlink(tmp)
     return {"n_scenarios": n, "elapsed_s": elapsed,
             "scenarios_per_sec": rate,
             "n_analytical": n_fast, "n_timeline": n_tl,

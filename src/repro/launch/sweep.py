@@ -13,6 +13,9 @@ emit a tidy results table.
     PYTHONPATH=src python -m repro.launch.sweep \\
         --het none,het:1x0.5+3x1.0 --stragglers none,lognormal:0.2x1000 \\
         --seed 7 --sort t_p99_s
+    PYTHONPATH=src python -m repro.launch.sweep \\
+        --workers 8 --sync-k none,6 \\
+        --faults none,fail:0.01@restart2.5x1000 --sort t_p99_s
 
 Workloads resolve through the pluggable registry
 (``repro.core.workloads``): bare paper CNN names or ``cnn:<name>``,
@@ -91,6 +94,20 @@ def build_parser() -> argparse.ArgumentParser:
                         "'<dist>:<scale>[x<draws>]' with dist lognormal|exp, "
                         "e.g. lognormal:0.2x1000 — Monte Carlo tails land "
                         "in t_mean_s/t_p95_s/t_p99_s")
+    p.add_argument("--sync-k", type=_csv_list, default=None,
+                   help="comma-separated K-of-N partial-sync thresholds: "
+                        "'none'/'0' (full sync) and/or positive K — each "
+                        "iteration waits for the first K of N gradients "
+                        "(K is clamped to the worker count; backup "
+                        "workers = N - K)")
+    p.add_argument("--faults", type=_csv_list, default=None,
+                   help="comma-separated fault models: 'none' and/or "
+                        "'fail:<p>[@restart<T>][x<draws>]' — each worker "
+                        "crashes with probability p per iteration and "
+                        "pays a T-second checkpoint restore (default "
+                        "restart 5s), e.g. fail:0.01@restart2.5x1000; "
+                        "Monte Carlo tails land in t_mean_s/t_p95_s/"
+                        "t_p99_s")
     p.add_argument("--seed", type=int, default=0,
                    help="seed for the straggler Monte Carlo draws "
                         "(default 0; draws are keyed by (spec, workers, "
@@ -160,6 +177,12 @@ def grid_from_args(args: argparse.Namespace):
     if args.stragglers:
         axes["stragglers"] = tuple(
             None if s == "none" else s for s in args.stragglers)
+    if args.sync_k:
+        axes["sync_ks"] = tuple(
+            None if k == "none" else int(k) for k in args.sync_k)
+    if args.faults:
+        axes["faults"] = tuple(
+            None if f == "none" else f for f in args.faults)
     if args.batch_per_gpu is not None:
         axes["batch_per_gpu"] = args.batch_per_gpu
     return dataclasses.replace(base, **axes)
@@ -202,7 +225,8 @@ def main(argv: list[str] | None = None) -> int:
           f"x {len(grid.collectives)} collectives "
           f"x {len(grid.interconnects)} interconnects "
           f"x {len(grid.het_profiles)} het x {len(grid.stragglers)} "
-          f"stragglers)")
+          f"stragglers x {len(grid.sync_ks)} sync-k "
+          f"x {len(grid.faults)} faults)")
     if args.stream:
         summary = stream(grid, csv_path=args.csv, json_path=args.json,
                          force_simulator=args.force_simulator,

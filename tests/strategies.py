@@ -41,6 +41,13 @@ GRID_HET_PROFILES = (None, "het:1x0.5+3x1.0", "het:2x1.0@bw0.5",
 #: examples, and the MC cost is (unique points) x draws.
 GRID_STRAGGLERS = (None, "lognormal:0.25x32", "exp:0.5x16",
                    "lognormal:0x8")
+#: K-of-N partial-sync thresholds (0/None = full sync; K is clamped to
+#: the worker count at evaluation, so over-large values are valid).
+GRID_SYNC_KS = (None, 0, 1, 2, 3, 7)
+#: Fault specs, small draw counts for the same reason as stragglers;
+#: ``fail:0`` and ``@restart0`` are the deterministic degenerates.
+GRID_FAULTS = (None, "fail:0.1@restart1.5x16", "fail:0.5@restart0.25x8",
+               "fail:0x8", "fail:0.3@restart0x8")
 
 
 @st.composite
@@ -127,19 +134,46 @@ def straggler_specs(draw, max_draws: int = 32):
 
 
 @st.composite
-def scenario_grids(draw, max_per_axis: int = 2, with_het: bool = False):
+def sync_ks(draw, max_k: int = 8):
+    """A random K-of-N threshold: ``None``/``0`` (full sync) or a
+    positive K — deliberately allowed to exceed the worker count, since
+    the engine clamps (``K >= n`` must be bit-identical to full
+    sync)."""
+    if draw(st.booleans()):
+        return draw(st.sampled_from((None, 0)))
+    return draw(st.integers(1, max_k))
+
+
+@st.composite
+def fault_specs(draw, max_draws: int = 32):
+    """A random parsed-valid ``fail:`` spec string; ``p = 0`` and
+    ``restart = 0`` (the deterministic degenerates) are drawn
+    deliberately often."""
+    p = draw(st.sampled_from((0.0, 0.05, 0.2, 0.5)))
+    restart = draw(st.sampled_from((0.0, 0.5, 2.5)))
+    return (f"fail:{p:g}@restart{restart:g}"
+            f"x{draw(st.integers(4, max_draws))}")
+
+
+@st.composite
+def scenario_grids(draw, max_per_axis: int = 2, with_het: bool = False,
+                   with_failures: bool = False):
     """Random batched-eligible :class:`~repro.core.scenarios.ScenarioGrid`
     spanning every provider, policy family, collective and interconnect
     preset — the NumPy ≡ JAX differential property's input space.
     ``with_het=True`` adds the heterogeneity axes (het profiles and
-    small-draw straggler specs)."""
+    small-draw straggler specs); ``with_failures=True`` the failure
+    axes (K-of-N sync thresholds and fault specs)."""
     from repro.core.scenarios import ScenarioGrid
 
-    het_axes = {}
+    extra_axes = {}
     if with_het:
-        het_axes = {
+        extra_axes = {
             "het_profiles": _axis(draw, GRID_HET_PROFILES, max_per_axis),
             "stragglers": _axis(draw, GRID_STRAGGLERS, max_per_axis)}
+    if with_failures:
+        extra_axes["sync_ks"] = _axis(draw, GRID_SYNC_KS, max_per_axis)
+        extra_axes["faults"] = _axis(draw, GRID_FAULTS, max_per_axis)
     return ScenarioGrid(
         workloads=_axis(draw, GRID_WORKLOADS, max_per_axis),
         clusters=_axis(draw, GRID_CLUSTERS, max_per_axis),
@@ -147,4 +181,4 @@ def scenario_grids(draw, max_per_axis: int = 2, with_het: bool = False):
         policies=_axis(draw, GRID_POLICIES, max_per_axis),
         collectives=_axis(draw, GRID_COLLECTIVES, max_per_axis),
         interconnects=_axis(draw, GRID_INTERCONNECTS, max_per_axis),
-        **het_axes)
+        **extra_axes)

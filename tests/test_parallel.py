@@ -14,6 +14,17 @@ Pins the PR-7 contracts:
 * The streamed JSON trailer round-trips the new throughput metadata
   (``elapsed_s`` / ``scenarios_per_sec``) with the same key set as the
   buffered document.
+
+And the PR-9 crash-tolerance contracts:
+
+* ``stream()`` is atomic — a failure mid-sweep leaves pre-existing
+  output files byte-identical and no ``.tmp`` debris.
+* A cached pool whose worker was SIGKILLed is evicted and rebuilt by
+  ``_get_pool`` instead of poisoning later sweeps.
+* A sweep that loses a worker process mid-flight (chaos SIGKILL)
+  finishes with output **bit-identical** to serial; a poison span is
+  rescued in-parent and named by flat index; a caller-supplied
+  executor is never rebuilt behind the caller's back.
 """
 from __future__ import annotations
 
@@ -255,6 +266,133 @@ class TestSweepCli:
                      "--policies", "tensorflow", "--chunk", "2",
                      "--top", "3"]) == 0
         assert "evaluated in" in capsys.readouterr().out
+
+
+class TestStreamAtomicity:
+    def test_failure_leaves_preexisting_outputs_untouched(
+            self, tmp_path, monkeypatch):
+        import repro.core.sweep as sweep_mod
+
+        grid = small_grid()
+        csv_p, json_p = tmp_path / "out.csv", tmp_path / "out.json"
+        csv_p.write_text("sentinel-csv")
+        json_p.write_text("sentinel-json")
+        real = sweep_mod.iter_tables
+
+        def dies_at_chunk_2(*args, **kw):
+            it = real(*args, **kw)
+            yield next(it)
+            raise RuntimeError("worker killed at chunk 2")
+
+        monkeypatch.setattr(sweep_mod, "iter_tables", dies_at_chunk_2)
+        with pytest.raises(RuntimeError, match="chunk 2"):
+            stream(grid, csv_path=csv_p, json_path=json_p, chunk=5)
+        # the half-written pass must not be visible: old bytes intact,
+        # no temp debris
+        assert csv_p.read_text() == "sentinel-csv"
+        assert json_p.read_text() == "sentinel-json"
+        assert sorted(p.name for p in tmp_path.iterdir()) == \
+            ["out.csv", "out.json"]
+
+    def test_success_replaces_stale_output_atomically(self, tmp_path):
+        grid = small_grid()
+        path = tmp_path / "out.json"
+        path.write_text("stale")
+        stream(grid, json_path=path, chunk=5)
+        assert json.loads(path.read_text())["n_scenarios"] == len(grid)
+        assert not (tmp_path / "out.json.tmp").exists()
+
+
+class TestCrashTolerance:
+    def test_broken_process_pool_evicted_and_rebuilt(self):
+        import os
+        import signal
+
+        from concurrent.futures import BrokenExecutor
+        from repro.core import parallel as par
+
+        ex = par._get_pool("process", 2)
+        assert ex.submit(os.getpid).result() > 0     # spin workers up
+        for proc in list(ex._processes.values()):
+            os.kill(proc.pid, signal.SIGKILL)
+        with pytest.raises(BrokenExecutor):
+            ex.submit(os.getpid).result()
+        fresh = par._get_pool("process", 2)
+        assert fresh is not ex
+        assert ("process", 2) in par._POOLS
+        assert fresh.submit(os.getpid).result() > 0
+
+    def test_chaos_sigkill_worker_mid_sweep_bit_identical(self):
+        import os
+        import signal
+
+        from repro.core import parallel as par
+
+        grid = small_grid()
+        serial = sweep(grid)
+        gen = parallel_tables(grid, jobs=2, chunk=1, pool="process")
+        tables = [next(gen)]                         # sweep is in flight
+        victim = next(iter(
+            par._POOLS[("process", 2)]._processes.values()))
+        os.kill(victim.pid, signal.SIGKILL)
+        tables.extend(gen)
+        assert_tables_identical(serial.columns, concat_tables(tables))
+
+    def test_span_retried_on_fresh_pool_is_bit_identical(
+            self, monkeypatch):
+        from concurrent.futures import BrokenExecutor
+        from repro.core import parallel as par
+
+        calls = {"n": 0}
+        real = par._eval_span
+
+        def flaky(grid, lo, hi, warm, seed=0):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise BrokenExecutor("worker died")
+            return real(grid, lo, hi, warm, seed)
+
+        monkeypatch.setattr(par, "_eval_span", flaky)
+        monkeypatch.setattr(par, "RETRY_BACKOFF_S", 0.0)
+        grid = small_grid()
+        serial = sweep(grid)
+        got = concat_tables(list(parallel_tables(
+            grid, jobs=2, chunk=1, pool="thread")))
+        assert_tables_identical(serial.columns, got)
+        assert calls["n"] > len(span_plan(len(grid), 2, 1))  # retried
+
+    def test_rescue_span_names_poison_flat_index(self, monkeypatch):
+        from repro.core import parallel as par
+
+        grid = small_grid()
+        real = par._eval_span
+
+        def bomb(grid, lo, hi, warm, seed=0):
+            if lo <= 5 < hi:
+                raise ValueError("boom")
+            return real(grid, lo, hi, warm, seed)
+
+        monkeypatch.setattr(par, "_eval_span", bomb)
+        with pytest.raises(RuntimeError,
+                           match=r"flat index 5 of poison span \[0, 8\)"):
+            par._rescue_span(grid, 0, 8, 6, 0)
+        # a poison-free span rescues whole, bit-identical to direct eval
+        monkeypatch.setattr(par, "_eval_span", real)
+        assert_tables_identical(par._rescue_span(grid, 0, 8, 6, 0),
+                                real(grid, 0, 8, 6, 0))
+
+    def test_external_executor_is_never_rebuilt(self, monkeypatch):
+        from concurrent.futures import BrokenExecutor, ThreadPoolExecutor
+        from repro.core import parallel as par
+
+        def always_broken(*args, **kw):
+            raise BrokenExecutor("worker died")
+
+        monkeypatch.setattr(par, "_eval_span", always_broken)
+        with ThreadPoolExecutor(max_workers=2) as ex:
+            with pytest.raises(BrokenExecutor):
+                list(parallel_tables(small_grid(), jobs=2, chunk=1,
+                                     pool=ex))
 
 
 class TestSweepResultConstruction:
