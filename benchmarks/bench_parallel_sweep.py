@@ -77,11 +77,46 @@ def run(smoke: bool = False, json_path: str = "BENCH_parallel.json") -> dict:
         row(f"parallel_sweep_jobs{jobs}", r["elapsed_s"] * 1e6,
             f"{r['scenarios_per_sec']:.0f} scenarios/s "
             f"({r['scaling_vs_serial']:.2f}x serial, bit-identical)")
+    report["cold_start"] = _cold_start(grid)
+    cs = report["cold_start"]
+    row("parallel_sweep_cold_first", cs["cold_first_sweep_s"] * 1e6,
+        f"first sweep(jobs=2) on a cold pool")
+    row("parallel_sweep_warmed_first", cs["warmed_first_sweep_s"] * 1e6,
+        f"after warm_pool ({cs['first_sweep_speedup']:.2f}x cold; "
+        f"warm_pool itself {cs['warm_pool_s'] * 1e3:.0f} ms)")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=2)
         print(f"# wrote {json_path}", flush=True)
     return report
+
+
+def _cold_start(grid) -> dict:
+    """Cold-span overhead: the first ``sweep(jobs=2)`` pays pool spawn,
+    worker interpreter start and (pre-initializer) lazy imports +
+    workload-table builds inside every worker.  The worker initializer
+    now pre-imports the kernel modules and pre-resolves the built-in
+    tables, and :func:`repro.core.parallel.warm_pool` forces all
+    workers through it up front — so a warmed pool's first sweep is
+    pure span execution."""
+    from repro.core import parallel
+
+    parallel._shutdown_pools()
+    t0 = time.perf_counter()
+    sweep(grid, jobs=2)
+    cold = time.perf_counter() - t0
+
+    parallel._shutdown_pools()
+    t0 = time.perf_counter()
+    parallel.warm_pool("process", jobs=2)
+    warm_cost = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sweep(grid, jobs=2)
+    warmed = time.perf_counter() - t0
+    return {"cold_first_sweep_s": cold,
+            "warm_pool_s": warm_cost,
+            "warmed_first_sweep_s": warmed,
+            "first_sweep_speedup": cold / warmed if warmed else 0.0}
 
 
 def main(argv=None) -> int:

@@ -11,7 +11,7 @@ import sys
 import traceback
 
 SUITES = ("fig2", "fig3", "fig4", "table6", "kernels", "roofline", "sweep",
-          "parallel", "calibration")
+          "parallel", "serve", "calibration")
 
 
 def main(argv=None) -> int:
@@ -43,6 +43,8 @@ def main(argv=None) -> int:
                 from benchmarks.bench_sweep_throughput import run
             elif name == "parallel":
                 from benchmarks.bench_parallel_sweep import run
+            elif name == "serve":
+                from benchmarks.bench_serve import run
             elif name == "calibration":
                 from benchmarks.bench_model_vs_measured import run
             run()

@@ -1065,6 +1065,20 @@ def grid_evaluator(grid: ScenarioGrid) -> GridEvaluator:
     return ev
 
 
+def evaluator_cached(grid: ScenarioGrid) -> bool:
+    """True when :func:`grid_evaluator` would hit the structure memo —
+    a pure probe (nothing is built, no entry is added), which is how
+    the sweep service (:mod:`repro.core.service`) accounts cache
+    hit/miss rates without perturbing the cache it is measuring."""
+    try:
+        tables = tuple(resolve_workload(w) for w in grid.workloads)
+        key = (grid, tuple(id(t) for t in tables))
+        hash(key)
+    except (TypeError, ValueError):
+        return False
+    return key in _EVALUATOR_MEMO
+
+
 # ----------------------------------------------------------------------
 # Scenario-list front end (arbitrary iterables, already validated).
 # ----------------------------------------------------------------------

@@ -528,22 +528,44 @@ def jax_grid_evaluator(grid: ScenarioGrid, *, mesh=None) -> JaxGridEvaluator:
     return jev
 
 
+def jax_evaluator_cached(grid: ScenarioGrid) -> bool:
+    """True when :func:`jax_grid_evaluator` would hit the structure
+    memo — the jax twin of :func:`repro.core.batched.evaluator_cached`
+    (a pure probe; the sweep service's cache-hit accounting)."""
+    try:
+        from repro.core.workloads import resolve_workload
+        tables = tuple(resolve_workload(w) for w in grid.workloads)
+        key = (grid, tuple(id(t) for t in tables))
+        hash(key)
+    except (TypeError, ValueError):
+        return False
+    return key in _JAX_MEMO
+
+
 # ----------------------------------------------------------------------
-# Scenario-list front end — jax twin of batched.eval_scenarios.
+# Scenario-list front end — jax twin of batched.eval_scenarios_table.
 # ----------------------------------------------------------------------
-def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario],
-                       seed: int = 0) -> list[dict]:
-    """Batched rows (input order) for a list of batched-path-eligible
-    scenarios, evaluated by the fused jit kernel with the identity
-    scenario -> kernel-point map; het/straggler structure comes from
-    the shared :func:`repro.core.batched.scenario_het_axes` pass and
-    the straggler Monte Carlo tails from the shared host-side pass,
-    exactly as on the grid path.  Raises ``ValueError`` (via
-    :func:`repro.core.batched.scenario_axes`) if any scenario's policy
-    has neither a closed nor a bucket-timeline form."""
+def eval_scenarios_table_jax(
+        scenarios: Sequence[Scenario] | Iterable[Scenario],
+        seed: int = 0) -> dict[str, np.ndarray]:
+    """Columnar result table (input order) for a list of
+    batched-path-eligible scenarios, evaluated by the fused jit kernel
+    with the identity scenario -> kernel-point map; het/straggler
+    structure comes from the shared
+    :func:`repro.core.batched.scenario_het_axes` pass and the straggler
+    Monte Carlo tails from the shared host-side pass, exactly as on the
+    grid path — which is what makes a *concatenation* of several
+    queries' scenario lists bit-identical, column for column, to
+    sweeping each query's grid directly (the sweep service's coalescer
+    contract, pinned by ``tests/test_service.py``).  Raises
+    ``ValueError`` (via :func:`repro.core.batched.scenario_axes`) if
+    any scenario's policy has neither a closed nor a bucket-timeline
+    form."""
+    from repro.core.resulttable import empty_table
+
     scenarios = list(scenarios)
     if not scenarios:
-        return []
+        return empty_table()
     wax, cax, pax, widx, cidx, polidx, coll, n, batch = \
         batched.scenario_axes(scenarios)
     (hks, wtab, tmul, bwmul, latmul, st_specs, stidx,
@@ -569,8 +591,15 @@ def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario],
                             stidx, cols, seed, synck=synck,
                             ft_specs=ft_specs, fidx=fidx)
     cols["method_code"] = pax.tier[polidx]
-    return rows_from_table(batched.select_to_columns(
-        cols, batched.scenario_labels(scenarios)))
+    return batched.select_to_columns(cols,
+                                     batched.scenario_labels(scenarios))
+
+
+def eval_scenarios_jax(scenarios: Sequence[Scenario] | Iterable[Scenario],
+                       seed: int = 0) -> list[dict]:
+    """Batched rows (input order) for a scenario list — the per-row
+    view of :func:`eval_scenarios_table_jax`."""
+    return rows_from_table(eval_scenarios_table_jax(scenarios, seed=seed))
 
 
 # ----------------------------------------------------------------------

@@ -94,9 +94,37 @@ def span_plan(n: int, jobs: int, chunk: int) -> list[tuple[int, int]]:
     return [(lo, min(lo + span, n)) for lo in range(0, n, span)]
 
 
-def _init_worker(src_path: str) -> None:
+#: Workload schemes whose tables every spawned worker pre-resolves in
+#: its initializer: the built-in Table-IV CNN tables — the workloads of
+#: the default and frontier grids, cheap to build and file-free.
+#: (``trace:``/``llm:``/``jax:`` tables keep resolving lazily on first
+#: use; preloading them would mean file I/O and archcost slicing for
+#: sweeps that may never touch them.)
+PRELOAD_SCHEMES = ("cnn",)
+
+
+def _init_worker(src_path: str, preload: bool = True) -> None:
+    """Spawned-worker initializer: make ``repro`` importable, then
+    pre-pay the preparation a cold span would otherwise pay inside its
+    first evaluation — import the evaluation stack (sweep engine,
+    batched kernels, workload registry) and resolve the built-in
+    workload tables (:data:`PRELOAD_SCHEMES`).  Preloading is
+    opportunistic: any failure leaves the worker lazy, exactly as
+    before."""
     if src_path not in sys.path:
         sys.path.insert(0, src_path)
+    if not preload:
+        return
+    try:
+        from repro.core import batched, sweep  # noqa: F401
+        from repro.core.workloads import WORKLOAD_PROVIDERS, resolve_workload
+
+        for scheme in PRELOAD_SCHEMES:
+            provider = WORKLOAD_PROVIDERS.get(scheme)
+            for name in provider.names() if provider else ():
+                resolve_workload(f"{scheme}:{name}")
+    except Exception:               # pragma: no cover - best effort
+        pass
 
 
 def _eval_span(grid: ScenarioGrid, lo: int, hi: int,
@@ -169,6 +197,25 @@ def _get_pool(kind: str, jobs: int) -> Executor:
             pool = ThreadPoolExecutor(max_workers=jobs)
         _POOLS[key] = pool
     return pool
+
+
+def warm_pool(kind: str = "process", jobs: int = 2) -> None:
+    """Build (or fetch) the cached pool for ``(kind, jobs)`` and block
+    until every worker has spawned and run its initializer — the
+    pre-import/pre-resolve of :func:`_init_worker` included — so the
+    *first* ``sweep(jobs=N)`` pays no per-worker preparation inside its
+    spans.  The sweep server calls this at startup; benchmarks call it
+    to separate cold-start cost from steady-state throughput.
+
+    One short parked task per worker forces the executor's lazy spawn
+    to reach all ``jobs`` processes (tasks that return instantly would
+    all land on the first worker)."""
+    jobs = resolve_jobs(jobs)
+    if jobs <= 1:
+        return
+    ex = _get_pool(kind, jobs)
+    for f in [ex.submit(time.sleep, 0.05) for _ in range(jobs)]:
+        f.result()
 
 
 @atexit.register

@@ -97,6 +97,14 @@ def table_len(table: dict) -> int:
     return len(table["workload"])
 
 
+def slice_table(table: dict, lo: int, hi: int) -> dict[str, np.ndarray]:
+    """Row slice ``[lo, hi)`` of a table, as column **views** (NumPy
+    basic slicing — no bytes copied): how the sweep service
+    de-multiplexes one coalesced kernel table back into per-query
+    results."""
+    return {k: table[k][lo:hi] for k in COLUMNS}
+
+
 def rows_from_table(table: dict,
                     indices: np.ndarray | None = None) -> list[dict]:
     """Tidy row dicts from a table — the compat view.  ``indices``

@@ -330,6 +330,103 @@ FRONTIER_POLICIES = ("naive", "cntk", "mxnet", "tensorflow", "caffe-mpi",
                      "bucketed-100mb", "priority")
 
 
+#: Named base grids a declarative spec (or the CLI's ``--grid`` flag)
+#: starts from — populated after the factory definitions below.
+BASE_GRIDS: dict = {}
+
+#: Axis keys :func:`grid_from_spec` understands besides ``"grid"`` —
+#: the wire vocabulary shared by the sweep CLI's flags and the sweep
+#: service's query documents.
+GRID_SPEC_KEYS = ("workloads", "clusters", "workers", "policies",
+                  "collectives", "interconnects", "het", "stragglers",
+                  "sync_k", "faults", "batch_per_gpu")
+
+
+def _spec_values(value, key: str) -> list:
+    """Axis values from a spec entry: a JSON list or a comma-separated
+    string (the CLI's flag format), never empty — an empty axis would
+    make a zero-scenario grid, which no caller ever means."""
+    if isinstance(value, str):
+        vals = [t.strip() for t in value.split(",") if t.strip()]
+    elif isinstance(value, (list, tuple)):
+        vals = list(value)
+    else:
+        raise ValueError(
+            f"{key} must be a list or a comma-separated string, "
+            f"got {value!r}")
+    if not vals:
+        raise ValueError(f"{key} must have at least one value "
+                         f"(an empty axis makes a zero-scenario grid)")
+    return vals
+
+
+def _spec_synck(k):
+    validate_sync_k(k)
+    return None if k in (None, "none", 0, "0") else int(k)
+
+
+def grid_from_spec(spec: dict) -> ScenarioGrid:
+    """A validated :class:`ScenarioGrid` from a declarative spec dict —
+    the **one** parser behind both front doors: the sweep CLI's axis
+    flags (:func:`repro.launch.sweep.grid_from_args`) and the sweep
+    service's JSON query documents
+    (:func:`repro.core.service.parse_query`), so a spec the CLI exits 2
+    on is exactly one the server rejects with a structured error.
+
+    Keys: ``"grid"`` names a base grid (:data:`BASE_GRIDS`, default
+    ``"default"``); each :data:`GRID_SPEC_KEYS` entry overrides one
+    axis (values: JSON lists or comma-separated strings).  ``"none"``
+    spells the null value on the nullable axes (het / stragglers /
+    sync_k / faults), ``"default"`` the cluster-default interconnect.
+    Unknown keys and invalid axis values raise ``ValueError`` naming
+    the alternatives; the returned grid has passed ``validate_axes()``.
+    """
+    if not isinstance(spec, dict):
+        raise ValueError(f"grid spec must be a mapping (JSON object), "
+                         f"got {type(spec).__name__}")
+    unknown = set(spec) - set(GRID_SPEC_KEYS) - {"grid"}
+    if unknown:
+        raise ValueError(
+            f"unknown grid-spec keys {sorted(unknown)}; known keys: "
+            f"grid, {', '.join(GRID_SPEC_KEYS)}")
+    name = spec.get("grid", "default")
+    base_fn = BASE_GRIDS.get(name) if isinstance(name, str) else None
+    if base_fn is None:
+        raise ValueError(f"unknown base grid {name!r}; "
+                         f"one of {sorted(BASE_GRIDS)}")
+    axes: dict = {}
+    for key, axis, conv in (
+            ("workloads", "workloads", str),
+            ("clusters", "clusters", str),
+            ("workers", "worker_counts", int),
+            ("policies", "policies", str),
+            ("collectives", "collectives", str),
+            ("interconnects", "interconnects",
+             lambda i: None if i in (None, "default") else str(i)),
+            ("het", "het_profiles",
+             lambda h: None if h in (None, "none") else str(h)),
+            ("stragglers", "stragglers",
+             lambda s: None if s in (None, "none") else str(s)),
+            ("sync_k", "sync_ks", _spec_synck),
+            ("faults", "faults",
+             lambda f: None if f in (None, "none") else str(f))):
+        if spec.get(key) is None:
+            continue
+        try:
+            axes[axis] = tuple(conv(v) for v in _spec_values(spec[key], key))
+        except ValueError as e:
+            raise ValueError(f"bad {key} value: {e}") from None
+    if spec.get("batch_per_gpu") is not None:
+        try:
+            axes["batch_per_gpu"] = int(spec["batch_per_gpu"])
+        except (TypeError, ValueError):
+            raise ValueError(f"batch_per_gpu must be an integer, "
+                             f"got {spec['batch_per_gpu']!r}") from None
+    grid = dataclasses.replace(base_fn(), **axes)
+    grid.validate_axes()
+    return grid
+
+
 def frontier_grid() -> ScenarioGrid:
     """The §VII design-space study at interactive scale: every paper CNN
     on both paper clusters, six cluster sizes, all three collectives,
@@ -354,3 +451,7 @@ def frontier_grid() -> ScenarioGrid:
         collectives=COLLECTIVE_ALGORITHMS,
         interconnects=interconnects,
     )
+
+
+BASE_GRIDS.update(default=default_grid, mixed=mixed_grid,
+                  frontier=frontier_grid)

@@ -400,11 +400,11 @@ class SweepResult:
             w.writerow(COLUMNS)
             w.writerows(zip(*(self.columns[k].tolist() for k in COLUMNS)))
 
-    def to_json(self, path=None, indent: int | None = 2) -> str:
-        """The full result as a JSON document (and optionally write it
-        to ``path``): sweep metadata plus the tidy rows."""
-        doc = {
-            "columns": list(COLUMNS),
+    def meta(self) -> dict:
+        """Sweep metadata in :data:`RESULT_META_KEYS` order — the
+        :meth:`to_json` document minus ``columns``/``rows``, and the
+        base of the sweep service's per-query trailer."""
+        return {
             "n_scenarios": len(self),
             "elapsed_s": self.elapsed_s,
             "scenarios_per_sec": self.scenarios_per_sec,
@@ -412,8 +412,12 @@ class SweepResult:
             "n_timeline": self.n_timeline,
             "n_simulated": self.n_simulated,
             "backend": self.backend,
-            "rows": self.rows,
         }
+
+    def to_json(self, path=None, indent: int | None = 2) -> str:
+        """The full result as a JSON document (and optionally write it
+        to ``path``): sweep metadata plus the tidy rows."""
+        doc = {"columns": list(COLUMNS), **self.meta(), "rows": self.rows}
         text = json.dumps(doc, indent=indent)
         if path is not None:
             with open(path, "w") as f:
@@ -480,6 +484,15 @@ DEFAULT_CHUNK = 8192
 #: accept: the NumPy engine (default, and the agreement oracle) and the
 #: fused jit jax kernel.
 BACKENDS = ("numpy", "jax")
+
+#: Metadata keys every result surface shares — the
+#: :meth:`SweepResult.to_json` document minus ``columns``/``rows``,
+#: the :func:`stream` JSON trailer and return value, and the sweep
+#: service's per-query trailer (:mod:`repro.core.service`); the parity
+#: is pinned by tests, so a key added here propagates everywhere or
+#: fails loudly.
+RESULT_META_KEYS = ("n_scenarios", "elapsed_s", "scenarios_per_sec",
+                    "n_analytical", "n_timeline", "n_simulated", "backend")
 
 
 def _check_backend(backend: str, *, batched: bool,
@@ -780,14 +793,16 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
         elapsed = time.perf_counter() - t0
         n = n_fast + n_tl + n_slow
         rate = n / elapsed if elapsed else 0.0
+        meta = {"n_scenarios": n, "elapsed_s": elapsed,
+                "scenarios_per_sec": rate, "n_analytical": n_fast,
+                "n_timeline": n_tl, "n_simulated": n_slow,
+                "backend": backend}
         if json_file is not None:
+            # trailer keys == RESULT_META_KEYS == the to_json key set
+            # minus columns/rows (parity pinned by the tests)
             json_file.write(
-                '\n  ],\n  "n_scenarios": %d,\n  "elapsed_s": %s,\n'
-                '  "scenarios_per_sec": %s,\n'
-                '  "n_analytical": %d,\n  "n_timeline": %d,\n'
-                '  "n_simulated": %d,\n  "backend": %s\n}\n'
-                % (n, json.dumps(elapsed), json.dumps(rate),
-                   n_fast, n_tl, n_slow, json.dumps(backend)))
+                "\n  ]," + ",".join(f'\n  "{k}": {json.dumps(meta[k])}'
+                                    for k in RESULT_META_KEYS) + "\n}\n")
         ok = True
     finally:
         for f in (csv_file, json_file):
@@ -802,10 +817,7 @@ def stream(grid: ScenarioGrid | Iterable[Scenario], *,
             for tmp in (csv_tmp, json_tmp):
                 if tmp is not None and os.path.exists(tmp):
                     os.unlink(tmp)
-    return {"n_scenarios": n, "elapsed_s": elapsed,
-            "scenarios_per_sec": rate,
-            "n_analytical": n_fast, "n_timeline": n_tl,
-            "n_simulated": n_slow, "backend": backend}
+    return meta
 
 
 def stream_csv(grid: ScenarioGrid | Iterable[Scenario], path,

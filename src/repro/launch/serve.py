@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
         --reduced --batch 4 --prompt-len 32 --gen 32
+
+Namespace note — this module serves **model inference** (token
+generation over the transformer models).  The persistent **scenario
+sweep** server — what-if queries against the S-SGD DAG model, with
+hot caches and query coalescing — is its sibling
+:mod:`repro.launch.serve_sweep`.
 """
 from __future__ import annotations
 

@@ -38,11 +38,10 @@ to write CSV/JSON incrementally instead of buffering every row.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 
 from repro.core.hardware import COLLECTIVE_ALGORITHMS, INTERCONNECT_PRESETS
-from repro.core.scenarios import default_grid, frontier_grid, mixed_grid
+from repro.core.scenarios import grid_from_spec
 from repro.core.sweep import COLUMNS, DEFAULT_CHUNK, stream, sweep
 from repro.core.workloads import known_workloads
 
@@ -153,39 +152,29 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def grid_from_args(args: argparse.Namespace):
-    """The chosen base grid with any CLI-provided axes substituted in
-    (unknown axis names are impossible: argparse defines the flags)."""
-    base = {"default": default_grid, "mixed": mixed_grid,
-            "frontier": frontier_grid}[args.grid]()
-    axes: dict = {}
-    if args.workloads:
-        axes["workloads"] = tuple(args.workloads)
-    if args.clusters:
-        axes["clusters"] = tuple(args.clusters)
-    if args.workers:
-        axes["worker_counts"] = tuple(int(w) for w in args.workers)
-    if args.policies:
-        axes["policies"] = tuple(args.policies)
-    if args.collectives:
-        axes["collectives"] = tuple(args.collectives)
-    if args.interconnects:
-        axes["interconnects"] = tuple(
-            None if i == "default" else i for i in args.interconnects)
-    if args.het:
-        axes["het_profiles"] = tuple(
-            None if h == "none" else h for h in args.het)
-    if args.stragglers:
-        axes["stragglers"] = tuple(
-            None if s == "none" else s for s in args.stragglers)
-    if args.sync_k:
-        axes["sync_ks"] = tuple(
-            None if k == "none" else int(k) for k in args.sync_k)
-    if args.faults:
-        axes["faults"] = tuple(
-            None if f == "none" else f for f in args.faults)
+    """The chosen base grid with any CLI-provided axes substituted in.
+
+    Delegates to :func:`repro.core.scenarios.grid_from_spec` — the
+    CLI's flags and the sweep service's JSON query documents
+    (:mod:`repro.core.service`) share one axis vocabulary and one
+    parser, so a spec this CLI exits 2 on is exactly one the server
+    rejects with a structured error, and vice versa."""
+    spec: dict = {"grid": args.grid}
+    for key, val in (("workloads", args.workloads),
+                     ("clusters", args.clusters),
+                     ("workers", args.workers),
+                     ("policies", args.policies),
+                     ("collectives", args.collectives),
+                     ("interconnects", args.interconnects),
+                     ("het", args.het),
+                     ("stragglers", args.stragglers),
+                     ("sync_k", args.sync_k),
+                     ("faults", args.faults)):
+        if val:
+            spec[key] = val
     if args.batch_per_gpu is not None:
-        axes["batch_per_gpu"] = args.batch_per_gpu
-    return dataclasses.replace(base, **axes)
+        spec["batch_per_gpu"] = args.batch_per_gpu
+    return grid_from_spec(spec)
 
 
 def main(argv: list[str] | None = None) -> int:
